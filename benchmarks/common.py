@@ -1,0 +1,83 @@
+"""Shared benchmark scaffolding.
+
+Output convention (benchmarks/run.py): CSV rows ``name,us_per_call,derived``.
+``REPRO_BENCH_EPISODES`` scales RL search effort (default 12 — CI-friendly;
+the paper's Appendix-H setting is 100.  Results monotonically improve with
+episodes; the table structure is identical).
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Callable, Dict, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import (HSDAG, HSDAGConfig, extract_features, FeatureConfig,
+                        paper_platform, simulate)
+from repro.core.baselines import (BaselineConfig, PlacetoBaseline,
+                                  RNNBaseline, cpu_only, gpu_only,
+                                  openvino_auto)
+from repro.graphs import PAPER_BENCHMARKS
+
+EPISODES = int(os.environ.get("REPRO_BENCH_EPISODES", "12"))
+UPDATE_TIMESTEP = int(os.environ.get("REPRO_BENCH_TIMESTEP", "10"))
+
+
+def emit(name: str, us_per_call: float, derived: str) -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def reward_fn_for(graph, platform=None):
+    platform = platform or paper_platform()
+
+    def reward_fn(placement):
+        res = simulate(graph, placement, platform)
+        return res.reward, res.latency
+
+    return reward_fn, platform
+
+
+def run_hsdag(graph, arrays=None, feature_cfg: FeatureConfig = None,
+              episodes: int = None, seed: int = 0,
+              platform=None) -> Tuple[np.ndarray, float, float]:
+    """→ (placement, latency_s, wall_s)."""
+    fc = feature_cfg or FeatureConfig(d_pos=16)
+    arrays = arrays if arrays is not None else extract_features(graph, fc)
+    reward_fn, _ = reward_fn_for(graph, platform)
+    agent = HSDAG(HSDAGConfig(
+        num_devices=2, max_episodes=episodes or EPISODES,
+        update_timestep=UPDATE_TIMESTEP, use_baseline=True,
+        normalize_weights=True, seed=seed))
+    res = agent.search(graph, arrays, reward_fn,
+                       rng=jax.random.PRNGKey(seed))
+    return res.best_placement, res.best_latency, res.wall_time_s
+
+
+def run_placeto(graph, episodes: int = None, seed: int = 0):
+    arrays = extract_features(graph, FeatureConfig(d_pos=16))
+    reward_fn, _ = reward_fn_for(graph)
+    res = PlacetoBaseline(BaselineConfig(
+        num_devices=2, episodes=episodes or EPISODES,
+        samples_per_episode=UPDATE_TIMESTEP, seed=seed)).search(
+        graph, arrays, reward_fn, rng=jax.random.PRNGKey(seed))
+    return res.best_placement, res.best_latency, res.wall_time_s
+
+
+def run_rnn(graph, episodes: int = None, seed: int = 0):
+    arrays = extract_features(graph, FeatureConfig(d_pos=16))
+    reward_fn, _ = reward_fn_for(graph)
+    res = RNNBaseline(BaselineConfig(
+        num_devices=2, episodes=episodes or EPISODES,
+        samples_per_episode=UPDATE_TIMESTEP, seed=seed)).search(
+        graph, arrays, reward_fn, rng=jax.random.PRNGKey(seed))
+    return res.best_placement, res.best_latency, res.wall_time_s
+
+
+def single_device_latencies(graph) -> Dict[str, float]:
+    plat = paper_platform()
+    return {
+        "cpu_only": simulate(graph, cpu_only(graph), plat).latency,
+        "gpu_only": simulate(graph, gpu_only(graph), plat).latency,
+    }

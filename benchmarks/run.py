@@ -1,0 +1,49 @@
+"""Benchmark driver — one function per paper table.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Effort is scaled by
+``REPRO_BENCH_EPISODES`` (default 12; the paper uses 100 — see Appendix H).
+Roofline rows are appended from results/dryrun when present.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+import table1_graph_stats
+import table2_placement
+import table3_ablation
+import table4_downstream
+import table5_complexity
+
+
+def _roofline_rows() -> None:
+    from repro.launch.roofline import analyze_dir
+    from common import emit
+    dry = os.environ.get("REPRO_DRYRUN_DIR", "results/dryrun")
+    if not os.path.isdir(dry):
+        return
+    try:
+        rows = analyze_dir(dry, mesh="16x16")
+    except Exception:
+        return
+    for r in rows:
+        emit(f"roofline_{r['arch']}_{r['shape']}",
+             r["bound_s"] * 1e6,
+             f"dominant={r['dominant']};useful={r['useful_ratio']:.3f};"
+             f"roofline_frac={100*r['roofline_fraction']:.1f}%")
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    table1_graph_stats.main()
+    table2_placement.main()
+    table3_ablation.main()
+    table4_downstream.main()
+    table5_complexity.main()
+    _roofline_rows()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Paper Table 1: benchmark computation-graph statistics (|V|, |E|, d̄)."""
+from __future__ import annotations
+
+import time
+
+from repro.graphs import PAPER_BENCHMARKS
+
+from common import emit
+
+PAPER = {"inception_v3": (728, 764, 1.05),
+         "resnet50": (396, 411, 1.04),
+         "bert_base": (1009, 1071, 1.06)}
+
+
+def main() -> None:
+    for name, builder in PAPER_BENCHMARKS.items():
+        t0 = time.perf_counter()
+        g = builder()
+        build_us = (time.perf_counter() - t0) * 1e6
+        pv, pe, pd = PAPER[name]
+        emit(f"table1_{name}", build_us,
+             f"|V|={g.num_nodes}(paper {pv});|E|={g.num_edges}(paper {pe});"
+             f"dbar={g.avg_degree():.3f}(paper {pd});"
+             f"GFLOP={g.flops().sum()/1e9:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Paper Table 2: device-placement quality — HSDAG vs baselines.
+
+Latency environment: the calibrated cost model (DESIGN.md §3.1) standing in
+for the paper's OpenVINO measurements.  Speedup % is vs CPU-only, as in the
+paper.  Paper numbers for reference: HSDAG speedups 17.9 / 52.1 / 58.2 % on
+Inception-V3 / ResNet-50 / BERT.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import paper_platform, simulate
+from repro.core.baselines import cpu_only, gpu_only, openvino_auto
+from repro.graphs import PAPER_BENCHMARKS
+
+from common import emit, run_hsdag, run_placeto, run_rnn
+
+PAPER_SPEEDUP = {
+    "inception_v3": {"gpu_only": 6.25, "placeto": 9.38, "rnn": 0.0,
+                     "hsdag": 17.9},
+    "resnet50": {"gpu_only": 51.2, "placeto": 41.8, "rnn": 45.3,
+                 "hsdag": 52.1},
+    "bert_base": {"gpu_only": 56.5, "placeto": -2.04, "rnn": float("nan"),
+                  "hsdag": 58.2},
+}
+
+
+def main() -> None:
+    plat = paper_platform()
+    for name, builder in PAPER_BENCHMARKS.items():
+        g = builder()
+        cpu_lat = simulate(g, cpu_only(g), plat).latency
+
+        def row(method: str, lat: float, wall: float = 0.0):
+            sp = 100.0 * (cpu_lat - lat) / cpu_lat
+            ref = PAPER_SPEEDUP[name].get(method)
+            ref_s = f";paper={ref:.1f}%" if ref is not None and ref == ref \
+                else ""
+            emit(f"table2_{name}_{method}", lat * 1e6,
+                 f"speedup={sp:.1f}%{ref_s}")
+
+        row("cpu_only", cpu_lat)
+        row("gpu_only", simulate(g, gpu_only(g), plat).latency)
+        for pref, label in ((0, "openvino_cpu"), (1, "openvino_gpu")):
+            p, factor = openvino_auto(g, pref)
+            row(label, simulate(g, p, plat).latency * factor)
+        p, lat, wall = run_placeto(g)
+        row("placeto", lat, wall)
+        p, lat, wall = run_rnn(g)
+        row("rnn", lat, wall)
+        p, lat, wall = run_hsdag(g)
+        row("hsdag", lat, wall)
+
+
+if __name__ == "__main__":
+    main()

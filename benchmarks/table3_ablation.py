@@ -1,0 +1,41 @@
+"""Paper Table 3: feature ablations (w/o output shape, w/o node ID,
+w/o graph structural features)."""
+from __future__ import annotations
+
+from repro.core import FeatureConfig, paper_platform, simulate
+from repro.core.baselines import cpu_only
+from repro.graphs import PAPER_BENCHMARKS
+
+from common import emit, run_hsdag
+
+ABLATIONS = {
+    "original": FeatureConfig(d_pos=16),
+    "no_output_shape": FeatureConfig(d_pos=16, use_output_shape=False),
+    "no_node_id": FeatureConfig(d_pos=16, use_node_id=False),
+    "no_structural": FeatureConfig(d_pos=16, use_structural=False),
+}
+
+PAPER = {  # speedup % rows of Table 3
+    "inception_v3": {"original": 17.9, "no_output_shape": 8.59,
+                     "no_node_id": 8.59, "no_structural": 14.8},
+    "resnet50": {"original": 52.1, "no_output_shape": 52.0,
+                 "no_node_id": 52.0, "no_structural": 52.1},
+    "bert_base": {"original": 58.2, "no_output_shape": 56.4,
+                  "no_node_id": 56.4, "no_structural": 58.2},
+}
+
+
+def main() -> None:
+    plat = paper_platform()
+    for name, builder in PAPER_BENCHMARKS.items():
+        g = builder()
+        cpu_lat = simulate(g, cpu_only(g), plat).latency
+        for abl, fc in ABLATIONS.items():
+            _, lat, _ = run_hsdag(g, feature_cfg=fc)
+            sp = 100.0 * (cpu_lat - lat) / cpu_lat
+            emit(f"table3_{name}_{abl}", lat * 1e6,
+                 f"speedup={sp:.1f}%;paper={PAPER[name][abl]:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""End-to-end training driver with checkpoint/restart fault tolerance.
+
+Trains a ~19M-parameter qwen-family model on the deterministic synthetic
+pipeline for a few hundred steps on CPU; loss drops well below the unigram
+entropy.  Kill it at any point and re-run — it resumes from the latest
+checkpoint and replays the exact same data stream.
+
+    PYTHONPATH=src python examples/train_lm.py [--steps 200] [--ckpt-dir d]
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.data import DataConfig, SyntheticTokens
+from repro.distributed import StragglerWatchdog
+from repro.models import (ModelConfig, TrainState, init_params,
+                          make_train_step)
+from repro.optim import adamw, linear_warmup_cosine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = ModelConfig(name="qwen-mini", n_layers=4, d_model=256, n_heads=8,
+                      n_kv_heads=8, d_ff=1024, vocab_size=32768,
+                      qkv_bias=True, tie_embeddings=True, remat=False,
+                      dtype="float32")
+    print(f"model: {cfg.num_params()/1e6:.1f}M params")
+
+    opt = adamw(linear_warmup_cosine(3e-4, 20, args.steps), b1=0.9,
+                weight_decay=0.01)
+    train_step = jax.jit(make_train_step(cfg, opt))
+    data = SyntheticTokens(DataConfig(vocab_size=cfg.vocab_size,
+                                      seq_len=args.seq,
+                                      global_batch=args.batch, seed=17))
+
+    mgr = CheckpointManager(args.ckpt_dir, keep=2, async_save=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    state = TrainState(params, opt.init(params), jnp.int32(0))
+    start = 0
+    if mgr.latest_step() is not None:
+        start = mgr.latest_step()
+        state = mgr.restore(start, state)
+        print(f"resumed from checkpoint at step {start}")
+
+    watchdog = StragglerWatchdog(threshold=3.0)
+    for step in range(start, args.steps):
+        t0 = time.perf_counter()
+        state, metrics = train_step(state, data.batch(step))
+        dt = time.perf_counter() - t0
+        if watchdog.record(step, dt):
+            print(f"  [watchdog] slow step {step}: {dt:.2f}s")
+        if step % 20 == 0 or step == args.steps - 1:
+            print(f"step {step:4d} loss {float(metrics['loss']):.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f} {dt*1e3:.0f} ms")
+        if (step + 1) % args.ckpt_every == 0:
+            mgr.save(step + 1, state, meta={"loss": float(metrics['loss'])})
+    mgr.wait()
+    print(f"final checkpoint at step {mgr.latest_step()}; "
+          f"straggler events: {len(watchdog.flagged)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""repro — production-grade JAX reproduction of
+
+    "A Structure-Aware Framework for Learning Device Placements on
+     Computation Graphs" (HSDAG, NeurIPS 2024)
+
+plus the multi-pod training/serving substrate it plugs into.
+Subpackages: core (paper algorithm), graphs (benchmark computation graphs),
+models (LM substrate), kernels (Pallas), optim, data, checkpoint,
+distributed, configs, launch.
+"""
+
+__version__ = "1.0.0"

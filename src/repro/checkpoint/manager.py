@@ -1,0 +1,183 @@
+"""Fault-tolerant checkpointing.
+
+Properties needed at 1000-node scale, implemented here:
+
+  * **atomic** — write to ``<dir>.tmp`` then ``os.rename`` (a crashed save
+    can never corrupt the latest checkpoint; a half-written tmp dir is
+    ignored and garbage-collected)
+  * **keep-k** — bounded disk usage, oldest checkpoints pruned
+  * **async** — a background thread serializes, the train loop keeps going
+    (device→host copy happens synchronously, serialization doesn't block)
+  * **resumable** — ``latest_step`` + deterministic data pipeline ⇒ bitwise
+    replay after restart (tested in tests/test_checkpoint.py)
+  * **elastic** — checkpoints store *global* arrays; ``restore`` re-shards
+    onto whatever mesh/sharding the restoring job passes (different device
+    count than the saving job — node-failure recovery path)
+
+Format: one ``.npz`` per checkpoint (pytree flattened with stable key paths)
+plus a small JSON manifest.  On multi-host deployments each host would write
+its address-space shards; on this single-process container the host holds all
+shards, which exercises the same code path.
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+import time
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["CheckpointManager"]
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(jax.tree_util.keystr((p,), simple=True)
+                       for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            # npz has no bf16: widen losslessly; restore casts back via the
+            # target tree's dtype.
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def _unflatten(tree_like, flat: Dict[str, np.ndarray]):
+    paths = jax.tree_util.tree_flatten_with_path(tree_like)[0]
+    leaves = []
+    for path, leaf in paths:
+        key = "/".join(jax.tree_util.keystr((p,), simple=True)
+                       for p in path)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = flat[key]
+        leaves.append(arr)
+    treedef = jax.tree_util.tree_structure(tree_like)
+    return jax.tree_util.tree_unflatten(treedef, leaves)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3,
+                 async_save: bool = False):
+        self.directory = directory
+        self.keep = keep
+        self.async_save = async_save
+        os.makedirs(directory, exist_ok=True)
+        self._gc_tmp()
+        self._q: "queue.Queue" = queue.Queue()
+        self._worker: Optional[threading.Thread] = None
+        self._errors: List[BaseException] = []
+        if async_save:
+            self._worker = threading.Thread(target=self._drain, daemon=True)
+            self._worker.start()
+
+    # ------------------------------------------------------------- internal
+    def _gc_tmp(self) -> None:
+        for name in os.listdir(self.directory):
+            if name.endswith(".tmp"):
+                shutil.rmtree(os.path.join(self.directory, name),
+                              ignore_errors=True)
+
+    def _step_dir(self, step: int) -> str:
+        return os.path.join(self.directory, f"step_{step:010d}")
+
+    def _drain(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            try:
+                self._write(*item)
+            except BaseException as e:   # surfaced on next wait()
+                self._errors.append(e)
+            finally:
+                self._q.task_done()
+
+    def _write(self, step: int, flat: Dict[str, np.ndarray],
+               meta: Dict) -> None:
+        final = self._step_dir(step)
+        tmp = final + ".tmp"
+        os.makedirs(tmp, exist_ok=True)
+        np.savez(os.path.join(tmp, "state.npz"), **flat)
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": step, "time": time.time(), **meta}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._prune()
+
+    def _prune(self) -> None:
+        steps = self.all_steps()
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self._step_dir(s), ignore_errors=True)
+
+    # ---------------------------------------------------------------- API
+    def all_steps(self) -> List[int]:
+        steps = []
+        for name in os.listdir(self.directory):
+            if name.startswith("step_") and not name.endswith(".tmp"):
+                if os.path.exists(os.path.join(self.directory, name,
+                                               "manifest.json")):
+                    steps.append(int(name[5:]))
+        return sorted(steps)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def save(self, step: int, tree: Any, meta: Optional[Dict] = None) -> None:
+        # device→host copy is synchronous (consistent snapshot); file IO is
+        # async when enabled.
+        flat = _flatten(tree)
+        if self.async_save:
+            self._q.put((step, flat, meta or {}))
+        else:
+            self._write(step, flat, meta or {})
+
+    def wait(self) -> None:
+        """Block until queued async saves land; re-raise their errors."""
+        if self.async_save:
+            self._q.join()
+        if self._errors:
+            raise self._errors.pop()
+
+    def restore(self, step: int, tree_like: Any,
+                shardings: Optional[Any] = None) -> Any:
+        """Restore into the structure of ``tree_like``.
+
+        ``shardings``: optional matching tree of ``jax.sharding.Sharding`` —
+        arrays are placed with those shardings (elastic re-shard path).
+        """
+        path = os.path.join(self._step_dir(step), "state.npz")
+        with np.load(path) as data:
+            flat = {k: data[k] for k in data.files}
+        tree = _unflatten(tree_like, flat)
+
+        def place(x, like, sh=None):
+            dtype = like.dtype if hasattr(like, "dtype") else None
+            arr = jnp.asarray(x, dtype)
+            if sh is not None:
+                arr = jax.device_put(arr, sh)
+            return arr
+
+        if shardings is not None:
+            return jax.tree.map(place, tree, tree_like, shardings)
+        return jax.tree.map(lambda x, l: place(x, l), tree, tree_like)
+
+    def manifest(self, step: int) -> Dict:
+        with open(os.path.join(self._step_dir(step), "manifest.json")) as f:
+            return json.load(f)
+
+    def close(self) -> None:
+        if self._worker is not None:
+            self._q.put(None)
+            self._worker.join(timeout=10)
+            self._worker = None

@@ -1,0 +1,7 @@
+"""Architecture configs: 10 assigned archs (+ the paper's own benchmarks
+live in repro.graphs)."""
+from .registry import (ArchSpec, ShapeSpec, SHAPES, all_archs, get,
+                       input_specs, cache_axes_for)
+
+__all__ = ["ArchSpec", "ShapeSpec", "SHAPES", "all_archs", "get",
+           "input_specs", "cache_axes_for"]

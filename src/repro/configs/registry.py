@@ -1,0 +1,145 @@
+"""Architecture registry: the 10 assigned archs × their input shapes.
+
+Each arch module registers an :class:`ArchSpec`:
+  * ``config``       — the exact published configuration
+  * ``smoke_config`` — reduced same-family config for CPU smoke tests
+  * ``rules``        — per-arch logical→mesh overrides (e.g. kv_heads=8 can't
+                       shard over model=16 → replicate; mixtral's 8 experts
+                       shard via TP-on-mlp instead of EP)
+  * ``skip``         — shapes this arch skips, with the reason (long_500k for
+                       pure full-attention archs, per the assignment)
+
+``input_specs(arch, shape)`` returns ShapeDtypeStruct stand-ins for every
+input of the lowered step (train_step for train shapes; serve_step — one new
+token against a seq_len KV cache — for decode shapes; prefill for prefill
+shapes), plus the logical axes used to shard them.  No device allocation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import ModelConfig, abstract_params, init_cache
+
+__all__ = ["ShapeSpec", "ArchSpec", "SHAPES", "register", "get",
+           "all_archs", "input_specs", "cache_axes_for"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str           # "train" | "prefill" | "decode"
+    seq_len: int
+    global_batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchSpec:
+    config: ModelConfig
+    smoke_config: ModelConfig
+    rules: Dict[str, object] = dataclasses.field(default_factory=dict)
+    skip: Dict[str, str] = dataclasses.field(default_factory=dict)
+    source: str = ""
+
+
+_REGISTRY: Dict[str, ArchSpec] = {}
+
+
+def register(arch_id: str, spec: ArchSpec) -> None:
+    _REGISTRY[arch_id] = spec
+
+
+def get(arch_id: str) -> ArchSpec:
+    _load_all()
+    return _REGISTRY[arch_id]
+
+
+def all_archs() -> Tuple[str, ...]:
+    _load_all()
+    return tuple(sorted(_REGISTRY))
+
+
+_LOADED = False
+
+
+def _load_all() -> None:
+    global _LOADED
+    if _LOADED:
+        return
+    from . import (mixtral_8x22b, olmoe_1b_7b, command_r_plus_104b,   # noqa
+                   phi3_mini_3_8b, h2o_danube_1_8b, qwen1_5_0_5b,      # noqa
+                   mamba2_130m, internvl2_76b, jamba_1_5_large_398b,   # noqa
+                   musicgen_medium)                                    # noqa
+    _LOADED = True
+
+
+# ------------------------------------------------------------- input specs
+def cache_axes_for(cfg: ModelConfig) -> list:
+    """Logical axes for the stacked cache pytrees (list per pattern pos)."""
+    from ..models.layers import AttnCache
+    from ..models.ssm import SSMCache
+    axes = []
+    for mixer, _ in cfg.block_pattern:
+        if mixer == "attn":
+            axes.append(AttnCache(
+                k=("layers", "batch", "kv_heads", "cache_seq", "head_dim"),
+                v=("layers", "batch", "kv_heads", "cache_seq", "head_dim"),
+                slot_pos=("layers", "batch", "cache_seq")))
+        else:
+            axes.append(SSMCache(
+                conv=("layers", "batch", None, "qkv"),
+                state=("layers", "batch", "heads", None, "state")))
+    return axes
+
+
+def input_specs(arch_id: str, shape_name: str) -> Dict:
+    """ShapeDtypeStructs + logical axes for one (arch × shape) cell."""
+    return input_specs_for(get(arch_id).config, shape_name)
+
+
+def input_specs_for(cfg: ModelConfig, shape_name: str) -> Dict:
+    """As :func:`input_specs` but for an explicit config (used by the
+    dry-run's reduced-depth cost-extrapolation variants)."""
+    shp = SHAPES[shape_name]
+    b = shp.global_batch
+    out: Dict[str, object] = {}
+    axes: Dict[str, object] = {}
+
+    if shp.kind == "train":
+        s = shp.seq_len
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        axes["tokens"] = ("batch", "act_seq")
+        axes["labels"] = ("batch", "act_seq")
+        if cfg.vision_tokens:
+            out["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.vision_tokens, cfg.d_model), cfg.dtype_)
+            axes["vision_embeds"] = ("batch", None, "act_embed")
+    elif shp.kind == "prefill":
+        s = shp.seq_len
+        out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        axes["tokens"] = ("batch", "act_seq")
+        if cfg.vision_tokens:
+            out["vision_embeds"] = jax.ShapeDtypeStruct(
+                (b, cfg.vision_tokens, cfg.d_model), cfg.dtype_)
+            axes["vision_embeds"] = ("batch", None, "act_embed")
+    else:  # decode: one new token against a seq_len-deep cache
+        out["tokens"] = jax.ShapeDtypeStruct((b, 1), jnp.int32)
+        axes["tokens"] = ("batch", "act_seq")
+        out["caches"] = jax.eval_shape(
+            lambda: init_cache(cfg, b, shp.seq_len))
+        axes["caches"] = cache_axes_for(cfg)
+        out["index"] = jax.ShapeDtypeStruct((), jnp.int32)
+        axes["index"] = ()
+    return {"specs": out, "axes": axes, "shape": shp, "config": cfg}

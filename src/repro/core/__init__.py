@@ -1,0 +1,16 @@
+"""HSDAG core — the paper's contribution as a composable JAX module."""
+from .graph import CompGraph, OpNode, topological_order, colocate_chains
+from .features import (FeatureConfig, GraphArrays, extract_features,
+                       fractal_dimension, positional_encoding)
+from .costmodel import (DeviceSpec, Platform, SimResult, simulate,
+                        paper_platform, tpu_stage_platform, critical_path)
+from .hsdag import HSDAG, HSDAGConfig, SearchResult
+
+__all__ = [
+    "CompGraph", "OpNode", "topological_order", "colocate_chains",
+    "FeatureConfig", "GraphArrays", "extract_features",
+    "fractal_dimension", "positional_encoding",
+    "DeviceSpec", "Platform", "SimResult", "simulate",
+    "paper_platform", "tpu_stage_platform", "critical_path",
+    "HSDAG", "HSDAGConfig", "SearchResult",
+]

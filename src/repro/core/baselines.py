@@ -1,0 +1,280 @@
+"""Baseline placement methods (paper §3.3).
+
+1.  ``cpu_only`` / ``gpu_only`` — whole graph on one device.
+2.  ``openvino_auto`` — the OpenVINO-CPU / OpenVINO-GPU rows: the AUTO plugin
+    runs the preferred device and pays an arbitration overhead (Table 2 shows
+    OpenVINO-X ≈ X-only within 2–15%); modeled as preference placement with a
+    fixed arbitration factor.
+3.  ``PlacetoBaseline`` — encoder-placer: GNN node embeddings → per-node
+    device logits → one-shot sampling, REINFORCE on episode reward
+    (Placeto [1] without its per-node MDP refinement, as reimplemented by the
+    paper's authors).
+4.  ``RNNBaseline`` — grouper-less seq2seq placer of Mirhoseini et al. [22]:
+    LSTM over nodes in topological order with content attention, REINFORCE.
+
+All learned baselines share HSDAG's reward backends so Table 2/5 comparisons
+are apples-to-apples.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..optim import adam, apply_updates
+from .features import GraphArrays
+from .gnn import encoder_apply, encoder_init, mlp_apply, mlp_init
+from .graph import CompGraph
+from .hsdag import SearchResult
+from .reinforce import RunningBaseline
+
+__all__ = ["cpu_only", "gpu_only", "openvino_auto",
+           "PlacetoBaseline", "RNNBaseline"]
+
+
+# --------------------------------------------------------------- heuristics
+def cpu_only(graph: CompGraph) -> np.ndarray:
+    return np.zeros(graph.num_nodes, dtype=np.int64)
+
+
+def gpu_only(graph: CompGraph) -> np.ndarray:
+    return np.ones(graph.num_nodes, dtype=np.int64)
+
+
+def openvino_auto(graph: CompGraph, preference: int,
+                  arbitration_factor: float = 1.08
+                  ) -> Tuple[np.ndarray, float]:
+    """AUTO-plugin-style baseline: preferred device + arbitration overhead.
+
+    Returns (placement, latency multiplier to apply to the measured latency).
+    """
+    placement = np.full(graph.num_nodes, preference, dtype=np.int64)
+    return placement, arbitration_factor
+
+
+# ------------------------------------------------------------------ Placeto
+@dataclasses.dataclass(frozen=True)
+class BaselineConfig:
+    num_devices: int = 2
+    hidden: int = 128
+    learning_rate: float = 1e-4
+    episodes: int = 100
+    samples_per_episode: int = 20
+    entropy_coef: float = 0.0
+    seed: int = 0
+
+
+class PlacetoBaseline:
+    """GNN encoder → per-node categorical placement (encoder-placer)."""
+
+    def __init__(self, cfg: BaselineConfig = BaselineConfig()):
+        self.cfg = cfg
+        self.params = None
+        self._opt = adam(cfg.learning_rate)
+        self._opt_state = None
+
+    def init(self, rng, arrays: GraphArrays):
+        k1, k2 = jax.random.split(rng)
+        self.params = {
+            "enc": encoder_init(k1, arrays.x.shape[1], self.cfg.hidden,
+                                layer_trans=2, layer_gnn=2),
+            "head": mlp_init(k2, [self.cfg.hidden, self.cfg.hidden,
+                                  self.cfg.num_devices]),
+        }
+        self._opt_state = self._opt.init(self.params)
+
+    def search(self, graph: CompGraph, arrays: GraphArrays,
+               reward_fn: Callable[[np.ndarray], Tuple[float, float]],
+               rng=None, verbose: bool = False) -> SearchResult:
+        cfg = self.cfg
+        t0 = time.perf_counter()
+        rng = rng if rng is not None else jax.random.PRNGKey(cfg.seed)
+        if self.params is None:
+            rng, k = jax.random.split(rng)
+            self.init(k, arrays)
+        x0 = jnp.asarray(arrays.x)
+        adj = jnp.asarray(arrays.adj)
+
+        def forward(params, rng):
+            z = encoder_apply(params["enc"], x0, adj)
+            logits = mlp_apply(params["head"], z)
+            placement = jax.random.categorical(rng, logits, axis=-1)
+            logp_full = jax.nn.log_softmax(logits, axis=-1)
+            logp = jnp.take_along_axis(
+                logp_full, placement[:, None], -1)[:, 0].sum()
+            ent = -jnp.sum(jnp.exp(logp_full) * logp_full)
+            return placement.astype(jnp.int32), logp, ent
+
+        sample = jax.jit(lambda p, r: forward(p, r)[0])
+
+        def batch_loss(params, rngs, advantages):
+            loss = jnp.float32(0.0)
+            for i in range(cfg.samples_per_episode):
+                _, logp, ent = forward(params, rngs[i])
+                loss = loss - logp * advantages[i] - cfg.entropy_coef * ent
+            return loss / cfg.samples_per_episode
+
+        grad_fn = jax.jit(jax.grad(batch_loss))
+
+        baseline = RunningBaseline()
+        best_lat, best_p = float("inf"), cpu_only(graph)
+        history = []
+        for ep in range(cfg.episodes):
+            keys, rewards, placements = [], [], []
+            for _ in range(cfg.samples_per_episode):
+                rng, k = jax.random.split(rng)
+                p = np.asarray(sample(self.params, k))
+                r, lat = reward_fn(p)
+                keys.append(k)
+                rewards.append(r)
+                if lat < best_lat:
+                    best_lat, best_p = float(lat), p.copy()
+            b = baseline.value if baseline.value is not None else np.mean(rewards)
+            adv = np.asarray(rewards, np.float32) - b
+            for r in rewards:
+                baseline.update(r)
+            grads = grad_fn(self.params, jnp.stack(keys), jnp.asarray(adv))
+            updates, self._opt_state = self._opt.update(
+                grads, self._opt_state, self.params)
+            self.params = apply_updates(self.params, updates)
+            history.append({"episode": ep, "mean_reward": float(np.mean(rewards)),
+                            "best_latency": best_lat})
+            if verbose:
+                print(f"[placeto] ep {ep} mean_r {np.mean(rewards):.4g} "
+                      f"best {best_lat:.6f}")
+        return SearchResult(best_p, best_lat, history, self.params, {},
+                            time.perf_counter() - t0)
+
+
+# --------------------------------------------------------------------- RNN
+def _lstm_init(rng, d_in: int, d_h: int) -> Dict:
+    k1, k2 = jax.random.split(rng)
+    scale = 1.0 / np.sqrt(d_h)
+    return {
+        "wx": jax.random.normal(k1, (d_in, 4 * d_h)) * scale,
+        "wh": jax.random.normal(k2, (d_h, 4 * d_h)) * scale,
+        "b": jnp.zeros((4 * d_h,)),
+    }
+
+
+def _lstm_step(p: Dict, carry, x):
+    h, c = carry
+    gates = x @ p["wx"] + h @ p["wh"] + p["b"]
+    i, f, g, o = jnp.split(gates, 4, axis=-1)
+    c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+    h = jax.nn.sigmoid(o) * jnp.tanh(c)
+    return (h, c), h
+
+
+class RNNBaseline:
+    """Seq2seq LSTM placer with content attention (Mirhoseini et al. 2017)."""
+
+    def __init__(self, cfg: BaselineConfig = BaselineConfig()):
+        self.cfg = cfg
+        self.params = None
+        self._opt = adam(cfg.learning_rate)
+        self._opt_state = None
+
+    def init(self, rng, arrays: GraphArrays):
+        cfg = self.cfg
+        d_in = arrays.x.shape[1]
+        k1, k2, k3, k4 = jax.random.split(rng, 4)
+        self.params = {
+            "enc": _lstm_init(k1, d_in, cfg.hidden),
+            "dec": _lstm_init(k2, cfg.hidden + cfg.num_devices, cfg.hidden),
+            "attn": mlp_init(k3, [cfg.hidden, cfg.hidden]),
+            "head": mlp_init(k4, [2 * cfg.hidden, cfg.num_devices]),
+        }
+        self._opt_state = self._opt.init(self.params)
+
+    def _forward(self, params, x_seq, rng):
+        """Encode all nodes; decode one device per node with attention."""
+        cfg = self.cfg
+        d_h = cfg.hidden
+        n = x_seq.shape[0]
+        carry0 = (jnp.zeros((d_h,)), jnp.zeros((d_h,)))
+        _, enc_states = jax.lax.scan(
+            lambda c, x: _lstm_step(params["enc"], c, x), carry0, x_seq)
+
+        keys = mlp_apply(params["attn"], enc_states)        # (n, d_h)
+
+        def dec_step(carry, inp):
+            (h, c), prev_onehot = carry
+            enc_h, rng_i = inp
+            scores = keys @ h                                # content attention
+            ctx = jax.nn.softmax(scores) @ enc_states
+            x = jnp.concatenate([enc_h, prev_onehot])
+            (h, c), _ = _lstm_step(params["dec"], (h, c), x)
+            logits = mlp_apply(params["head"], jnp.concatenate([h, ctx]))
+            choice = jax.random.categorical(rng_i, logits)
+            logp = jax.nn.log_softmax(logits)[choice]
+            onehot = jax.nn.one_hot(choice, cfg.num_devices)
+            return ((h, c), onehot), (choice, logp)
+
+        rngs = jax.random.split(rng, n)
+        (_, _), (choices, logps) = jax.lax.scan(
+            dec_step, (carry0, jnp.zeros((cfg.num_devices,))),
+            (enc_states, rngs))
+        return choices.astype(jnp.int32), logps.sum()
+
+    def search(self, graph: CompGraph, arrays: GraphArrays,
+               reward_fn: Callable[[np.ndarray], Tuple[float, float]],
+               rng=None, verbose: bool = False) -> SearchResult:
+        cfg = self.cfg
+        t0 = time.perf_counter()
+        rng = rng if rng is not None else jax.random.PRNGKey(cfg.seed)
+        if self.params is None:
+            rng, k = jax.random.split(rng)
+            self.init(k, arrays)
+
+        # Nodes fed in topological order (the RNN's sequence view of the DAG).
+        order = np.argsort(arrays.topo_pos)
+        x_seq = jnp.asarray(arrays.x[order])
+        # choices come out in topo order; map back to node ids via `order`.
+
+        sample = jax.jit(lambda p, r: self._forward(p, x_seq, r)[0])
+
+        def batch_loss(params, rngs, advantages):
+            loss = jnp.float32(0.0)
+            for i in range(cfg.samples_per_episode):
+                _, logp = self._forward(params, x_seq, rngs[i])
+                loss = loss - logp * advantages[i]
+            return loss / cfg.samples_per_episode
+
+        grad_fn = jax.jit(jax.grad(batch_loss))
+
+        baseline = RunningBaseline()
+        best_lat, best_p = float("inf"), cpu_only(graph)
+        history = []
+        for ep in range(cfg.episodes):
+            keys, rewards = [], []
+            for _ in range(cfg.samples_per_episode):
+                rng, k = jax.random.split(rng)
+                choices = np.asarray(sample(self.params, k))
+                p = np.empty(arrays.num_nodes, dtype=np.int64)
+                p[order] = choices
+                r, lat = reward_fn(p)
+                keys.append(k)
+                rewards.append(r)
+                if lat < best_lat:
+                    best_lat, best_p = float(lat), p.copy()
+            b = baseline.value if baseline.value is not None else np.mean(rewards)
+            adv = np.asarray(rewards, np.float32) - b
+            for r in rewards:
+                baseline.update(r)
+            grads = grad_fn(self.params, jnp.stack(keys), jnp.asarray(adv))
+            updates, self._opt_state = self._opt.update(
+                grads, self._opt_state, self.params)
+            self.params = apply_updates(self.params, updates)
+            history.append({"episode": ep, "mean_reward": float(np.mean(rewards)),
+                            "best_latency": best_lat})
+            if verbose:
+                print(f"[rnn] ep {ep} mean_r {np.mean(rewards):.4g} "
+                      f"best {best_lat:.6f}")
+        return SearchResult(best_p, best_lat, history, self.params, {},
+                            time.perf_counter() - t0)

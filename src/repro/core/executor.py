@@ -1,0 +1,114 @@
+"""Measured-latency backend (paper-faithful reward path).
+
+The paper deploys each placement with OpenVINO and measures wall-clock
+inference latency.  Here the graph is *actually executed* on ``jax.devices()``:
+
+  * every node becomes a proxy workload whose FLOPs and output bytes match the
+    graph annotations (a matmul sized to the node's cost),
+  * each node runs jitted on the device its placement assigns,
+  * cross-device edges move real buffers with ``jax.device_put``,
+  * latency = wall-clock of the whole DAG execution, measured the paper's way:
+    10 runs, average of the last 5 (§3, Table 2 caption).
+
+On this CPU-only container all devices are CPU cores (or virtual XLA host
+devices), so measured numbers show dispatch/transfer structure rather than
+CPU-vs-GPU asymmetry — the calibrated simulator (costmodel.py) plays that
+role; this module proves the measurement path works end-to-end.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import CompGraph, topological_order
+
+__all__ = ["MeasuredExecutor"]
+
+_MAX_SIDE = 2048          # cap proxy matmul dims
+_MAX_ELEMS = 1 << 20      # cap materialized buffer elements
+
+
+def _proxy_dims(flops: float, out_elems: int) -> Tuple[int, int]:
+    """(m, k) such that a (m,k)@(k,) matvec ≈ flops and m ≈ out elems."""
+    m = int(min(max(out_elems, 8), _MAX_SIDE))
+    k = int(min(max(flops / (2.0 * m), 8), _MAX_SIDE * 32))
+    return m, k
+
+
+class MeasuredExecutor:
+    """Execute a CompGraph under a placement and time it."""
+
+    def __init__(self, graph: CompGraph, devices: Optional[Sequence] = None,
+                 warmup: int = 5, timed: int = 5):
+        self.graph = graph
+        self.devices = list(devices if devices is not None else jax.devices())
+        self.warmup = warmup
+        self.timed = timed
+        self.order = topological_order(graph)
+        n = graph.num_nodes
+        self.preds: List[List[int]] = [[] for _ in range(n)]
+        for s, d in graph.edges:
+            self.preds[int(d)].append(int(s))
+
+        # Static per-node proxy workloads (weights created once, per device on
+        # demand) — created lazily so huge graphs stay cheap to construct.
+        self._dims: List[Tuple[int, int]] = []
+        self._weights: Dict[Tuple[int, int], np.ndarray] = {}
+        rng = np.random.default_rng(0)
+        for node in graph.nodes:
+            out_elems = int(min(max(node.bytes_out / 4.0, 8), _MAX_ELEMS))
+            m, k = _proxy_dims(node.flops, out_elems)
+            self._dims.append((m, k))
+            if (m, k) not in self._weights:
+                self._weights[(m, k)] = rng.standard_normal(
+                    (m, k), dtype=np.float32) / np.sqrt(k)
+        self._dev_weights: Dict[Tuple[int, int, int], jax.Array] = {}
+
+        @jax.jit
+        def node_fn(w, xs_sum):
+            # xs_sum: (k,) reduced inputs; one matvec ≈ the node's FLOPs.
+            return jnp.tanh(w @ xs_sum)
+
+        self._node_fn = node_fn
+
+    def _weight_on(self, m: int, k: int, dev_idx: int) -> jax.Array:
+        key = (m, k, dev_idx)
+        if key not in self._dev_weights:
+            self._dev_weights[key] = jax.device_put(
+                self._weights[(m, k)], self.devices[dev_idx])
+        return self._dev_weights[key]
+
+    def _run_once(self, placement: np.ndarray) -> float:
+        outs: List[Optional[jax.Array]] = [None] * self.graph.num_nodes
+        t0 = time.perf_counter()
+        for v in self.order:
+            v = int(v)
+            dev_idx = int(placement[v]) % len(self.devices)
+            dev = self.devices[dev_idx]
+            m, k = self._dims[v]
+            w = self._weight_on(m, k, dev_idx)
+            acc = jnp.zeros((k,), jnp.float32, device=dev)
+            for u in self.preds[v]:
+                x = outs[u]
+                if x.devices() != {dev}:
+                    x = jax.device_put(x, dev)        # real transfer
+                n = min(x.shape[0], k)
+                acc = acc.at[:n].add(x[:n])
+            outs[v] = self._node_fn(w, acc)
+        # Block on all sinks.
+        for v in range(self.graph.num_nodes):
+            if outs[v] is not None:
+                outs[v].block_until_ready()
+        return time.perf_counter() - t0
+
+    def __call__(self, placement: np.ndarray) -> Tuple[float, float]:
+        """reward, latency — measured as in the paper (avg of last 5 of 10)."""
+        placement = np.asarray(placement)
+        times = [self._run_once(placement)
+                 for _ in range(self.warmup + self.timed)]
+        latency = float(np.mean(times[self.warmup:]))
+        return (1.0 / latency if latency > 0 else 0.0), latency

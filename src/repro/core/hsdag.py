@@ -1,0 +1,266 @@
+"""HSDAG — the paper's five-step framework, end-to-end (§2, Fig. 1, Alg. 1).
+
+Usage::
+
+    graph  = inception_v3()                       # step 1: graph construction
+    arrays = extract_features(graph)              # step 2: features (§2.3)
+    agent  = HSDAG(HSDAGConfig(num_devices=2))
+    result = agent.search(graph, arrays, reward_fn)   # steps 3–5 + RL
+
+``reward_fn(fine_placement) -> (reward, latency)`` is any latency backend
+(cost-model simulator, measured executor, roofline planner) — the paper's
+OpenVINO measurement slot.
+
+Training is exact REINFORCE via *replayed rollouts*: the sampling pass records
+PRNG keys and rewards; the gradient pass re-runs the identical rollout
+differentiably with rewards as constants, so ∇θ J matches Eq. 14 including
+gradients through the GPN's straight-through pooling gates.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..optim import adam, apply_updates
+from .features import GraphArrays
+from .gnn import encoder_apply, encoder_init, mlp_apply, mlp_init
+from .gpn import ParseResult, gpn_apply, gpn_init
+from .graph import CompGraph
+from .policy import PolicyOutput, policy_apply, policy_init
+from .reinforce import RolloutBuffer, RunningBaseline, step_weights
+
+__all__ = ["HSDAGConfig", "HSDAG", "SearchResult"]
+
+
+@dataclasses.dataclass(frozen=True)
+class HSDAGConfig:
+    """Appendix H, Table 6 defaults."""
+
+    num_devices: int = 2
+    hidden_channel: int = 128
+    layer_trans: int = 2
+    layer_gnn: int = 2
+    layer_parsingnet: int = 2
+    gnn_model: str = "gcn"
+    dropout_network: float = 0.2
+    dropout_parsing: float = 0.0
+    link_ignore_self_loop: bool = True   # S is masked by A (no self loops)
+    activation_final: bool = True
+    learning_rate: float = 1e-4
+    max_episodes: int = 100
+    update_timestep: int = 20
+    k_epochs: int = 1            # 1 = exact Eq. 14 replay (paper value unlisted)
+    gamma: float = 0.99          # discount (paper value unlisted)
+    # --- beyond-paper, opt-in (EXPERIMENTS.md §Perf notes usage) ---
+    entropy_coef: float = 0.0
+    reward_to_go: bool = False
+    use_baseline: bool = False
+    normalize_weights: bool = False
+    state_norm: bool = True      # RMS-normalize the recurrent state Z between
+    # rounds; pure numerical stabilizer for the Alg.1 line-10 accumulation
+    # (sum-pooling grows ‖Z‖ geometrically over 20 rounds otherwise).
+    seed: int = 0
+
+
+class StepOutput(NamedTuple):
+    policy: PolicyOutput
+    parse: ParseResult
+    z_next: jnp.ndarray
+
+
+class SearchResult(NamedTuple):
+    best_placement: np.ndarray
+    best_latency: float
+    history: List[dict]          # per-episode stats
+    params: Dict
+    baseline_latencies: Dict[str, float]
+    wall_time_s: float
+
+
+def _rms_normalize(z: jnp.ndarray) -> jnp.ndarray:
+    rms = jnp.sqrt(jnp.mean(jnp.square(z)) + 1e-6)
+    return z / rms
+
+
+class HSDAG:
+    """The framework object: owns params, jitted rollout/update functions."""
+
+    def __init__(self, cfg: HSDAGConfig = HSDAGConfig()):
+        self.cfg = cfg
+        self.params: Optional[Dict] = None
+        self._opt = adam(cfg.learning_rate)
+        self._opt_state = None
+
+    # ------------------------------------------------------------------ init
+    def init(self, rng, arrays: GraphArrays) -> Dict:
+        cfg = self.cfg
+        k_enc, k_gpn, k_pol = jax.random.split(rng, 3)
+        d_in = arrays.x.shape[1]
+        params = {
+            "enc": encoder_init(k_enc, d_in, cfg.hidden_channel,
+                                layer_trans=cfg.layer_trans,
+                                layer_gnn=cfg.layer_gnn,
+                                gnn_model=cfg.gnn_model),
+            "gpn": gpn_init(k_gpn, cfg.hidden_channel,
+                            layer_parsingnet=cfg.layer_parsingnet),
+            "pol": policy_init(k_pol, cfg.hidden_channel, cfg.num_devices),
+        }
+        self.params = params
+        self._opt_state = self._opt.init(params)
+        return params
+
+    # ------------------------------------------------------------- one round
+    def _step(self, params: Dict, z: jnp.ndarray, x0: jnp.ndarray,
+              adj: jnp.ndarray, edges: jnp.ndarray, rng, *,
+              first: bool, train: bool, greedy: bool = False) -> StepOutput:
+        """One Alg.-1 iteration: encode → parse → place → state update."""
+        cfg = self.cfg
+        k_net, k_parse, k_pol = jax.random.split(rng, 3)
+        feats = x0 if first else z
+        z_enc = encoder_apply(
+            params["enc"], feats, adj, transform=first,
+            dropout_rng=k_net if train else None,
+            edge_dropout=cfg.dropout_network if train else 0.0)
+        parse = gpn_apply(
+            params["gpn"], z_enc, edges, adj,
+            dropout_rng=k_parse if train else None,
+            dropout_parsing=cfg.dropout_parsing if train else 0.0)
+        pol = policy_apply(params["pol"], parse.pooled_z, parse.active,
+                           parse.labels, k_pol, greedy=greedy)
+        # Alg. 1 line 10: Z_v ← Z_v + Z_{v'}.
+        z_next = z_enc + parse.pooled_z[parse.labels]
+        if cfg.state_norm:
+            z_next = _rms_normalize(z_next)
+        return StepOutput(pol, parse, z_next)
+
+    # -------------------------------------------------------------- rollouts
+    def _make_jitted(self, arrays: GraphArrays):
+        adj = jnp.asarray(arrays.adj)
+        x0 = jnp.asarray(arrays.x)
+        edges = jnp.asarray(arrays.edges)
+        cfg = self.cfg
+
+        def _rollout_step(params, z, rng, first: bool, greedy: bool = False):
+            out = self._step(params, z, x0, adj, edges, rng,
+                             first=first, train=not greedy, greedy=greedy)
+            return (out.policy.fine_placement, out.policy.coarse_placement,
+                    out.parse.num_groups, out.z_next)
+
+        def _window_loss(params, z0, rngs, weights, num_steps: int,
+                         start_first: bool):
+            """Differentiable replay of a buffer window (Eq. 14)."""
+            z = z0
+            loss = jnp.float32(0.0)
+            for i in range(num_steps):
+                first = start_first and i == 0
+                out = self._step(params, z, x0, adj, edges, rngs[i],
+                                 first=first, train=True)
+                loss = loss - out.policy.logp * weights[i]
+                loss = loss - cfg.entropy_coef * out.policy.entropy
+                z = out.z_next
+            return loss
+
+        rollout_step = jax.jit(_rollout_step,
+                               static_argnames=("first", "greedy"))
+        window_loss = jax.jit(_window_loss,
+                              static_argnames=("num_steps", "start_first"))
+        grad_fn = jax.jit(jax.grad(_window_loss),
+                          static_argnames=("num_steps", "start_first"))
+        return rollout_step, window_loss, grad_fn
+
+    # ---------------------------------------------------------------- search
+    def search(self, graph: CompGraph, arrays: GraphArrays,
+               reward_fn: Callable[[np.ndarray], Tuple[float, float]],
+               rng=None, verbose: bool = False) -> SearchResult:
+        """Run the full RL search (Alg. 1) and return the best placement."""
+        cfg = self.cfg
+        t_start = time.perf_counter()
+        rng = rng if rng is not None else jax.random.PRNGKey(cfg.seed)
+        if self.params is None:
+            rng, k_init = jax.random.split(rng)
+            self.init(k_init, arrays)
+
+        rollout_step, window_loss, grad_fn = self._make_jitted(arrays)
+        baseline = RunningBaseline() if cfg.use_baseline else None
+        buffer = RolloutBuffer()
+
+        best_latency = float("inf")
+        best_placement = np.zeros(arrays.num_nodes, dtype=np.int64)
+        history: List[dict] = []
+
+        x0 = jnp.asarray(arrays.x)
+        z = x0  # replaced on the first (transforming) step
+        z0_window = z
+        first_of_window = True
+        step_in_episode = 0
+
+        for episode in range(cfg.max_episodes):
+            ep_rewards: List[float] = []
+            ep_groups: List[int] = []
+            for _ in range(cfg.update_timestep):
+                rng, k_step = jax.random.split(rng)
+                first = step_in_episode == 0
+                fine, coarse, ngroups, z_next = rollout_step(
+                    self.params, z, k_step, first=first)
+                fine_np = np.asarray(fine)
+                reward, latency = reward_fn(fine_np)
+                if baseline is not None:
+                    baseline.update(reward)
+                buffer.add(k_step, reward, fine_np, latency)
+                ep_rewards.append(reward)
+                ep_groups.append(int(ngroups))
+                if latency < best_latency:
+                    best_latency = float(latency)
+                    best_placement = fine_np.copy()
+                z = z_next
+                step_in_episode += 1
+
+            # ---- policy update over the buffer window (Eq. 14) ----
+            weights = step_weights(
+                np.asarray(buffer.rewards), cfg.gamma,
+                reward_to_go=cfg.reward_to_go,
+                baseline=(baseline.value if baseline is not None else None),
+                normalize=cfg.normalize_weights)
+            rngs = jnp.stack(buffer.rngs)
+            for _ in range(max(1, cfg.k_epochs)):
+                grads = grad_fn(self.params, z0_window, rngs,
+                                jnp.asarray(weights),
+                                num_steps=len(buffer),
+                                start_first=first_of_window)
+                updates, self._opt_state = self._opt.update(
+                    grads, self._opt_state, self.params)
+                self.params = apply_updates(self.params, updates)
+            buffer.clear()
+            # next window starts from the current state
+            z0_window = z
+            first_of_window = False
+            history.append({
+                "episode": episode,
+                "mean_reward": float(np.mean(ep_rewards)),
+                "best_latency": best_latency,
+                "mean_groups": float(np.mean(ep_groups)),
+            })
+            if verbose:
+                h = history[-1]
+                print(f"ep {episode:3d} reward {h['mean_reward']:.4g} "
+                      f"best {best_latency:.6f}s groups {h['mean_groups']:.1f}")
+
+        return SearchResult(best_placement, best_latency, history,
+                            self.params, {}, time.perf_counter() - t_start)
+
+    # ------------------------------------------------------------- inference
+    def place(self, arrays: GraphArrays, rng=None,
+              greedy: bool = True) -> np.ndarray:
+        """One greedy forward placement with the current policy."""
+        assert self.params is not None, "call init()/search() first"
+        rollout_step, _, _ = self._make_jitted(arrays)
+        rng = rng if rng is not None else jax.random.PRNGKey(0)
+        fine, _, _, _ = rollout_step(self.params, jnp.asarray(arrays.x), rng,
+                                     first=True, greedy=greedy)
+        return np.asarray(fine)

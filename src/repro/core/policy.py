@@ -1,0 +1,62 @@
+"""Device-placement policy head (paper §2.5).
+
+An MLP classifies each *coarsened* node (cluster slot) to one of |D| devices;
+sampling is categorical; the coarse placement P' maps back to the original
+graph through the cluster labels (the assignment matrix X in the paper — we
+gather by label, which is X applied as an index map).
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .gnn import mlp_apply, mlp_init
+
+__all__ = ["policy_init", "policy_apply", "placement_logp", "PolicyOutput"]
+
+
+class PolicyOutput(NamedTuple):
+    coarse_placement: jnp.ndarray   # (V,) int32 — device per cluster slot
+    fine_placement: jnp.ndarray     # (V,) int32 — device per original node
+    logp: jnp.ndarray               # () — Σ over active slots of log π(p'|slot)
+    entropy: jnp.ndarray            # () — Σ entropy over active slots
+    logits: jnp.ndarray             # (V, |D|)
+
+
+def policy_init(rng, hidden: int, num_devices: int, *,
+                layers: int = 2) -> Dict:
+    sizes = [hidden] * layers + [num_devices]
+    return {"mlp": mlp_init(rng, sizes)}
+
+
+def _log_softmax(logits):
+    return logits - jax.scipy.special.logsumexp(logits, axis=-1, keepdims=True)
+
+
+def policy_apply(params: Dict, pooled_z: jnp.ndarray, active: jnp.ndarray,
+                 labels: jnp.ndarray, rng, *,
+                 greedy: bool = False) -> PolicyOutput:
+    """Sample a placement for every active cluster slot and map it to nodes."""
+    logits = mlp_apply(params["mlp"], pooled_z)
+    logp_full = _log_softmax(logits)
+    if greedy:
+        coarse = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    else:
+        coarse = jax.random.categorical(rng, logits, axis=-1).astype(jnp.int32)
+    chosen_logp = jnp.take_along_axis(logp_full, coarse[:, None], axis=-1)[:, 0]
+    act = active.astype(logits.dtype)
+    logp = jnp.sum(chosen_logp * act)
+    entropy = jnp.sum(-jnp.sum(jnp.exp(logp_full) * logp_full, -1) * act)
+    fine = coarse[labels]
+    return PolicyOutput(coarse, fine, logp, entropy, logits)
+
+
+def placement_logp(params: Dict, pooled_z: jnp.ndarray, active: jnp.ndarray,
+                   coarse_placement: jnp.ndarray) -> jnp.ndarray:
+    """log π(P'|G'; θ) of a *stored* coarse placement (replay / K-epoch use)."""
+    logits = mlp_apply(params["mlp"], pooled_z)
+    logp_full = _log_softmax(logits)
+    chosen = jnp.take_along_axis(logp_full, coarse_placement[:, None], -1)[:, 0]
+    return jnp.sum(chosen * active.astype(logits.dtype))

@@ -1,0 +1,92 @@
+"""REINFORCE machinery (paper §2.5, Eq. 12–14).
+
+The paper stores ``update_timestep`` steps in a buffer and updates with
+
+    ∇J(θ) ≈ − Σ_{i=1..x} ∇ log p(P_i | G'; θ) · γ^i · r(P_i, G)      (Eq. 14)
+
+i.e. each step's log-probability is weighted by its *own* discounted reward
+(not a summed return).  ``step_weights`` implements that faithfully; the
+beyond-paper variance-reduction options (reward-to-go, moving-average
+baseline, reward normalization) are opt-in flags recorded in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import numpy as np
+
+__all__ = ["RolloutBuffer", "step_weights", "RunningBaseline"]
+
+
+@dataclasses.dataclass
+class RolloutBuffer:
+    """Per-update-window storage (paper's "buffer of x steps")."""
+
+    rngs: List = dataclasses.field(default_factory=list)
+    rewards: List[float] = dataclasses.field(default_factory=list)
+    placements: List[np.ndarray] = dataclasses.field(default_factory=list)
+    latencies: List[float] = dataclasses.field(default_factory=list)
+
+    def add(self, rng, reward: float, placement: np.ndarray,
+            latency: float) -> None:
+        self.rngs.append(rng)
+        self.rewards.append(float(reward))
+        self.placements.append(np.asarray(placement))
+        self.latencies.append(float(latency))
+
+    def __len__(self) -> int:
+        return len(self.rewards)
+
+    def clear(self) -> None:
+        self.rngs.clear()
+        self.rewards.clear()
+        self.placements.clear()
+        self.latencies.clear()
+
+
+def step_weights(rewards: np.ndarray, gamma: float, *,
+                 reward_to_go: bool = False,
+                 baseline: Optional[float] = None,
+                 normalize: bool = False) -> np.ndarray:
+    """Per-step loss weights w_i so that loss = −Σ_i w_i · log p(P_i).
+
+    Default (paper Eq. 14): w_i = γ^i · r_i  (i zero-based here; the constant
+    γ offset between 1-based and 0-based indexing is absorbed by the learning
+    rate).  Options:
+      * ``reward_to_go``: w_i = Σ_{j≥i} γ^{j−i} r_j (classic REINFORCE return)
+      * ``baseline``: subtract a scalar baseline from rewards first
+      * ``normalize``: standardize the weights (variance reduction)
+    """
+    r = np.asarray(rewards, dtype=np.float64)
+    if baseline is not None:
+        r = r - float(baseline)
+    x = len(r)
+    if reward_to_go:
+        w = np.zeros(x)
+        acc = 0.0
+        for i in range(x - 1, -1, -1):
+            acc = r[i] + gamma * acc
+            w[i] = acc
+    else:
+        w = (gamma ** np.arange(x)) * r
+    if normalize and x > 1:
+        std = w.std()
+        if std > 1e-12:
+            w = (w - w.mean()) / std
+    return w.astype(np.float32)
+
+
+class RunningBaseline:
+    """Exponential-moving-average reward baseline (beyond-paper, opt-in)."""
+
+    def __init__(self, beta: float = 0.9):
+        self.beta = beta
+        self.value: Optional[float] = None
+
+    def update(self, reward: float) -> float:
+        if self.value is None:
+            self.value = float(reward)
+        else:
+            self.value = self.beta * self.value + (1 - self.beta) * float(reward)
+        return self.value

@@ -1,0 +1,106 @@
+"""Compressed gradient collectives (int8 + error feedback).
+
+At 1000-node scale the data-parallel gradient all-reduce dominates step time
+for small-per-chip models.  ``compressed_psum_mean`` replaces the f32 ring
+all-reduce with:
+
+    1. block-quantize the local shard to int8 (per-256-element f32 scales)
+    2. all_to_all the int8 blocks (each device owns 1/N of the vector)
+    3. dequantize + sum in f32 locally
+    4. requantize the reduced chunk, all_gather int8 (+ scales)
+
+Wire bytes: 2·N·1B (+ scales ≈ 2·N/256·4B) vs 2·N·4B for ring all-reduce —
+a ~3.9× reduction in collective bytes, which is exactly the term the §Perf
+loop tracks for collective-bound cells.  Quantization error is absorbed by
+**error feedback** (the residual is added to the next step's gradient), the
+standard convergence-preserving trick.
+
+Implemented with jax.lax collectives for use inside shard_map.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["quantize_int8", "dequantize_int8", "compressed_psum_mean",
+           "compressed_allreduce_tree"]
+
+BLOCK = 256
+
+
+def quantize_int8(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (..., k·BLOCK) f32 → (int8 values, f32 scales per block)."""
+    shape = x.shape
+    blocks = x.reshape(shape[:-1] + (-1, BLOCK))
+    amax = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q.reshape(shape), scale[..., 0]
+
+
+def dequantize_int8(q: jnp.ndarray, scale: jnp.ndarray) -> jnp.ndarray:
+    shape = q.shape
+    blocks = q.reshape(shape[:-1] + (-1, BLOCK)).astype(jnp.float32)
+    return (blocks * scale[..., None]).reshape(shape)
+
+
+def compressed_psum_mean(x: jnp.ndarray, axis_name: str,
+                         num_devices: int) -> jnp.ndarray:
+    """Mean-all-reduce of a flat f32 vector with int8 wire format.
+
+    Call inside shard_map; ``x`` is the per-device vector (same shape on all
+    devices, e.g. a replicated-gradient shard).  Length must be divisible by
+    ``num_devices · BLOCK`` (pad upstream).
+    """
+    n = x.shape[0]
+    chunk = n // num_devices
+    assert chunk * num_devices == n and chunk % BLOCK == 0, (n, num_devices)
+
+    # 1. quantize the full local vector
+    q, scale = quantize_int8(x)
+    # 2. all_to_all: device d receives everyone's chunk d
+    qs = q.reshape(num_devices, chunk)
+    ss = scale.reshape(num_devices, chunk // BLOCK)
+    q_recv = jax.lax.all_to_all(qs, axis_name, split_axis=0, concat_axis=0,
+                                tiled=False)            # (D, chunk) int8
+    s_recv = jax.lax.all_to_all(ss, axis_name, split_axis=0, concat_axis=0,
+                                tiled=False)
+    # 3. dequantize + mean in f32
+    deq = dequantize_int8(q_recv.reshape(num_devices, chunk),
+                          s_recv.reshape(num_devices, chunk // BLOCK))
+    reduced = jnp.mean(deq, axis=0)                     # (chunk,) f32
+    # 4. requantize + all_gather
+    qr, sr = quantize_int8(reduced)
+    q_all = jax.lax.all_gather(qr, axis_name, axis=0)   # (D, chunk) int8
+    s_all = jax.lax.all_gather(sr, axis_name, axis=0)
+    return dequantize_int8(q_all.reshape(-1),
+                           s_all.reshape(-1))
+
+
+def compressed_allreduce_tree(grads, axis_name: str, num_devices: int,
+                              error_fb=None):
+    """Tree-level wrapper with error feedback.
+
+    Returns (reduced_grads, new_error_fb).  ``error_fb`` is a matching tree
+    of residuals (or None on step 0).
+    """
+    flat, treedef = jax.tree.flatten(grads)
+    sizes = [x.size for x in flat]
+    vec = jnp.concatenate([x.reshape(-1).astype(jnp.float32) for x in flat])
+    pad = (-vec.size) % (num_devices * BLOCK)
+    vec = jnp.pad(vec, (0, pad))
+    if error_fb is not None:
+        vec = vec + error_fb
+    reduced = compressed_psum_mean(vec, axis_name, num_devices)
+    # error feedback (EF-SGD): the part of the *local* contribution that the
+    # wire format dropped — purely local, no extra collective.
+    q, s = quantize_int8(vec)
+    new_err = vec - dequantize_int8(q, s)
+    out = []
+    off = 0
+    for x, sz in zip(flat, sizes):
+        out.append(reduced[off:off + sz].reshape(x.shape).astype(x.dtype))
+        off += sz
+    return jax.tree.unflatten(treedef, out), new_err

@@ -1,0 +1,112 @@
+"""Elastic scaling, straggler mitigation, and preemption handling.
+
+At 1000+ nodes the failure model is: slow hosts (stragglers), dead hosts
+(shrink + restart from checkpoint), and preemptions (flush + exit).  The
+pieces here are host-level control-plane logic — deliberately simple,
+deterministic and testable:
+
+  * ``StragglerWatchdog`` — per-step wall-time EMA + outlier detection;
+    production hook: report the slow host for exclusion at the next re-mesh.
+  * ``ElasticController`` — decides the mesh for the *available* device
+    count, and restores a checkpoint onto it (re-shard on load; arrays are
+    stored unsharded per checkpoint/manager.py).
+  * ``PreemptionFlusher`` — SIGTERM-driven final checkpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import signal
+import time
+from typing import Callable, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from ..checkpoint import CheckpointManager
+
+__all__ = ["StragglerWatchdog", "ElasticController", "PreemptionFlusher",
+           "choose_mesh_shape"]
+
+
+class StragglerWatchdog:
+    """Flags steps (hosts) whose wall time exceeds ``threshold`` × EMA."""
+
+    def __init__(self, threshold: float = 2.0, beta: float = 0.9,
+                 warmup_steps: int = 5):
+        self.threshold = threshold
+        self.beta = beta
+        self.warmup = warmup_steps
+        self.ema: Optional[float] = None
+        self.count = 0
+        self.flagged: List[Tuple[int, float]] = []
+
+    def record(self, step: int, seconds: float) -> bool:
+        """Returns True if this step is a straggler."""
+        self.count += 1
+        if self.ema is None:
+            self.ema = seconds
+            return False
+        is_slow = (self.count > self.warmup and
+                   seconds > self.threshold * self.ema)
+        if is_slow:
+            self.flagged.append((step, seconds))
+        else:
+            # stragglers don't poison the baseline
+            self.ema = self.beta * self.ema + (1 - self.beta) * seconds
+        return is_slow
+
+
+def choose_mesh_shape(num_devices: int,
+                      model_parallel: int) -> Tuple[int, int]:
+    """(data, model) for the available device count — shrink data-parallel
+    first (model sharding is dictated by memory, not throughput)."""
+    model = model_parallel
+    while model > 1 and num_devices % model:
+        model //= 2
+    return max(1, num_devices // model), model
+
+
+@dataclasses.dataclass
+class ElasticController:
+    """Restores training state onto whatever devices are still alive."""
+
+    ckpt: CheckpointManager
+    make_mesh: Callable[[int, int], object]     # (data, model) → Mesh
+    model_parallel: int = 1
+
+    def resume(self, tree_like, sharding_fn=None):
+        """Returns (mesh, state, step) for the current device count.
+
+        ``sharding_fn(mesh, tree_like)`` → shardings tree (defaults to
+        fully-replicated).
+        """
+        n = len(jax.devices())
+        data, model = choose_mesh_shape(n, self.model_parallel)
+        mesh = self.make_mesh(data, model)
+        step = self.ckpt.latest_step()
+        if step is None:
+            return mesh, None, 0
+        shardings = sharding_fn(mesh, tree_like) if sharding_fn else None
+        state = self.ckpt.restore(step, tree_like, shardings=shardings)
+        return mesh, state, step
+
+
+class PreemptionFlusher:
+    """SIGTERM → save a final checkpoint before the scheduler kills us."""
+
+    def __init__(self, ckpt: CheckpointManager):
+        self.ckpt = ckpt
+        self.preempted = False
+        self._state = None
+        self._step = 0
+        signal.signal(signal.SIGTERM, self._handler)
+
+    def update(self, step: int, state) -> None:
+        self._step, self._state = step, state
+
+    def _handler(self, signum, frame) -> None:
+        self.preempted = True
+        if self._state is not None:
+            self.ckpt.save(self._step, self._state,
+                           meta={"preempted": True})
+            self.ckpt.wait() if self.ckpt.async_save else None

@@ -1,0 +1,137 @@
+"""Logical-axis sharding (MaxText-style rules → GSPMD).
+
+Models annotate params/activations with *logical* axis names; a rules table
+maps logical names to mesh axes.  The same model code then runs:
+
+  * unsharded on 1 CPU device (smoke tests)      — no rules context
+  * DP×TP on a 16×16 pod                          — DEFAULT_RULES
+  * +FSDP / +EP / +SP variants                    — rule overrides per config
+  * 2×16×16 multi-pod                             — "batch" also maps to "pod"
+
+``shard(x, *axes)`` inserts a with_sharding_constraint only when a rules
+context is active, keeping model code mesh-agnostic.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+__all__ = ["AxisRules", "DEFAULT_RULES", "use_rules", "logical_spec",
+           "shard", "param_specs", "current_mesh", "with_rules"]
+
+MeshAxes = Union[None, str, Tuple[str, ...]]
+AxisRules = Dict[str, MeshAxes]
+
+#: baseline production rules for the (pod, data, model) / (data, model) meshes
+DEFAULT_RULES: AxisRules = {
+    # data-parallel dims
+    "batch": ("pod", "data"),
+    "group": ("pod", "data"),
+    # tensor-parallel dims
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "mlp": "model",
+    "experts": "model",      # EP; expert hidden stays unsharded by default
+    "expert_mlp": None,      # (mixtral: experts→None + expert_mlp→"model")
+    "state": None,
+    # replicated-by-default dims
+    "embed": None,        # param d_model dim (→ "data" under FSDP)
+    "act_embed": None,    # activation d_model dim
+    "act_seq": None,      # activation sequence dim inside mixer/ffn compute
+    "res_seq": None,      # RESIDUAL-STREAM sequence dim (→ "model" under
+                          # Megatron-style sequence parallelism: block
+                          # boundaries/norms/remat-saved tensors shard on seq,
+                          # compute internals keep TP head/mlp sharding)
+    "layers": None,
+    "head_dim": None,
+    "conv": None,
+    "capacity": None,
+    "qkv": None,
+    "merged_bh": ("data", "model"),   # head-merged attention (config flag)
+    "cache_seq": None,
+}
+
+
+class _Ctx(threading.local):
+    def __init__(self):
+        self.mesh: Optional[Mesh] = None
+        self.rules: Optional[AxisRules] = None
+
+
+_CTX = _Ctx()
+
+
+@contextlib.contextmanager
+def use_rules(mesh: Mesh, rules: Optional[AxisRules] = None):
+    """Activate a mesh + logical rules for ``shard`` constraints."""
+    prev = (_CTX.mesh, _CTX.rules)
+    _CTX.mesh = mesh
+    _CTX.rules = dict(DEFAULT_RULES, **(rules or {}))
+    try:
+        yield
+    finally:
+        _CTX.mesh, _CTX.rules = prev
+
+
+def with_rules(rules: Optional[AxisRules]) -> AxisRules:
+    return dict(DEFAULT_RULES, **(rules or {}))
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _CTX.mesh
+
+
+def _resolve(axes: Sequence[Optional[str]], rules: AxisRules,
+             mesh: Optional[Mesh]) -> PartitionSpec:
+    parts = []
+    for a in axes:
+        m = rules.get(a) if a is not None else None
+        if m is None:
+            parts.append(None)
+            continue
+        if mesh is not None:
+            # Drop mesh axes absent from this mesh (e.g. "pod" on single-pod)
+            names = mesh.axis_names
+            if isinstance(m, tuple):
+                m = tuple(x for x in m if x in names) or None
+            elif m not in names:
+                m = None
+        parts.append(m)
+    return PartitionSpec(*parts)
+
+
+def logical_spec(axes: Sequence[Optional[str]],
+                 rules: Optional[AxisRules] = None,
+                 mesh: Optional[Mesh] = None) -> PartitionSpec:
+    rules = rules if rules is not None else (_CTX.rules or DEFAULT_RULES)
+    mesh = mesh if mesh is not None else _CTX.mesh
+    return _resolve(axes, rules, mesh)
+
+
+def shard(x: jnp.ndarray, *axes: Optional[str]) -> jnp.ndarray:
+    """Constrain ``x`` to the sharding implied by its logical axes (no-op
+    outside a ``use_rules`` context)."""
+    if _CTX.mesh is None or _CTX.rules is None:
+        return x
+    spec = _resolve(axes, _CTX.rules, _CTX.mesh)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(_CTX.mesh, spec))
+
+
+def param_specs(axes_tree, mesh: Mesh,
+                rules: Optional[AxisRules] = None):
+    """Map a logical-axes tree (models.params.axes_tree) to NamedShardings."""
+    rules = with_rules(rules)
+
+    def leaf(axes):
+        return NamedSharding(mesh, _resolve(axes, rules, mesh))
+
+    return jax.tree.map(leaf, axes_tree,
+                        is_leaf=lambda x: isinstance(x, tuple) and
+                        all(a is None or isinstance(a, str) for a in x))

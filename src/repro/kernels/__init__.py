@@ -1,0 +1,15 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  flash_attention — blockwise online-softmax GQA attention (+causal/SWA)
+  rmsnorm         — fused one-pass RMSNorm
+  gcn_spmm        — fused normalized-adjacency aggregation (HSDAG Eq. 6)
+  ssd_scan        — Mamba-2 cross-chunk state recurrence
+
+Each has a jit'd wrapper in ops.py and a pure-jnp oracle in ref.py;
+validation runs the TPU kernel bodies under interpret=True on CPU.
+"""
+from .ops import (flash_attention_op, gcn_aggregate_op, rmsnorm_op,
+                  ssd_scan_op)
+
+__all__ = ["flash_attention_op", "gcn_aggregate_op", "rmsnorm_op",
+           "ssd_scan_op"]

@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS *before* any jax
+initialization, and smoke tests keep their single CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16×16 v5e pod (256 chips), or 2 pods = 512 chips with a "pod" axis.
+
+    Axes: ("data", "model") — batch over data, TP/EP over model;
+    multi-pod adds "pod" (outermost; batch also shards over it, and the
+    HSDAG-planned pipeline uses it as the stage axis).
+    """
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)

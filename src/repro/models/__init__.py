@@ -1,0 +1,11 @@
+"""LM substrate: configs, layers, SSD mixer, decoder assembly."""
+from .config import ModelConfig
+from .lm import (abstract_params, cross_entropy, decode_step, forward,
+                 init_cache, init_params, make_serve_step, make_train_step,
+                 model_defs, param_axes, prefill, TrainState)
+
+__all__ = [
+    "ModelConfig", "model_defs", "init_params", "abstract_params",
+    "param_axes", "forward", "prefill", "decode_step", "init_cache",
+    "cross_entropy", "make_train_step", "make_serve_step", "TrainState",
+]

@@ -1,0 +1,421 @@
+"""Transformer layer library: norms, RoPE, GQA/SWA attention with KV cache,
+SwiGLU/GELU FFN, and GShard-style capacity-routed MoE.
+
+Every layer ships (a) a ``*_defs`` ParamDef builder with logical axes for
+sharding and (b) a pure apply function.  Stacked "layers" leading dims make
+the decoder scannable.  ``shard(...)`` constraints are no-ops outside a mesh
+context (smoke tests) and become GSPMD constraints inside ``use_rules``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import shard
+from .config import ModelConfig
+from .params import ParamDef, normal_init, ones_init, scaled_init, zeros_init
+
+__all__ = [
+    "rms_norm", "layer_norm", "norm_defs", "apply_norm",
+    "rope", "attn_defs", "attention", "AttnCache", "init_attn_cache",
+    "ffn_defs", "dense_ffn", "moe_defs", "moe_ffn",
+]
+
+
+# ------------------------------------------------------------------- norms
+def norm_defs(cfg: ModelConfig, reps: int) -> Dict[str, ParamDef]:
+    return {"scale": ParamDef((reps, cfg.d_model), ("layers", "embed"),
+                              jnp.float32, ones_init())}
+
+
+def rms_norm(scale: jnp.ndarray, x: jnp.ndarray,
+             eps: float = 1e-6) -> jnp.ndarray:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps) * scale).astype(dtype)
+
+
+def layer_norm(scale: jnp.ndarray, x: jnp.ndarray,
+               eps: float = 1e-5) -> jnp.ndarray:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    return ((x32 - mu) * jax.lax.rsqrt(var + eps) * scale).astype(dtype)
+
+
+def apply_norm(cfg: ModelConfig, scale: jnp.ndarray,
+               x: jnp.ndarray) -> jnp.ndarray:
+    return rms_norm(scale, x) if cfg.norm == "rmsnorm" else layer_norm(scale, x)
+
+
+# -------------------------------------------------------------------- RoPE
+def rope(x: jnp.ndarray, positions: jnp.ndarray,
+         theta: float = 10_000.0) -> jnp.ndarray:
+    """Rotary embedding. x: (B, S, H, Dh); positions: (B, S) int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions.astype(jnp.float32)[..., None] * freqs   # (B,S,half)
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------- attention
+def attn_defs(cfg: ModelConfig, reps: int) -> Dict[str, ParamDef]:
+    d, h, kv, dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim_
+    dt = cfg.dtype_
+    defs = {
+        "wq": ParamDef((reps, d, h, dh), ("layers", "embed", "heads",
+                                          "head_dim"), dt, scaled_init(1)),
+        "wk": ParamDef((reps, d, kv, dh), ("layers", "embed", "kv_heads",
+                                           "head_dim"), dt, scaled_init(1)),
+        "wv": ParamDef((reps, d, kv, dh), ("layers", "embed", "kv_heads",
+                                           "head_dim"), dt, scaled_init(1)),
+        "wo": ParamDef((reps, h, dh, d), ("layers", "heads", "head_dim",
+                                          "embed"), dt, scaled_init(1)),
+    }
+    if cfg.qkv_bias:
+        defs["bq"] = ParamDef((reps, h, dh), ("layers", "heads", "head_dim"),
+                              dt, zeros_init())
+        defs["bk"] = ParamDef((reps, kv, dh), ("layers", "kv_heads",
+                                               "head_dim"), dt, zeros_init())
+        defs["bv"] = ParamDef((reps, kv, dh), ("layers", "kv_heads",
+                                               "head_dim"), dt, zeros_init())
+    return defs
+
+
+class AttnCache(NamedTuple):
+    """Ring-buffer KV cache (window = full seq for dense attention, the SWA
+    window for sliding-window layers — the reason long_500k decoding stays
+    O(window) for SWA archs)."""
+    k: jnp.ndarray          # (B, KV, W, Dh)
+    v: jnp.ndarray          # (B, KV, W, Dh)
+    slot_pos: jnp.ndarray   # (B, W) int32 absolute position per slot, -1=empty
+
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int,
+                    dtype=None) -> AttnCache:
+    w = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    kv, dh = cfg.n_kv_heads, cfg.head_dim_
+    dt = dtype or cfg.dtype_
+    return AttnCache(
+        k=jnp.zeros((batch, kv, w, dh), dt),
+        v=jnp.zeros((batch, kv, w, dh), dt),
+        slot_pos=jnp.full((batch, w), -1, jnp.int32),
+    )
+
+
+def _project_qkv(p: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                 positions: jnp.ndarray):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = shard(q, "batch", "act_seq", "heads", "head_dim")
+    k = shard(k, "batch", "act_seq", "kv_heads", "head_dim")
+    v = shard(v, "batch", "act_seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def _gqa_scores(q, k, scale, softcap: float = 0.0):
+    """q: (B,S,H,Dh), k: (B,T,KV,Dh) → scores (B,KV,G,S,T) in f32."""
+    b, s, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, s, kvh, g, dh)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if softcap > 0:
+        scores = softcap * jnp.tanh(scores / softcap)
+    return scores
+
+
+def _attend(scores, v, mask):
+    """scores (B,KV,G,S,T), v (B,T,KV,Dh) → (B,S,H,Dh)."""
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    b, kvh, g, s, t = scores.shape
+    ctx = jnp.einsum("bkgst,btkd->bskgd", probs, v.astype(jnp.float32))
+    return ctx.reshape(b, s, kvh * g, -1)
+
+
+def attention(p: Dict, x: jnp.ndarray, cfg: ModelConfig, *,
+              positions: jnp.ndarray,
+              cache: Optional[AttnCache] = None,
+              cache_index: Optional[jnp.ndarray] = None,
+              ) -> Tuple[jnp.ndarray, Optional[AttnCache]]:
+    """GQA attention.
+
+    Training/prefill: ``cache=None`` → causal (+sliding window) self-attention
+    over ``x``; returns (y, None).  If ``cache`` is given with empty slots and
+    ``cache_index=0`` this is a *prefill* that also fills the cache.
+
+    Decode: ``cache`` holds past KV, ``cache_index`` is the current absolute
+    position (scalar); x has S=1.
+    """
+    b, s, d = x.shape
+    scale = 1.0 / np.sqrt(cfg.head_dim_)
+    q, k, v = _project_qkv(p, x, cfg, positions)
+
+    if cache is None:
+        # self-attention over the sequence, scanned over query chunks so the
+        # live score tensor is (…, chunk, S) not (…, S, S) — at 32k prefill
+        # that is the difference between ~3 GB and 100+ GB per device.
+        qc = cfg.attn_q_chunk or s
+        qc = min(qc, s)
+        while s % qc:
+            qc -= 1
+        nc = s // qc
+        t_pos = positions                                    # (B,T)
+
+        def chunk_attend(q_chunk, pos_chunk):
+            causal = t_pos[:, None, :] <= pos_chunk[:, :, None]
+            if cfg.sliding_window:
+                causal &= t_pos[:, None, :] > (pos_chunk[:, :, None] -
+                                               cfg.sliding_window)
+            mask = causal[:, None, None, :, :]               # (B,1,1,qc,T)
+            scores = _gqa_scores(q_chunk, k, scale, cfg.attn_logit_softcap)
+            return _attend(scores, v, mask)
+
+        if cfg.attn_head_merge:
+            y = _head_merged_attention(q, k, v, positions, cfg, scale, qc)
+        elif nc == 1:
+            y = chunk_attend(q, positions)
+        else:
+            qr = q.reshape(b, nc, qc, q.shape[2], q.shape[3])
+            pr = positions.reshape(b, nc, qc)
+            if cfg.scan_layers:
+                yr = jax.lax.scan(
+                    lambda _, xs: (None, chunk_attend(xs[0], xs[1])),
+                    None,
+                    (jnp.moveaxis(qr, 1, 0), jnp.moveaxis(pr, 1, 0)))[1]
+                y = jnp.moveaxis(yr, 0, 1).reshape(b, s, q.shape[2], -1)
+            else:
+                # unrolled (dry-run cost accounting: scan bodies are costed
+                # once; unrolling restores per-chunk totals)
+                ys = [chunk_attend(qr[:, i], pr[:, i]) for i in range(nc)]
+                y = jnp.stack(ys, 1).reshape(b, s, q.shape[2], -1)
+        new_cache = None
+    else:
+        # decode: scatter this token's K/V into the ring buffer.
+        # Scatter-as-masked-add, NOT dynamic_update_slice: a DUS at a traced
+        # index on the (possibly "model"-sharded) seq dim forces GSPMD to
+        # all-gather the whole cache every step; the one-hot mask is
+        # elementwise over the sharded dim and stays shard-local
+        # (EXPERIMENTS.md §Perf B1: ~50× collective-bytes reduction).
+        w = cache.k.shape[2]
+        slot = (cache_index % w).astype(jnp.int32)
+        k_t = jnp.swapaxes(k, 1, 2)                          # (B,KV,1,Dh)
+        v_t = jnp.swapaxes(v, 1, 2)
+        slot_iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, w, 1), 2)
+        hit = (slot_iota == slot).astype(cache.k.dtype)      # (1,1,W,1)
+        new_k = cache.k * (1 - hit) + k_t * hit
+        new_v = cache.v * (1 - hit) + v_t * hit
+        pos_upd = jnp.broadcast_to(positions[:, :1], (b, 1)).astype(jnp.int32)
+        hit_p = (jax.lax.broadcasted_iota(jnp.int32, (1, w), 1) == slot)
+        new_pos = jnp.where(hit_p, pos_upd, cache.slot_pos)
+        new_cache = AttnCache(new_k, new_v, new_pos)
+
+        t_pos = new_pos                                      # (B,W)
+        valid = t_pos >= 0
+        causal = valid[:, None, :] & (t_pos[:, None, :] <=
+                                      positions[:, :, None])
+        if cfg.sliding_window:
+            causal &= t_pos[:, None, :] > (positions[:, :, None] -
+                                           cfg.sliding_window)
+        mask = causal[:, None, None, :, :]
+        k_all = jnp.swapaxes(new_k, 1, 2)                    # (B,W,KV,Dh)
+        v_all = jnp.swapaxes(new_v, 1, 2)
+        scores = _gqa_scores(q, k_all, scale, cfg.attn_logit_softcap)
+        y = _attend(scores, v_all, mask)
+
+    y = y.astype(x.dtype)
+    y = shard(y, "batch", "act_seq", "heads", "head_dim")
+    out = jnp.einsum("bshk,hkd->bsd", y, p["wo"])
+    return shard(out, "batch", "act_seq", "act_embed"), new_cache
+
+
+
+
+def _head_merged_attention(q, k, v, positions, cfg: ModelConfig,
+                           scale: float, q_chunk: int):
+    """Self-attention with (batch × heads) merged and sharded over the whole
+    mesh ("merged_bh" → ("data","model")).
+
+    The TP fallback for head counts that don't divide the model axis
+    (musicgen: 24 heads, model=16; B·H = 6144 divides 256): attention is
+    embarrassingly parallel over (B, H), so merging the dims recovers full
+    256-way parallelism at the cost of an all-to-all reshard on entry/exit —
+    vs. head_dim-sharding whose score psum is ruinous (EXPERIMENTS.md §Perf
+    A1)."""
+    b, s, h, dh = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    # GQA: repeat K/V to full heads before merging (musicgen is MHA, g=1)
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    qm = q.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    km = k.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    vm = v.transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+    qm = shard(qm, "merged_bh", None, None)
+    km = shard(km, "merged_bh", None, None)
+    vm = shard(vm, "merged_bh", None, None)
+    pos_m = jnp.repeat(positions, h, axis=0)                  # (B·H, S)
+
+    qc = min(q_chunk, s)
+    while s % qc:
+        qc -= 1
+    nc = s // qc
+
+    def chunk(qi, pos_chunk):
+        sc = jnp.einsum("xqd,xtd->xqt", qi.astype(jnp.float32),
+                        km.astype(jnp.float32)) * scale
+        causal = pos_m[:, None, :] <= pos_chunk[:, :, None]
+        if cfg.sliding_window:
+            causal &= pos_m[:, None, :] > (pos_chunk[:, :, None] -
+                                           cfg.sliding_window)
+        sc = jnp.where(causal, sc, -1e30)
+        pr = jax.nn.softmax(sc, axis=-1)
+        return jnp.einsum("xqt,xtd->xqd", pr, vm.astype(jnp.float32))
+
+    if nc == 1:
+        ym = chunk(qm, pos_m)
+    else:
+        qr = qm.reshape(b * h, nc, qc, dh)
+        pr_ = pos_m.reshape(b * h, nc, qc)
+        if cfg.scan_layers:
+            ys = jax.lax.scan(
+                lambda _, xs: (None, chunk(xs[0], xs[1])), None,
+                (jnp.moveaxis(qr, 1, 0), jnp.moveaxis(pr_, 1, 0)))[1]
+            ym = jnp.moveaxis(ys, 0, 1).reshape(b * h, s, dh)
+        else:
+            ys = [chunk(qr[:, i], pr_[:, i]) for i in range(nc)]
+            ym = jnp.stack(ys, 1).reshape(b * h, s, dh)
+    return ym.reshape(b, h, s, dh).transpose(0, 2, 1, 3)
+
+# ---------------------------------------------------------------- dense FFN
+def ffn_defs(cfg: ModelConfig, reps: int) -> Dict[str, ParamDef]:
+    d, f, dt = cfg.d_model, cfg.d_ff, cfg.dtype_
+    if cfg.activation == "swiglu":
+        return {
+            "w_gate": ParamDef((reps, d, f), ("layers", "embed", "mlp"), dt,
+                               scaled_init(1)),
+            "w_up": ParamDef((reps, d, f), ("layers", "embed", "mlp"), dt,
+                             scaled_init(1)),
+            "w_down": ParamDef((reps, f, d), ("layers", "mlp", "embed"), dt,
+                               scaled_init(1)),
+        }
+    return {
+        "w_in": ParamDef((reps, d, f), ("layers", "embed", "mlp"), dt,
+                         scaled_init(1)),
+        "w_out": ParamDef((reps, f, d), ("layers", "mlp", "embed"), dt,
+                          scaled_init(1)),
+    }
+
+
+def dense_ffn(p: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, p["w_gate"]))
+        h = h * jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        h = shard(h, "batch", "act_seq", "mlp")
+        out = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("bsd,df->bsf", x, p["w_in"]))
+        h = shard(h, "batch", "act_seq", "mlp")
+        out = jnp.einsum("bsf,fd->bsd", h, p["w_out"])
+    return shard(out, "batch", "act_seq", "act_embed")
+
+
+# ---------------------------------------------------------------------- MoE
+def moe_defs(cfg: ModelConfig, reps: int) -> Dict[str, ParamDef]:
+    d, dt = cfg.d_model, cfg.dtype_
+    e = cfg.moe_experts
+    f = cfg.moe_d_ff or cfg.d_ff
+    defs = {
+        "router": ParamDef((reps, d, e), ("layers", "embed", "experts"),
+                           jnp.float32, scaled_init(0)),
+        "w_gate": ParamDef((reps, e, d, f), ("layers", "experts", "embed",
+                                             "expert_mlp"), dt,
+                           scaled_init(-2)),
+        "w_up": ParamDef((reps, e, d, f), ("layers", "experts", "embed",
+                                           "expert_mlp"), dt,
+                         scaled_init(-2)),
+        "w_down": ParamDef((reps, e, f, d), ("layers", "experts",
+                                             "expert_mlp", "embed"), dt,
+                           scaled_init(-2)),
+    }
+    return defs
+
+
+def moe_ffn(p: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    """GShard-style capacity-routed top-k MoE (einsum dispatch/combine).
+
+    Tokens are viewed as (groups G, group_size Sg); each expert accepts at
+    most C = Sg·k·cf/E tokens per group (overflow dropped — standard capacity
+    routing).  The dispatch einsum keeps communication GSPMD-friendly:
+    groups shard over ("pod","data"), experts over "model" (EP).
+    """
+    b, s, d = x.shape
+    n = b * s
+    e, k = cfg.moe_experts, cfg.moe_top_k
+    sg = min(cfg.moe_group_size, n)
+    while n % sg:            # largest divisor of n ≤ the configured group
+        sg -= 1
+    g = n // sg
+    cap = int(np.ceil(sg * k * cfg.capacity_factor / e / 4.0) * 4)
+    cap = min(cap, sg)
+
+    xg = x.reshape(g, sg, d)
+    xg = shard(xg, "group", None, "act_embed")
+    logits = jnp.einsum("gsd,de->gse", xg.astype(jnp.float32), p["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, ids = jax.lax.top_k(probs, k)                 # (G,Sg,k)
+    gate_vals = gate_vals / jnp.clip(
+        gate_vals.sum(-1, keepdims=True), 1e-9)              # renormalize
+
+    ddt = cfg.dtype_
+    dispatch = jnp.zeros((g, sg, e, cap), ddt)
+    combine = jnp.zeros((g, sg, e, cap), jnp.float32)
+    counts = jnp.zeros((g, e), jnp.int32)
+    for j in range(k):
+        mask_j = jax.nn.one_hot(ids[:, :, j], e, dtype=jnp.int32)  # (G,Sg,E)
+        pos = jnp.cumsum(mask_j, axis=1) - mask_j + counts[:, None, :]
+        counts = counts + mask_j.sum(axis=1)
+        within = (pos < cap) & (mask_j > 0)
+        pos_oh = jax.nn.one_hot(jnp.where(within, pos, cap), cap,
+                                dtype=jnp.float32)           # (G,Sg,E,C)
+        sel = pos_oh * within[..., None]
+        dispatch = dispatch + sel.astype(ddt)
+        combine = combine + sel * gate_vals[:, :, j][:, :, None, None]
+
+    dispatch = shard(dispatch, "group", None, "experts", None)
+    combine = shard(combine, "group", None, "experts", None)
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xg.astype(ddt))
+    xe = shard(xe, "group", "experts", None, None)
+    if cfg.activation == "swiglu":
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"]))
+        h = h * jnp.einsum("gecd,edf->gecf", xe, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("gecd,edf->gecf", xe, p["w_gate"]))
+    h = shard(h, "group", "experts", None, "expert_mlp")
+    ye = jnp.einsum("gecf,efd->gecd", h, p["w_down"])
+    ye = shard(ye, "group", "experts", None, None)
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(ye.dtype), ye)
+    y = y.reshape(b, s, d).astype(x.dtype)
+    return shard(y, "batch", "act_seq", "act_embed")

@@ -1,0 +1,393 @@
+"""Decoder-LM assembly: param defs, forward, prefill, decode, train/serve steps.
+
+The decoder scans over repeats of ``cfg.block_pattern`` (stacked params,
+one trace per pattern position) — compile time is O(|pattern|), not O(layers),
+which is what keeps the 80-layer/512-device dry-runs tractable.
+
+Steps:
+  * ``forward``      — full causal forward (training, and the prefill body)
+  * ``prefill``      — forward + KV/SSM cache construction
+  * ``decode_step``  — one-token serve step against the cache
+  * ``make_train_step`` / ``make_serve_step`` — jit/pjit-ready closures
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import shard
+from ..optim import GradientTransform, clip_by_global_norm
+from .config import ModelConfig
+from .layers import (AttnCache, apply_norm, attention, attn_defs, dense_ffn,
+                     ffn_defs, init_attn_cache, moe_defs, moe_ffn, norm_defs)
+from .params import (ParamDef, abstract_tree, axes_tree, init_tree,
+                     normal_init, ones_init)
+from .quantize import dequant_tree, dequantize
+from .ssm import (SSMCache, init_ssm_cache, ssd_forward, ssm_decode_step,
+                  ssm_defs)
+
+__all__ = ["model_defs", "init_params", "abstract_params", "param_axes",
+           "forward", "prefill", "decode_step", "cross_entropy",
+           "make_train_step", "make_serve_step", "init_cache", "TrainState"]
+
+
+# ------------------------------------------------------------------- defs
+def _mixer_defs(cfg: ModelConfig, mixer: str, reps: int):
+    if mixer == "attn":
+        return attn_defs(cfg, reps)
+    if mixer == "mamba":
+        return ssm_defs(cfg, reps)
+    raise ValueError(mixer)
+
+
+def _ffn_defs(cfg: ModelConfig, ffn: str, reps: int):
+    if ffn == "dense":
+        return ffn_defs(cfg, reps)
+    if ffn == "moe":
+        return moe_defs(cfg, reps)
+    if ffn == "none":
+        return None
+    raise ValueError(ffn)
+
+
+def model_defs(cfg: ModelConfig) -> Dict:
+    reps = cfg.pattern_repeats
+    defs: Dict[str, Any] = {
+        "embed": ParamDef((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                          cfg.dtype_, normal_init(0.02)),
+        "final_norm": ParamDef((cfg.d_model,), ("embed",), jnp.float32,
+                               ones_init()),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((cfg.d_model, cfg.vocab_size),
+                                   ("embed", "vocab"), cfg.dtype_,
+                                   normal_init(0.02))
+    blocks = []
+    for mixer, ffn in cfg.block_pattern:
+        blk: Dict[str, Any] = {
+            "norm1": norm_defs(cfg, reps),
+            "mixer": _mixer_defs(cfg, mixer, reps),
+        }
+        fd = _ffn_defs(cfg, ffn, reps)
+        if fd is not None:
+            blk["norm2"] = norm_defs(cfg, reps)
+            blk["ffn"] = fd
+        blocks.append(blk)
+    defs["blocks"] = blocks
+    return defs
+
+
+def init_params(cfg: ModelConfig, rng) -> Dict:
+    return init_tree(model_defs(cfg), rng)
+
+
+def abstract_params(cfg: ModelConfig) -> Dict:
+    return abstract_tree(model_defs(cfg))
+
+
+def param_axes(cfg: ModelConfig) -> Dict:
+    return axes_tree(model_defs(cfg))
+
+
+# ------------------------------------------------------------------ blocks
+def _apply_block_position(cfg: ModelConfig, pos: int, bp: Dict,
+                          x: jnp.ndarray, *, positions,
+                          cache=None, cache_index=None,
+                          ssd_chunk: int = 256, want_cache: bool = False,
+                          cache_len: int = 0):
+    """One (mixer, ffn) position of the pattern for one repeat."""
+    mixer, ffn = cfg.block_pattern[pos]
+    new_cache = None
+    h_in = apply_norm(cfg, bp["norm1"]["scale"], x)
+    if mixer == "attn":
+        if cache is not None or not want_cache:
+            y, new_cache = attention(bp["mixer"], h_in, cfg,
+                                     positions=positions, cache=cache,
+                                     cache_index=cache_index)
+        else:
+            # prefill: run self-attention, then build a cache from K/V
+            y, _ = attention(bp["mixer"], h_in, cfg, positions=positions)
+            new_cache = _build_prefill_attn_cache(bp["mixer"], h_in, cfg,
+                                                  positions, cache_len)
+    else:  # mamba
+        if cache is not None:
+            y, new_cache = ssm_decode_step(bp["mixer"], h_in, cache, cfg)
+        else:
+            y, new_cache = ssd_forward(bp["mixer"], h_in, cfg,
+                                       chunk=ssd_chunk,
+                                       return_final_state=want_cache)
+
+    if cfg.parallel_block and ffn != "none":
+        # command-r style: attn and ffn read the same normed input
+        f = (moe_ffn if ffn == "moe" else dense_ffn)(bp["ffn"], h_in, cfg)
+        x = x + y + f
+    else:
+        x = x + y
+        if ffn != "none":
+            h2 = apply_norm(cfg, bp["norm2"]["scale"], x)
+            f = (moe_ffn if ffn == "moe" else dense_ffn)(bp["ffn"], h2, cfg)
+            x = x + f
+    x = shard(x, "batch", "res_seq", "act_embed")
+    return x, new_cache
+
+
+def _build_prefill_attn_cache(p: Dict, h: jnp.ndarray, cfg: ModelConfig,
+                              positions: jnp.ndarray,
+                              max_len: int) -> AttnCache:
+    """Recompute K/V once more cheaply and pack the ring buffer.
+
+    (XLA CSEs the duplicate projections with the attention call above; keeping
+    this separate keeps the training path cache-free.)
+
+    The cache width is ``min(max_len, window)`` — decode continues filling
+    slots at ``pos % width``, so tokens are packed via a cyclic roll here.
+    """
+    b, s, _ = h.shape
+    k = jnp.einsum("bsd,dhk->bshk", h, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, p["wv"])
+    if cfg.qkv_bias:
+        k = k + p["bk"]
+        v = v + p["bv"]
+    from .layers import rope
+    k = rope(k, positions, cfg.rope_theta)
+    w = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    keep = min(s, w)
+    p0 = s - keep                           # first kept absolute position
+    kw = jnp.swapaxes(k[:, -keep:], 1, 2)   # (B,KV,keep,Dh)
+    vw = jnp.swapaxes(v[:, -keep:], 1, 2)
+    pos_keep = positions[:, -keep:].astype(jnp.int32)
+    pad = w - keep
+    if pad:
+        zk = jnp.zeros(kw.shape[:2] + (pad,) + kw.shape[3:], kw.dtype)
+        kw = jnp.concatenate([kw, zk], axis=2)
+        vw = jnp.concatenate([vw, zk], axis=2)
+        pos_keep = jnp.concatenate(
+            [pos_keep, jnp.full((b, pad), -1, jnp.int32)], axis=1)
+    # kept positions p0..s-1 occupy slots (p0..s-1) % w — a contiguous cyclic
+    # range, so packing is a roll by p0 % w.
+    shift = p0 % w
+    kc = jnp.roll(kw, shift, axis=2)
+    vc = jnp.roll(vw, shift, axis=2)
+    pc = jnp.roll(pos_keep, shift, axis=1)
+    return AttnCache(k=kc.astype(cfg.dtype_), v=vc.astype(cfg.dtype_),
+                     slot_pos=pc)
+
+
+# ----------------------------------------------------------------- forward
+def _embed_tokens(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
+                  vision_embeds: Optional[jnp.ndarray]) -> jnp.ndarray:
+    x = jnp.take(dequantize(params["embed"], cfg.dtype_), tokens, axis=0)
+    if cfg.vision_tokens and vision_embeds is not None:
+        nv = vision_embeds.shape[1]
+        x = jnp.concatenate([vision_embeds.astype(x.dtype), x[:, nv:]], axis=1)
+    return shard(x, "batch", "res_seq", "act_embed")
+
+
+def _unembed(params: Dict, cfg: ModelConfig, x: jnp.ndarray) -> jnp.ndarray:
+    x = apply_norm(cfg, params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x,
+                            dequantize(params["embed"], cfg.dtype_))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x,
+                            dequantize(params["lm_head"], cfg.dtype_))
+    return shard(logits, "batch", "act_seq", "vocab")
+
+
+def _scan_blocks(params: Dict, cfg: ModelConfig, x: jnp.ndarray, *,
+                 positions, caches=None, cache_index=None,
+                 ssd_chunk: int = 256, want_cache: bool = False,
+                 cache_len: int = 0):
+    """Scan over pattern repeats.  caches: list (per position) of stacked
+    cache pytrees with leading dim = repeats (or None)."""
+    npos = len(cfg.block_pattern)
+
+    def body(x, xs):
+        blk_params, blk_caches = xs
+        # weight-only int8 serving: dequantize THIS repeat's slice only —
+        # resident params stay int8, one layer's bf16 copy is transient
+        blk_params = dequant_tree(blk_params, cfg.dtype_)
+        new_caches = []
+        for pos in range(npos):
+            cache_p = blk_caches[pos] if blk_caches is not None else None
+            x, nc = _apply_block_position(
+                cfg, pos, blk_params[pos], x, positions=positions,
+                cache=cache_p, cache_index=cache_index,
+                ssd_chunk=ssd_chunk, want_cache=want_cache,
+                cache_len=cache_len)
+            new_caches.append(nc)
+        if not (want_cache or caches is not None):
+            new_caches = None
+        return x, new_caches
+
+    if cfg.remat:
+        if cfg.remat_policy == "dots":
+            body = jax.checkpoint(
+                body, policy=jax.checkpoint_policies.checkpoint_dots)
+        else:
+            body = jax.checkpoint(body)
+
+    xs = (params["blocks"], caches)
+    if cfg.scan_layers:
+        x, ys = jax.lax.scan(body, x, xs)
+        return x, ys
+    # Unrolled path (dry-run flop accounting: XLA cost_analysis counts a
+    # scan body once, not × trip count).  Same math, inlined repeats.
+    reps = cfg.pattern_repeats
+    ys_list = []
+    for r in range(reps):
+        xs_r = jax.tree.map(lambda a: a[r], xs)
+        x, y_r = body(x, xs_r)
+        ys_list.append(y_r)
+    if ys_list and ys_list[0] is not None:
+        ys = jax.tree.map(lambda *a: jnp.stack(a), *ys_list)
+    else:
+        ys = None
+    return x, ys
+
+
+def forward(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray, *,
+            vision_embeds: Optional[jnp.ndarray] = None,
+            ssd_chunk: int = 256) -> jnp.ndarray:
+    """Full causal forward → logits (B, S, V)."""
+    b, s = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = _embed_tokens(params, cfg, tokens, vision_embeds)
+    x, _ = _scan_blocks(params, cfg, x, positions=positions,
+                        ssd_chunk=ssd_chunk)
+    return _unembed(params, cfg, x)
+
+
+# ------------------------------------------------------------------- cache
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> list:
+    """Stacked (per pattern position, leading dim = repeats) cache pytrees."""
+    reps = cfg.pattern_repeats
+    caches = []
+    for mixer, _ in cfg.block_pattern:
+        if mixer == "attn":
+            c = init_attn_cache(cfg, batch, max_len)
+        else:
+            c = init_ssm_cache(cfg, batch)
+        caches.append(jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (reps,) + a.shape), c))
+    return caches
+
+
+def prefill(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray, *,
+            vision_embeds: Optional[jnp.ndarray] = None,
+            ssd_chunk: int = 256, max_len: int = 0):
+    """Forward over the prompt, returning (logits, caches).
+
+    ``max_len`` sizes the KV cache for subsequent decoding (defaults to the
+    prompt length — pass prompt+decode budget for generation)."""
+    b, s = tokens.shape
+    max_len = max_len or s
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32), (b, s))
+    x = _embed_tokens(params, cfg, tokens, vision_embeds)
+    x, caches = _scan_blocks(params, cfg, x, positions=positions,
+                             ssd_chunk=ssd_chunk, want_cache=True,
+                             cache_len=max_len)
+    return _unembed(params, cfg, x), caches
+
+
+def decode_step(params: Dict, cfg: ModelConfig, tokens: jnp.ndarray,
+                caches: list, index: jnp.ndarray):
+    """One serving step: tokens (B, 1) at absolute position ``index``."""
+    b = tokens.shape[0]
+    positions = jnp.broadcast_to(
+        jnp.asarray(index, jnp.int32).reshape(1, 1), (b, 1))
+    x = _embed_tokens(params, cfg, tokens, None)
+    x, new_caches = _scan_blocks(params, cfg, x, positions=positions,
+                                 caches=caches, cache_index=index)
+    return _unembed(params, cfg, x), new_caches
+
+
+# -------------------------------------------------------------------- loss
+def cross_entropy(logits: jnp.ndarray, labels: jnp.ndarray,
+                  mask: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    logits = logits.astype(jnp.float32)
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.clip(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+class TrainState(NamedTuple):
+    params: Dict
+    opt_state: Any
+    step: jnp.ndarray
+
+
+def make_train_step(cfg: ModelConfig, optimizer: GradientTransform, *,
+                    clip_norm: float = 1.0, ssd_chunk: int = 256):
+    """Returns train_step(state, batch, rng) → (state, metrics).
+
+    ``cfg.grad_accum > 1`` splits the global batch into microbatches and
+    accumulates gradients in f32 before one optimizer update — the
+    activation-memory lever when per-device batch × seq blows HBM
+    (EXPERIMENTS.md §Perf C4).
+    """
+
+    def loss_fn(params, batch):
+        logits = forward(params, cfg, batch["tokens"],
+                         vision_embeds=batch.get("vision_embeds"),
+                         ssd_chunk=ssd_chunk)
+        return cross_entropy(logits, batch["labels"], batch.get("mask"))
+
+    def _grads(params, batch):
+        a = cfg.grad_accum
+        if a <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+        micro = jax.tree.map(
+            lambda x: x.reshape((a, x.shape[0] // a) + x.shape[1:]), batch)
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(carry, mb):
+            gsum, lsum = carry
+            loss, g = jax.value_and_grad(loss_fn)(params, mb)
+            gsum = jax.tree.map(
+                lambda acc, x: acc + x.astype(jnp.float32), gsum, g)
+            return (gsum, lsum + loss), None
+
+        if cfg.scan_layers:
+            (gsum, lsum), _ = jax.lax.scan(body, (g0, jnp.float32(0)), micro)
+        else:
+            # unrolled (dry-run cost accounting — scan bodies counted once)
+            carry = (g0, jnp.float32(0))
+            for i in range(a):
+                carry, _ = body(carry, jax.tree.map(lambda x: x[i], micro))
+            gsum, lsum = carry
+        grads = jax.tree.map(lambda g: (g / a), gsum)
+        return lsum / a, grads
+
+    def train_step(state: TrainState, batch: Dict):
+        loss, grads = _grads(state.params, batch)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        updates, opt_state = optimizer.update(grads, state.opt_state,
+                                              state.params)
+        from ..optim import apply_updates
+        params = apply_updates(state.params, updates)
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "step": state.step + 1}
+        return TrainState(params, opt_state, state.step + 1), metrics
+
+    return train_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """Returns serve_step(params, caches, tokens, index) →
+    (next_token, logits, caches) — greedy decode of one token."""
+
+    def serve_step(params, caches, tokens, index):
+        logits, new_caches = decode_step(params, cfg, tokens, caches, index)
+        nxt = jnp.argmax(logits[:, -1, :], axis=-1).astype(jnp.int32)
+        return nxt[:, None], logits, new_caches
+
+    return serve_step

@@ -1,0 +1,88 @@
+"""Declarative parameter definitions.
+
+Every model parameter is declared once as a :class:`ParamDef` (shape, dtype,
+logical axes, initializer).  From one definition tree we derive:
+
+  * ``init_tree``      — materialized parameters (smoke tests, examples)
+  * ``abstract_tree``  — ShapeDtypeStructs (the multi-pod dry-run: no
+                         allocation for 398B-parameter configs)
+  * ``spec_tree``      — jax.sharding.PartitionSpec per param via the logical
+                         → mesh axis rules (distributed/sharding.py)
+
+Logical axis names used across the stack:
+  "embed" (d_model), "vocab", "heads", "kv_heads", "head_dim", "mlp" (d_ff),
+  "experts", "layers" (stacked scan dim), "conv" (ssm conv width),
+  "state" (ssm state) — plus None for replicated dims.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["ParamDef", "init_tree", "abstract_tree", "axes_tree",
+           "normal_init", "zeros_init", "ones_init", "scaled_init"]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]       # logical axis per dim
+    dtype: Any = jnp.bfloat16
+    init: Callable = None                 # (rng, shape, dtype) -> array
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def normal_init(stddev: float = 0.02):
+    def f(rng, shape, dtype):
+        return (jax.random.normal(rng, shape, jnp.float32) * stddev).astype(dtype)
+    return f
+
+
+def scaled_init(fan_in_axis: int = -2):
+    """LeCun-normal-ish: stddev = 1/sqrt(fan_in)."""
+    def f(rng, shape, dtype):
+        fan_in = shape[fan_in_axis] if shape else 1
+        std = 1.0 / np.sqrt(max(1, fan_in))
+        return (jax.random.normal(rng, shape, jnp.float32) * std).astype(dtype)
+    return f
+
+
+def zeros_init():
+    return lambda rng, shape, dtype: jnp.zeros(shape, dtype)
+
+
+def ones_init():
+    return lambda rng, shape, dtype: jnp.ones(shape, dtype)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_tree(defs, rng):
+    """Materialize a ParamDef tree into arrays (deterministic per-leaf keys)."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(rng, len(leaves))
+    vals = []
+    for k, d in zip(keys, leaves):
+        init = d.init or normal_init()
+        vals.append(init(k, d.shape, d.dtype))
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_tree(defs):
+    """ShapeDtypeStruct stand-ins — zero allocation (dry-run path)."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs,
+        is_leaf=_is_def)
+
+
+def axes_tree(defs):
+    """Logical-axes tree matching the param tree structure."""
+    return jax.tree.map(lambda d: d.axes, defs, is_leaf=_is_def)

@@ -1,0 +1,114 @@
+"""Weight-only int8 quantization for serving (EXPERIMENTS.md §Perf B2).
+
+Serving large models is weight-read-bound (jamba-398B: 49.8 GB bf16 weights
+per chip at model=16 — over v5e HBM).  Storing matrix weights as int8 with
+per-output-channel f32 scales halves resident and read bytes; dequantization
+happens per layer inside the decoder scan, so only one layer's bf16 copy is
+ever live (and on TPU the convert fuses into the matmul).
+
+``QTensor`` is a pytree node, so quantized params flow through jit/pjit,
+eval_shape (dry-run) and sharding specs unchanged.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+__all__ = ["QTensor", "quantize_tensor", "dequantize", "quantize_params",
+           "dequant_tree"]
+
+
+class QTensor(NamedTuple):
+    data: jnp.ndarray      # int8, same shape as the original weight
+    scale: jnp.ndarray     # f32, per output channel (last dim)
+
+
+def quantize_tensor(w: jnp.ndarray) -> QTensor:
+    """Symmetric per-output-channel int8 quantization.
+
+    Scales keep the FIRST dim for stacked (layers, …) weights — every leaf
+    must keep its leading scan dim — and the last (output-channel) dim:
+      ndim ≥ 3 → scale (first, last);  ndim == 2 → scale (last,).
+    """
+    w32 = w.astype(jnp.float32)
+    if w.ndim >= 3:
+        red = tuple(range(1, w.ndim - 1))
+    else:
+        red = (0,)
+    amax = jnp.max(jnp.abs(w32), axis=red, keepdims=True)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(w32 / scale), -127, 127).astype(jnp.int8)
+    return QTensor(q, scale.reshape(
+        (w.shape[0], w.shape[-1]) if w.ndim >= 3 else (w.shape[-1],)))
+
+
+def dequantize(x: Any, dtype=jnp.bfloat16) -> Any:
+    if isinstance(x, QTensor):
+        scale = x.scale
+        if scale.ndim == 2 and x.data.ndim >= 3:
+            # (first, last) → (first, 1, …, 1, last)
+            shape = (scale.shape[0],) + (1,) * (x.data.ndim - 2) + \
+                (scale.shape[-1],)
+            scale = scale.reshape(shape)
+        elif scale.ndim == 1:
+            scale = scale.reshape((1,) * (x.data.ndim - 1) +
+                                  (scale.shape[0],))
+        return (x.data.astype(jnp.float32) * scale).astype(dtype)
+    return x
+
+
+def _should_quantize(path: str, leaf) -> bool:
+    # matrix weights only; skip norms/biases/scalars and anything non-float
+    if not hasattr(leaf, "ndim") or leaf.ndim < 2:
+        return False
+    if leaf.dtype not in (jnp.bfloat16, jnp.float32):
+        return False
+    skip = ("norm", "a_log", "dt_bias", "d_skip", "conv_b", "slot_pos")
+    return not any(s in path for s in skip)
+
+
+def quantize_params(params: dict, cfg: ModelConfig) -> dict:
+    """Quantize the block weights + lm_head/embed of a param tree."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree_util.tree_structure(params)
+    out = []
+    for path, leaf in flat:
+        key = "/".join(str(p) for p in path)
+        if _should_quantize(key, leaf):
+            out.append(quantize_tensor(leaf))
+        else:
+            out.append(leaf)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def quantize_spec_tree(abs_params: dict, spec_tree: dict, mesh) -> dict:
+    """Shardings for a quantized param tree: data keeps the original spec,
+    the per-channel scale inherits the last spec component."""
+    from jax.sharding import NamedSharding, PartitionSpec
+    flat_a = jax.tree_util.tree_flatten_with_path(abs_params)[0]
+    flat_s = jax.tree_util.tree_flatten_with_path(spec_tree)[0]
+    treedef = jax.tree_util.tree_structure(spec_tree)
+    out = []
+    for (path, leaf), (_, spec) in zip(flat_a, flat_s):
+        key = "/".join(str(p) for p in path)
+        if _should_quantize(key, leaf):
+            sp = spec.spec
+            if leaf.ndim >= 3:
+                scale_spec = PartitionSpec(sp[0] if len(sp) else None,
+                                           sp[-1] if len(sp) else None)
+            else:
+                scale_spec = PartitionSpec(sp[-1] if len(sp) else None)
+            out.append(QTensor(spec, NamedSharding(mesh, scale_spec)))
+        else:
+            out.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def dequant_tree(tree: Any, dtype=jnp.bfloat16) -> Any:
+    """Dequantize every QTensor in a (sub)tree — applied per scan slice."""
+    return jax.tree.map(lambda x: dequantize(x, dtype), tree,
+                        is_leaf=lambda x: isinstance(x, QTensor))

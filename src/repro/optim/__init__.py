@@ -1,0 +1,9 @@
+from .adamw import adam, adamw, GradientTransform, OptState, apply_updates
+from .schedules import constant, cosine_decay, linear_warmup_cosine
+from .clip import clip_by_global_norm, global_norm
+
+__all__ = [
+    "adam", "adamw", "GradientTransform", "OptState", "apply_updates",
+    "constant", "cosine_decay", "linear_warmup_cosine",
+    "clip_by_global_norm", "global_norm",
+]

@@ -1,0 +1,88 @@
+"""Adam/AdamW in pure JAX (paper §2.5 trains with Adam [13]).
+
+Functional, pytree-generic, jit/pjit-friendly.  State dtype is configurable so
+the big-model configs can trade optimizer-state memory (fp32 vs bf16 moments)
+— a §Perf lever for the memory-roofline term.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray      # () int32
+    mu: PyTree             # first moment
+    nu: PyTree             # second moment
+
+
+@dataclasses.dataclass(frozen=True)
+class GradientTransform:
+    init: Callable[[PyTree], OptState]
+    update: Callable[[PyTree, OptState, Optional[PyTree]], tuple]
+
+
+def _cast_like(tree: PyTree, dtype) -> PyTree:
+    if dtype is None:
+        return tree
+    return jax.tree.map(lambda x: jnp.zeros(x.shape, dtype), tree)
+
+
+def adamw(learning_rate, *, b1: float = 0.9, b2: float = 0.999,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          state_dtype=None) -> GradientTransform:
+    """AdamW.  ``learning_rate`` may be a float or a step→lr callable."""
+
+    def lr_at(step):
+        return learning_rate(step) if callable(learning_rate) else learning_rate
+
+    def init(params: PyTree) -> OptState:
+        zeros = jax.tree.map(
+            lambda p: jnp.zeros(p.shape, state_dtype or p.dtype), params)
+        return OptState(jnp.zeros((), jnp.int32), zeros,
+                        jax.tree.map(jnp.copy, zeros))
+
+    def update(grads: PyTree, state: OptState, params: Optional[PyTree] = None):
+        step = state.step + 1
+        b1c = 1.0 - b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = (b1 * m.astype(jnp.float32) + (1 - b1) * g32)
+            v = (b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32)
+            mhat = m / b1c
+            vhat = v / b2c
+            delta = mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay and p is not None:
+                delta = delta + weight_decay * p.astype(jnp.float32)
+            dt = state_dtype or g.dtype
+            return (-lr_at(step) * delta).astype(p.dtype if p is not None else g.dtype), \
+                m.astype(dt), v.astype(dt)
+
+        p_tree = params if params is not None else grads
+        flat = jax.tree.map(upd, grads, state.mu, state.nu, p_tree)
+        updates = jax.tree.map(lambda t: t[0], flat,
+                               is_leaf=lambda t: isinstance(t, tuple))
+        mu = jax.tree.map(lambda t: t[1], flat,
+                          is_leaf=lambda t: isinstance(t, tuple))
+        nu = jax.tree.map(lambda t: t[2], flat,
+                          is_leaf=lambda t: isinstance(t, tuple))
+        return updates, OptState(step, mu, nu)
+
+    return GradientTransform(init, update)
+
+
+def adam(learning_rate, **kw) -> GradientTransform:
+    """Plain Adam (paper's optimizer) — AdamW with zero decay."""
+    kw.pop("weight_decay", None)
+    return adamw(learning_rate, weight_decay=0.0, **kw)
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)

@@ -1,0 +1,39 @@
+import numpy as np
+import pytest
+
+from repro.core import CompGraph
+
+
+def make_diamond() -> CompGraph:
+    """Small branchy DAG used across unit tests."""
+    g = CompGraph("diamond")
+    g.add_op("in", "Parameter", output_shape=(1, 16), flops=0, bytes_out=64)
+    g.add_op("a", "MatMul", ["in"], (1, 32), flops=2e6, bytes_out=128)
+    g.add_op("b", "MatMul", ["in"], (1, 32), flops=4e6, bytes_out=128)
+    g.add_op("relu_a", "ReLU", ["a"], (1, 32), flops=32, bytes_out=128)
+    g.add_op("relu_b", "ReLU", ["b"], (1, 32), flops=32, bytes_out=128)
+    g.add_op("cat", "Concat", ["relu_a", "relu_b"], (1, 64), flops=0,
+             bytes_out=256)
+    g.add_op("out", "MatMul", ["cat"], (1, 8), flops=1e6, bytes_out=32)
+    return g
+
+
+@pytest.fixture
+def diamond() -> CompGraph:
+    return make_diamond()
+
+
+def random_dag(rng: np.random.Generator, n: int, p: float = 0.15) -> CompGraph:
+    """Random DAG: edge (i, j) for i<j with prob p (guaranteed acyclic)."""
+    g = CompGraph(f"rand{n}")
+    types = ["MatMul", "ReLU", "Concat", "Convolution", "Add"]
+    for i in range(n):
+        g.add_op(f"n{i}", types[int(rng.integers(len(types)))],
+                 output_shape=(1, int(rng.integers(1, 64))),
+                 flops=float(rng.integers(1, 1_000_000)),
+                 bytes_out=float(rng.integers(4, 4096)))
+    for i in range(n):
+        for j in range(i + 1, n):
+            if rng.random() < p:
+                g.add_edge(i, j)
+    return g

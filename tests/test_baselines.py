@@ -1,0 +1,65 @@
+"""Tests for baseline placement methods (§3.3)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import extract_features, FeatureConfig, paper_platform, simulate
+from repro.core.baselines import (BaselineConfig, PlacetoBaseline, RNNBaseline,
+                                  cpu_only, gpu_only, openvino_auto)
+
+from conftest import make_diamond
+
+
+@pytest.fixture(scope="module")
+def env():
+    g = make_diamond()
+    arrays = extract_features(g, FeatureConfig(d_pos=8))
+    plat = paper_platform()
+
+    def reward_fn(p):
+        r = simulate(g, p, plat)
+        return r.reward, r.latency
+
+    return g, arrays, reward_fn
+
+
+def test_single_device_baselines(env):
+    g, _, reward_fn = env
+    assert np.all(cpu_only(g) == 0)
+    assert np.all(gpu_only(g) == 1)
+    p, factor = openvino_auto(g, preference=1)
+    assert np.all(p == 1) and factor > 1.0
+
+
+def test_placeto_baseline_runs(env):
+    g, arrays, reward_fn = env
+    cfg = BaselineConfig(num_devices=2, hidden=16, episodes=3,
+                         samples_per_episode=4)
+    res = PlacetoBaseline(cfg).search(g, arrays, reward_fn,
+                                      rng=jax.random.PRNGKey(0))
+    assert res.best_placement.shape == (g.num_nodes,)
+    assert np.isfinite(res.best_latency)
+    assert len(res.history) == 3
+
+
+def test_rnn_baseline_runs(env):
+    g, arrays, reward_fn = env
+    cfg = BaselineConfig(num_devices=2, hidden=16, episodes=2,
+                         samples_per_episode=4)
+    res = RNNBaseline(cfg).search(g, arrays, reward_fn,
+                                  rng=jax.random.PRNGKey(0))
+    assert res.best_placement.shape == (g.num_nodes,)
+    assert np.isfinite(res.best_latency)
+
+
+def test_learned_baselines_no_worse_than_worst_device(env):
+    g, arrays, reward_fn = env
+    plat = paper_platform()
+    worst = max(simulate(g, cpu_only(g), plat).latency,
+                simulate(g, gpu_only(g), plat).latency)
+    cfg = BaselineConfig(num_devices=2, hidden=16, episodes=4,
+                         samples_per_episode=6)
+    for cls in (PlacetoBaseline, RNNBaseline):
+        res = cls(cfg).search(g, arrays, reward_fn,
+                              rng=jax.random.PRNGKey(1))
+        assert res.best_latency <= worst + 1e-12

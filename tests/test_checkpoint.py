@@ -1,0 +1,86 @@
+"""Checkpoint manager: atomicity, keep-k, async, resume, elastic re-shard."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"a": jax.random.normal(k, (4, 3)),
+            "nested": {"b": jnp.arange(5, dtype=jnp.int32),
+                       "c": jnp.float32(7.5)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    t = _tree()
+    mgr.save(3, t, meta={"loss": 1.25})
+    assert mgr.latest_step() == 3
+    like = jax.tree.map(lambda x: jnp.zeros_like(x), t)
+    r = mgr.restore(3, like)
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(r)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert mgr.manifest(3)["loss"] == 1.25
+
+
+def test_keep_k_prunes(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in range(5):
+        mgr.save(s, _tree(s))
+    assert mgr.all_steps() == [3, 4]
+
+
+def test_async_save(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    t = _tree()
+    for s in range(3):
+        mgr.save(s, t)
+    mgr.wait()
+    assert mgr.latest_step() == 2
+    mgr.close()
+
+
+def test_tmp_dirs_ignored_and_gced(tmp_path):
+    # A crashed save leaves a .tmp dir: it must be invisible and cleaned.
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(1, _tree())
+    crash = os.path.join(str(tmp_path), "step_0000000002.tmp")
+    os.makedirs(crash)
+    assert mgr.latest_step() == 1
+    mgr2 = CheckpointManager(str(tmp_path))
+    assert not os.path.exists(crash)
+    assert mgr2.latest_step() == 1
+
+
+def test_restore_missing_leaf_errors(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    mgr.save(0, {"a": jnp.zeros(3)})
+    with pytest.raises(KeyError):
+        mgr.restore(0, {"a": jnp.zeros(3), "b": jnp.zeros(2)})
+
+
+def test_restore_preserves_dtype(tmp_path):
+    mgr = CheckpointManager(str(tmp_path))
+    t = {"w": jnp.ones((2, 2), jnp.bfloat16)}
+    mgr.save(0, t)
+    r = mgr.restore(0, t)
+    assert r["w"].dtype == jnp.bfloat16
+
+
+def test_elastic_reshard_restore(tmp_path):
+    """Save unsharded, restore with an explicit (single-device) sharding —
+    the re-shard path used when the restoring job has a different mesh."""
+    from jax.sharding import Mesh, NamedSharding, PartitionSpec
+    mgr = CheckpointManager(str(tmp_path))
+    t = {"w": jnp.arange(16, dtype=jnp.float32).reshape(4, 4)}
+    mgr.save(0, t)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("x",))
+    sh = {"w": NamedSharding(mesh, PartitionSpec(None, None))}
+    r = mgr.restore(0, t, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(r["w"]), np.asarray(t["w"]))
+    assert r["w"].sharding == sh["w"]

@@ -1,0 +1,114 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Each assigned arch gets a REDUCED same-family config that runs a real
+forward + train step + decode step on CPU, asserting output shapes and
+no NaNs.  The FULL configs are exercised only via the dry-run
+(ShapeDtypeStruct, no allocation) — see launch/dryrun.py.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import all_archs, get, input_specs, SHAPES
+from repro.models import (TrainState, decode_step, forward, init_params,
+                          make_train_step, prefill)
+from repro.optim import adamw
+
+ARCHS = all_archs()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get(arch).smoke_config
+    rng = jax.random.PRNGKey(0)
+    params = init_params(cfg, rng)
+    b, s = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, s), 0,
+                              cfg.vocab_size)
+    kwargs = {}
+    if cfg.vision_tokens:
+        kwargs["vision_embeds"] = jax.random.normal(
+            jax.random.PRNGKey(2), (b, cfg.vision_tokens, cfg.d_model))
+    logits = forward(params, cfg, toks, ssd_chunk=8, **kwargs)
+    assert logits.shape == (b, s, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), arch
+
+    opt = adamw(1e-3)
+    state = TrainState(params, opt.init(params), jnp.int32(0))
+    step = jax.jit(make_train_step(cfg, opt, ssd_chunk=8))
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1), **kwargs}
+    state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"])), arch
+    state, m2 = step(state, batch)
+    assert float(m2["loss"]) < float(metrics["loss"]) + 1.0  # sane scale
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_consistency(arch):
+    """Serve path: prefill + decode must equal the full forward."""
+    cfg = get(arch).smoke_config
+    if cfg.vision_tokens:
+        pytest.skip("decode smoke uses pure-token prompts")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    b, prompt, total = 2, 8, 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (b, total), 0,
+                              cfg.vocab_size)
+    full = forward(params, cfg, toks, ssd_chunk=4)
+    _, caches = prefill(params, cfg, toks[:, :prompt], ssd_chunk=4,
+                        max_len=total)
+    for t in range(prompt, total):
+        lg, caches = decode_step(params, cfg, toks[:, t:t + 1], caches,
+                                 jnp.int32(t))
+        err = float(jnp.max(jnp.abs(lg[:, 0] - full[:, t])))
+        assert err < 2e-3, (arch, t, err)
+
+
+def test_all_archs_registered():
+    assert len(ARCHS) == 10
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_input_specs_all_shapes(arch):
+    """Every non-skipped (arch × shape) cell has well-formed input specs."""
+    spec = get(arch)
+    for shape_name, shp in SHAPES.items():
+        if shape_name in spec.skip:
+            continue
+        cell = input_specs(arch, shape_name)
+        specs = cell["specs"]
+        assert specs["tokens"].shape[0] == shp.global_batch
+        if shp.kind == "decode":
+            assert specs["tokens"].shape == (shp.global_batch, 1)
+            # KV cache depth covers seq_len (or the SWA window)
+            cfg = spec.config
+            leaves = jax.tree.leaves(specs["caches"])
+            assert leaves, arch
+        else:
+            assert specs["tokens"].shape[1] == shp.seq_len
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_count_within_family_budget(arch):
+    """Full config's analytic param count is within 10% of the advertised
+    size (catches config-entry typos)."""
+    expected = {
+        "mixtral-8x22b": 141e9, "olmoe-1b-7b": 6.9e9,
+        "command-r-plus-104b": 104e9, "phi3-mini-3.8b": 3.8e9,
+        "h2o-danube-1.8b": 1.8e9, "qwen1.5-0.5b": 0.46e9,
+        "mamba2-130m": 0.13e9, "internvl2-76b": 70e9,
+        "jamba-1.5-large-398b": 398e9, "musicgen-medium": 1.4e9,
+    }[arch]
+    n = get(arch).config.num_params()
+    assert abs(n - expected) / expected < 0.10, (arch, n, expected)
+
+
+def test_long_500k_skips_documented():
+    """Exactly the pure full-attention archs skip long_500k."""
+    skippers = {a for a in ARCHS if "long_500k" in get(a).skip}
+    assert skippers == {"olmoe-1b-7b", "command-r-plus-104b",
+                        "phi3-mini-3.8b", "qwen1.5-0.5b", "internvl2-76b",
+                        "musicgen-medium"}
+    for a in ARCHS - skippers if isinstance(ARCHS, set) else \
+            [x for x in ARCHS if x not in skippers]:
+        assert get(a).config.is_subquadratic, a

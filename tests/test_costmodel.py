@@ -1,0 +1,114 @@
+"""Tests for the latency simulator (DESIGN.md §3 reward backend)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (critical_path, paper_platform, simulate,
+                        tpu_stage_platform)
+from repro.core.costmodel import (DeviceSpec, Platform, _uniform_links,
+                                  op_class)
+
+from conftest import make_diamond, random_dag
+
+
+def test_single_device_latency_is_sum_of_op_times(diamond):
+    plat = paper_platform()
+    res = simulate(diamond, np.zeros(diamond.num_nodes, int), plat)
+    # On one device with one queue it would be the serial sum; with multiple
+    # queues it can only be faster.
+    assert res.latency <= res.per_device_busy[0] + 1e-12 or \
+        np.isclose(res.latency, res.per_device_busy[0])
+    assert res.transfer_time == 0.0
+    assert not res.oom
+
+
+def test_makespan_lower_bounded_by_critical_path(diamond):
+    plat = paper_platform()
+    cp = critical_path(diamond, plat)
+    for placement in ([0] * 7, [1] * 7, [0, 1, 0, 1, 0, 1, 0]):
+        res = simulate(diamond, np.array(placement), plat)
+        assert res.latency >= cp - 1e-12
+
+
+def test_cross_device_edges_pay_transfer(diamond):
+    plat = paper_platform()
+    mixed = np.array([0, 0, 1, 0, 1, 0, 0])
+    res = simulate(diamond, mixed, plat)
+    assert res.transfer_time > 0
+
+
+def test_transfer_monotonicity(diamond):
+    """Slower links can never reduce the makespan (property of the model)."""
+    fast = paper_platform()
+    bw, lat = _uniform_links(2, bw=1e9, lat=1e-3)
+    slow = Platform(fast.devices, bw, lat)
+    mixed = np.array([0, 1, 0, 1, 0, 1, 0])
+    assert simulate(diamond, mixed, slow).latency >= \
+        simulate(diamond, mixed, fast).latency
+
+
+def test_reward_is_inverse_latency(diamond):
+    plat = paper_platform()
+    res = simulate(diamond, np.zeros(7, int), plat)
+    assert np.isclose(res.reward, 1.0 / res.latency)
+
+
+def test_oom_gives_zero_reward(diamond):
+    dev = DeviceSpec("tiny", "gpu", 1e12, 1e11, 1e-6, mem_capacity=10.0)
+    bw, lat = _uniform_links(2, 1e9, 1e-6)
+    plat = Platform((dev, dev), bw, lat)
+    res = simulate(diamond, np.zeros(7, int), plat)
+    assert res.oom and res.reward == 0.0
+
+
+def test_data_ops_are_free():
+    from repro.core import CompGraph
+    g = CompGraph("c")
+    g.add_op("w", "Const", output_shape=(1024,), bytes_out=4096)
+    g.add_op("m", "MatMul", ["w"], (1, 4), flops=1e6, bytes_out=16)
+    plat = paper_platform()
+    # Placing the const on the other device must not add transfer time.
+    r1 = simulate(g, np.array([0, 1]), plat)
+    r2 = simulate(g, np.array([1, 1]), plat)
+    assert np.isclose(r1.latency, r2.latency)
+    assert r1.transfer_time == 0.0
+
+
+def test_parallel_queues_speed_up_branches(diamond):
+    base = paper_platform()
+    one_q = DeviceSpec("CPU", "cpu", 1.1e12, 76e9, 1.5e-6, 64e9,
+                       base.devices[0].efficiency, parallel_queues=1)
+    plat1 = Platform((one_q, base.devices[1]), base.link_bw, base.link_latency)
+    p = np.zeros(7, int)
+    assert simulate(diamond, p, base).latency <= \
+        simulate(diamond, p, plat1).latency + 1e-15
+
+
+def test_tpu_stage_platform_shapes():
+    plat = tpu_stage_platform(num_stages=4)
+    assert plat.num_devices == 4
+    assert plat.devices[0].peak_flops == 197e12 * 256
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(3, 25), st.integers(0, 10_000))
+def test_makespan_at_least_busiest_device(n, seed):
+    rng = np.random.default_rng(seed)
+    g = random_dag(rng, n)
+    plat = paper_platform()
+    placement = rng.integers(0, 2, n)
+    res = simulate(g, placement, plat)
+    for d in range(2):
+        q = plat.devices[d].parallel_queues
+        assert res.latency >= res.per_device_busy[d] / q - 1e-12
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(3, 25), st.integers(0, 10_000))
+def test_makespan_at_least_critical_path_random(n, seed):
+    rng = np.random.default_rng(seed)
+    g = random_dag(rng, n)
+    plat = paper_platform()
+    placement = rng.integers(0, 2, n)
+    assert simulate(g, placement, plat).latency >= \
+        critical_path(g, plat) - 1e-12

@@ -1,0 +1,42 @@
+"""Data pipeline: determinism, resumability, label alignment, structure."""
+import numpy as np
+
+from repro.data import DataConfig, SyntheticTokens
+
+
+def test_batches_deterministic_per_step():
+    cfg = DataConfig(vocab_size=101, seq_len=32, global_batch=4, seed=7)
+    a = SyntheticTokens(cfg).batch(5)
+    b = SyntheticTokens(cfg).batch(5)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                  np.asarray(b["tokens"]))
+    np.testing.assert_array_equal(np.asarray(a["labels"]),
+                                  np.asarray(b["labels"]))
+
+
+def test_different_steps_differ():
+    cfg = DataConfig(vocab_size=101, seq_len=32, global_batch=4)
+    src = SyntheticTokens(cfg)
+    a, b = src.batch(0), src.batch(1)
+    assert not np.array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+
+
+def test_labels_are_shifted_tokens():
+    cfg = DataConfig(vocab_size=101, seq_len=16, global_batch=2)
+    batch = SyntheticTokens(cfg).batch(0)
+    t = np.asarray(batch["tokens"])
+    l = np.asarray(batch["labels"])
+    # labels[t] == tokens[t+1] within the underlying sequence
+    np.testing.assert_array_equal(t[:, 1:], l[:, :-1])
+
+
+def test_tokens_in_vocab_and_learnable_structure():
+    cfg = DataConfig(vocab_size=64, seq_len=256, global_batch=2, repeat_p=0.4)
+    batch = SyntheticTokens(cfg).batch(0)
+    t = np.asarray(batch["tokens"])
+    assert t.min() >= 0 and t.max() < 64
+    # repetition structure: adjacent-window repeats far above chance
+    hits = np.mean([
+        t[b, i] in t[b, max(0, i - 8):i]
+        for b in range(2) for i in range(1, 256)])
+    assert hits > 0.3

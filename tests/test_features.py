@@ -1,0 +1,101 @@
+"""Tests for §2.3 feature extraction (Eq. 3–5) incl. fractal dimension."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CompGraph, extract_features, FeatureConfig
+from repro.core.features import (fractal_dimension, one_hot,
+                                 positional_encoding)
+
+from conftest import make_diamond, random_dag
+
+
+def test_one_hot_matches_eq3():
+    out = one_hot(["a", "b", "a", "zz"], ["a", "b", "c"])
+    assert out.shape == (4, 3)
+    np.testing.assert_array_equal(out[0], [1, 0, 0])
+    np.testing.assert_array_equal(out[1], [0, 1, 0])
+    np.testing.assert_array_equal(out[3], [0, 0, 0])  # unknown → zeros
+
+
+def test_positional_encoding_matches_formula():
+    pe = positional_encoding(np.array([0, 1, 7]), d_pos=8)
+    assert pe.shape == (3, 8)
+    # pos 0: sin(0)=0, cos(0)=1 interleaved
+    np.testing.assert_allclose(pe[0, 0::2], 0.0, atol=1e-7)
+    np.testing.assert_allclose(pe[0, 1::2], 1.0, atol=1e-7)
+    # Eq. 5 at pos=7, k=0: sin(7 / 10000^0)
+    np.testing.assert_allclose(pe[2, 0], np.sin(7.0), rtol=1e-6)
+    np.testing.assert_allclose(pe[2, 1], np.cos(7.0), rtol=1e-6)
+
+
+def test_fractal_dimension_path_graph_is_linear():
+    # On a long path, mass N(v, r) ~ r  ⇒  D ≈ 1 at the endpoints.
+    g = CompGraph("path")
+    n = 32
+    for i in range(n):
+        g.add_op(f"n{i}", "Op", [f"n{i-1}"] if i else [])
+    d = fractal_dimension(g)
+    assert d.shape == (n,)
+    np.testing.assert_allclose(d[0], 1.0, atol=0.05)
+    np.testing.assert_allclose(d[-1], 1.0, atol=0.05)
+    # Middle nodes see mass grow ~2r then saturate: D ∈ (0, 1.2]
+    assert np.all(d > 0) and np.all(d < 1.5)
+
+
+def test_fractal_dimension_star_graph():
+    # Star center: all nodes at r=1 → single radius → D=0 by convention.
+    g = CompGraph("star")
+    g.add_op("c", "Op")
+    for i in range(8):
+        g.add_op(f"l{i}", "Op", ["c"])
+    d = fractal_dimension(g)
+    assert d[0] == 0.0
+    # Leaves: r=1 (center) and r=2 (others) → slope log(9/1)/log(2) > 1
+    assert np.all(d[1:] > 1.0)
+
+
+def test_extract_features_blocks(diamond):
+    arr = extract_features(diamond, FeatureConfig(d_pos=8))
+    sl = arr.feature_slices
+    assert set(sl) == {"op_type", "output_shape", "in_degree", "out_degree",
+                       "fractal", "pos_enc"}
+    assert arr.x.shape[0] == diamond.num_nodes
+    assert arr.x.shape[1] == sum(s.stop - s.start for s in sl.values())
+    # op-type block rows are one-hot
+    block = arr.x[:, sl["op_type"]]
+    assert np.all(block.sum(1) == 1.0)
+
+
+def test_ablation_flags_change_width(diamond):
+    full = extract_features(diamond, FeatureConfig(d_pos=8)).x.shape[1]
+    no_shape = extract_features(
+        diamond, FeatureConfig(d_pos=8, use_output_shape=False)).x.shape[1]
+    no_struct = extract_features(
+        diamond, FeatureConfig(d_pos=8, use_structural=False)).x.shape[1]
+    no_id = extract_features(
+        diamond, FeatureConfig(d_pos=8, use_node_id=False)).x.shape[1]
+    assert no_shape < full and no_struct < full and no_id == full - 8
+
+
+def test_shared_vocab_consistent_width(diamond):
+    cfg = FeatureConfig(d_pos=8, op_vocab=("MatMul", "ReLU", "Concat",
+                                           "Parameter", "Convolution"),
+                        in_deg_vocab=tuple(range(8)),
+                        out_deg_vocab=tuple(range(8)))
+    a1 = extract_features(diamond, cfg)
+    g2 = make_diamond()
+    g2.add_op("extra", "ReLU", ["out"], (1, 8), flops=8, bytes_out=32)
+    a2 = extract_features(g2, cfg)
+    assert a1.x.shape[1] == a2.x.shape[1]
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(3, 30), st.integers(0, 10_000))
+def test_features_finite_on_random_dags(n, seed):
+    rng = np.random.default_rng(seed)
+    g = random_dag(rng, n)
+    arr = extract_features(g, FeatureConfig(d_pos=8))
+    assert np.all(np.isfinite(arr.x))
+    # positional ids are a permutation consistent with topo order
+    assert sorted(arr.topo_pos.tolist()) == list(range(n))

@@ -1,0 +1,160 @@
+"""Tests for the Graph Parsing Network (§2.4, Eq. 7–11)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import extract_features, FeatureConfig
+from repro.core.gnn import encoder_apply, encoder_init
+from repro.core.gpn import (edge_scores, gpn_apply, gpn_init, parse_graph,
+                            _connected_components, _dominant_edges)
+
+from conftest import make_diamond, random_dag
+
+
+def _arrays(g):
+    return extract_features(g, FeatureConfig(d_pos=8))
+
+
+def test_edge_scores_in_unit_interval(diamond):
+    arr = _arrays(diamond)
+    rng = jax.random.PRNGKey(0)
+    enc = encoder_init(rng, arr.x.shape[1], 16)
+    gpn = gpn_init(rng, 16)
+    z = encoder_apply(enc, jnp.asarray(arr.x), jnp.asarray(arr.adj))
+    s = edge_scores(gpn, z, jnp.asarray(arr.edges))
+    assert s.shape == (arr.edges.shape[0],)
+    assert np.all((np.asarray(s) > 0) & (np.asarray(s) < 1))
+
+
+def test_dominant_edges_eq9_by_brute_force():
+    rng = np.random.default_rng(3)
+    g = random_dag(rng, 20, p=0.2)
+    e = g.edges
+    scores = rng.random(len(e)).astype(np.float32)
+    kept = np.asarray(_dominant_edges(jnp.asarray(scores), jnp.asarray(e),
+                                      g.num_nodes))
+    # Brute force Eq. 9: edge kept iff it is max-score incident edge of
+    # either endpoint (N = in ∪ out neighbors).
+    node_max = np.full(g.num_nodes, -np.inf)
+    for (s, d), sc in zip(e, scores):
+        node_max[s] = max(node_max[s], sc)
+        node_max[d] = max(node_max[d], sc)
+    expect = np.array([sc >= node_max[s] or sc >= node_max[d]
+                       for (s, d), sc in zip(e, scores)])
+    np.testing.assert_array_equal(kept, expect)
+
+
+def test_connected_components_match_networkx():
+    import networkx as nx
+    rng = np.random.default_rng(7)
+    g = random_dag(rng, 30, p=0.1)
+    e = g.edges
+    retained = rng.random(len(e)) > 0.5
+    labels = np.asarray(_connected_components(
+        jnp.asarray(e), jnp.asarray(retained), g.num_nodes))
+    nxg = nx.Graph()
+    nxg.add_nodes_from(range(g.num_nodes))
+    nxg.add_edges_from([tuple(edge) for edge, r in zip(e.tolist(), retained)
+                        if r])
+    for comp in nx.connected_components(nxg):
+        comp = sorted(comp)
+        # our label = min member index
+        for v in comp:
+            assert labels[v] == comp[0]
+
+
+def test_parse_result_invariants(diamond):
+    arr = _arrays(diamond)
+    rng = jax.random.PRNGKey(1)
+    enc = encoder_init(rng, arr.x.shape[1], 16)
+    gpn = gpn_init(rng, 16)
+    z = encoder_apply(enc, jnp.asarray(arr.x), jnp.asarray(arr.adj))
+    res = gpn_apply(gpn, z, jnp.asarray(arr.edges), jnp.asarray(arr.adj))
+    X = np.asarray(res.assign)
+    # Rows of X are one-hot: every node in exactly one group (Eq. 10).
+    assert np.all(X.sum(1) == 1.0)
+    assert np.all((X == 0) | (X == 1))
+    # A' = XᵀAX binarized, no self loops (Eq. 11).
+    ref = (X.T @ arr.adj @ X > 0).astype(np.float32)
+    np.fill_diagonal(ref, 0.0)
+    np.testing.assert_array_equal(np.asarray(res.pooled_adj), ref)
+    # active slots = occupied columns; num_groups consistent.
+    assert int(res.num_groups) == int(np.asarray(res.active).sum())
+    assert int(res.num_groups) == len(np.unique(np.asarray(res.labels)))
+
+
+def test_parse_pooled_features_sum_members():
+    # With straight-through gating the forward pooled features are exact sums.
+    g = make_diamond()
+    arr = _arrays(g)
+    rng = jax.random.PRNGKey(2)
+    enc = encoder_init(rng, arr.x.shape[1], 8)
+    gpn = gpn_init(rng, 8)
+    z = encoder_apply(enc, jnp.asarray(arr.x), jnp.asarray(arr.adj))
+    res = gpn_apply(gpn, z, jnp.asarray(arr.edges), jnp.asarray(arr.adj))
+    labels = np.asarray(res.labels)
+    pooled = np.asarray(res.pooled_z)
+    zs = np.asarray(z)
+    for c in np.unique(labels):
+        np.testing.assert_allclose(pooled[c], zs[labels == c].sum(0),
+                                   rtol=2e-5, atol=1e-5)
+
+
+def test_groups_are_learned_not_preset():
+    """Different score-producing params ⇒ different numbers of groups."""
+    rng = np.random.default_rng(11)
+    g = random_dag(rng, 40, p=0.08)
+    arr = _arrays(g)
+    counts = set()
+    for seed in range(6):
+        k = jax.random.PRNGKey(seed)
+        enc = encoder_init(k, arr.x.shape[1], 16)
+        gpn = gpn_init(jax.random.fold_in(k, 1), 16)
+        z = encoder_apply(enc, jnp.asarray(arr.x), jnp.asarray(arr.adj))
+        res = gpn_apply(gpn, z, jnp.asarray(arr.edges), jnp.asarray(arr.adj))
+        counts.add(int(res.num_groups))
+    assert len(counts) > 1      # emergent group count
+
+
+def test_gradients_flow_through_scores():
+    g = make_diamond()
+    arr = _arrays(g)
+    k = jax.random.PRNGKey(0)
+    enc = encoder_init(k, arr.x.shape[1], 8)
+    gpn = gpn_init(jax.random.fold_in(k, 1), 8)
+
+    def loss(gpn_params):
+        z = encoder_apply(enc, jnp.asarray(arr.x), jnp.asarray(arr.adj))
+        res = gpn_apply(gpn_params, z, jnp.asarray(arr.edges),
+                        jnp.asarray(arr.adj))
+        return jnp.sum(res.pooled_z ** 2)
+
+    grads = jax.grad(loss)(gpn)
+    norms = [float(jnp.abs(g).sum()) for g in jax.tree.leaves(grads)]
+    assert any(n > 0 for n in norms)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(4, 32), st.integers(0, 1000))
+def test_parse_partition_property(n, seed):
+    """Clusters are exactly the connected components of the Eq.9 edge set."""
+    import networkx as nx
+    rng = np.random.default_rng(seed)
+    g = random_dag(rng, n, p=0.15)
+    arr = _arrays(g)
+    if arr.edges.shape[0] == 0:
+        return
+    scores = jnp.asarray(rng.random(arr.edges.shape[0]).astype(np.float32))
+    res = parse_graph(scores, jnp.asarray(arr.edges),
+                      jnp.zeros((n, 4), jnp.float32), jnp.asarray(arr.adj))
+    kept = np.asarray(res.retained)
+    nxg = nx.Graph()
+    nxg.add_nodes_from(range(n))
+    nxg.add_edges_from([tuple(e) for e, r in zip(arr.edges.tolist(), kept)
+                        if r])
+    labels = np.asarray(res.labels)
+    for comp in nx.connected_components(nxg):
+        comp = sorted(comp)
+        assert all(labels[v] == comp[0] for v in comp)

@@ -1,0 +1,97 @@
+"""Unit + property tests for the CompGraph IR (paper §2.1–2.2, Appendix G)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import CompGraph, topological_order, colocate_chains
+from repro.core.graph import OpNode
+
+from conftest import make_diamond, random_dag
+
+
+def test_adjacency_shape_and_asymmetry(diamond):
+    a = diamond.adjacency()
+    assert a.shape == (7, 7)
+    assert a.sum() == diamond.num_edges
+    assert np.all(np.diag(a) == 0)
+
+
+def test_degrees(diamond):
+    assert diamond.in_degrees()[diamond.index_of("cat")] == 2
+    assert diamond.out_degrees()[diamond.index_of("in")] == 2
+
+
+def test_topological_order_valid(diamond):
+    order = topological_order(diamond)
+    pos = np.empty(diamond.num_nodes, dtype=int)
+    pos[order] = np.arange(diamond.num_nodes)
+    for s, d in diamond.edges:
+        assert pos[s] < pos[d]
+
+
+def test_cycle_detection():
+    g = CompGraph("cyclic")
+    g.add_op("a", "X")
+    g.add_op("b", "X", ["a"])
+    g.add_edge("b", "a")
+    with pytest.raises(ValueError):
+        topological_order(g)
+
+
+def test_duplicate_name_rejected():
+    g = CompGraph("dup")
+    g.add_op("a", "X")
+    with pytest.raises(ValueError):
+        g.add_op("a", "Y")
+
+
+def test_colocate_chains_merges_linear_runs():
+    g = CompGraph("chain")
+    for i in range(5):
+        g.add_op(f"n{i}", "Op", [f"n{i-1}"] if i else [], flops=1.0)
+    coarse, labels = colocate_chains(g)
+    assert coarse.num_nodes == 1           # pure chain collapses fully
+    assert len(set(labels.tolist())) == 1
+    assert coarse.nodes[0].flops == 5.0    # flops aggregate
+
+
+def test_colocate_preserves_branches(diamond):
+    coarse, labels = colocate_chains(diamond)
+    # 'in' has two children: must not merge with either branch head.
+    assert labels[diamond.index_of("in")] not in (
+        labels[diamond.index_of("a")], labels[diamond.index_of("b")])
+    coarse.validate_acyclic()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 40), st.integers(0, 10_000))
+def test_topo_order_property_random_dags(n, seed):
+    rng = np.random.default_rng(seed)
+    g = random_dag(rng, n)
+    order = topological_order(g)
+    pos = np.empty(n, dtype=int)
+    pos[order] = np.arange(n)
+    for s, d in g.edges:
+        assert pos[s] < pos[d]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 40), st.integers(0, 10_000))
+def test_colocation_property_random_dags(n, seed):
+    rng = np.random.default_rng(seed)
+    g = random_dag(rng, n)
+    coarse, labels = colocate_chains(g)
+    # Contraction conserves totals and stays acyclic.
+    assert coarse.num_nodes == len(set(labels.tolist()))
+    assert np.isclose(coarse.flops().sum(), g.flops().sum())
+    coarse.validate_acyclic()
+
+
+def test_subgraph_contraction_majority_type():
+    g = CompGraph("m")
+    g.add_op("a", "MatMul")
+    g.add_op("b", "MatMul", ["a"])
+    g.add_op("c", "ReLU", ["b"])
+    cg = g.subgraph_contraction(np.array([0, 0, 0]))
+    assert cg.num_nodes == 1
+    assert cg.nodes[0].op_type == "MatMul"

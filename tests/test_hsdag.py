@@ -1,0 +1,106 @@
+"""End-to-end tests for the HSDAG framework (Alg. 1) and REINFORCE (Eq. 14)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (HSDAG, HSDAGConfig, extract_features, FeatureConfig,
+                        paper_platform, simulate)
+from repro.core.reinforce import step_weights
+
+from conftest import make_diamond, random_dag
+
+
+def _search(graph, cfg, seed=0):
+    arrays = extract_features(graph, FeatureConfig(d_pos=8))
+    plat = paper_platform()
+
+    def reward_fn(p):
+        r = simulate(graph, p, plat)
+        return r.reward, r.latency
+
+    agent = HSDAG(cfg)
+    return agent, agent.search(graph, arrays, reward_fn,
+                               rng=jax.random.PRNGKey(seed)), plat
+
+
+def test_step_weights_eq14():
+    w = step_weights(np.array([1.0, 2.0, 3.0]), gamma=0.5)
+    np.testing.assert_allclose(w, [1.0, 1.0, 0.75])
+
+
+def test_step_weights_reward_to_go():
+    w = step_weights(np.array([1.0, 1.0]), gamma=0.5, reward_to_go=True)
+    np.testing.assert_allclose(w, [1.5, 1.0])
+
+
+def test_search_beats_worst_single_device(diamond):
+    cfg = HSDAGConfig(num_devices=2, hidden_channel=32, max_episodes=6,
+                      update_timestep=8)
+    _, res, plat = _search(diamond, cfg)
+    cpu = simulate(diamond, np.zeros(7, int), plat).latency
+    gpu = simulate(diamond, np.ones(7, int), plat).latency
+    assert res.best_latency <= max(cpu, gpu) + 1e-12
+    assert len(res.history) == 6
+    assert res.best_placement.shape == (7,)
+    assert set(np.unique(res.best_placement)) <= {0, 1}
+
+
+def test_search_improves_over_episodes(diamond):
+    cfg = HSDAGConfig(num_devices=2, hidden_channel=32, max_episodes=10,
+                      update_timestep=10, use_baseline=True,
+                      normalize_weights=True)
+    _, res, _ = _search(diamond, cfg)
+    first = res.history[0]["mean_reward"]
+    last_best = res.history[-1]["best_latency"]
+    assert np.isfinite(first)
+    assert last_best <= res.history[0]["best_latency"] + 1e-12
+
+
+def test_policy_updates_change_params(diamond):
+    cfg = HSDAGConfig(num_devices=2, hidden_channel=16, max_episodes=2,
+                      update_timestep=5)
+    arrays = extract_features(diamond, FeatureConfig(d_pos=8))
+    plat = paper_platform()
+    agent = HSDAG(cfg)
+    agent.init(jax.random.PRNGKey(0), arrays)
+    before = jax.tree.map(lambda x: np.asarray(x).copy(), agent.params)
+
+    def reward_fn(p):
+        r = simulate(diamond, p, plat)
+        return r.reward, r.latency
+
+    agent.search(diamond, arrays, reward_fn, rng=jax.random.PRNGKey(1))
+    after = agent.params
+    changed = any(
+        not np.allclose(b, np.asarray(a))
+        for b, a in zip(jax.tree.leaves(before), jax.tree.leaves(after)))
+    assert changed
+
+
+def test_greedy_place_deterministic(diamond):
+    cfg = HSDAGConfig(num_devices=2, hidden_channel=16, max_episodes=1,
+                      update_timestep=4)
+    agent, _, _ = _search(diamond, cfg)
+    arrays = extract_features(diamond, FeatureConfig(d_pos=8))
+    p1 = agent.place(arrays)
+    p2 = agent.place(arrays)
+    np.testing.assert_array_equal(p1, p2)
+
+
+def test_multi_device_search():
+    rng = np.random.default_rng(5)
+    g = random_dag(rng, 24, p=0.12)
+    from repro.core import tpu_stage_platform
+    plat = tpu_stage_platform(num_stages=4)
+    arrays = extract_features(g, FeatureConfig(d_pos=8))
+    cfg = HSDAGConfig(num_devices=4, hidden_channel=32, max_episodes=4,
+                      update_timestep=6)
+    agent = HSDAG(cfg)
+
+    def reward_fn(p):
+        r = simulate(g, p, plat)
+        return r.reward, r.latency
+
+    res = agent.search(g, arrays, reward_fn, rng=jax.random.PRNGKey(0))
+    assert res.best_placement.max() <= 3
+    assert np.isfinite(res.best_latency)

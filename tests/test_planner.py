@@ -1,0 +1,62 @@
+"""Planner tests: layer graphs + HSDAG stage assignment (DESIGN.md §3.2)."""
+import numpy as np
+import pytest
+
+from repro.core.planner import (PlacementPlan, _monotone_projection,
+                                layer_graph, plan_stages)
+from repro.core.graph import topological_order
+from repro.core.hsdag import HSDAGConfig
+from repro.configs import get
+
+
+def test_layer_graph_structure():
+    cfg = get("qwen1.5-0.5b").config
+    g = layer_graph(cfg, seq_len=4096, batch=256, kind="train")
+    # embed + 24×(attn + ffn) + unembed
+    assert g.num_nodes == 2 + 24 * 2
+    g.validate_acyclic()
+    assert g.flops().sum() > 0
+
+
+def test_layer_graph_flops_matches_6nd():
+    """Train-kind layer-graph flops ≈ 6·N·D (sanity for roofline)."""
+    cfg = get("phi3-mini-3.8b").config
+    s, b = 4096, 256
+    g = layer_graph(cfg, seq_len=s, batch=b, kind="train")
+    model_flops = 6.0 * cfg.num_params() * s * b
+    total = g.flops().sum()
+    # attention quadratic term makes total > 6ND; stay within 2×
+    assert model_flops * 0.8 < total < model_flops * 2.0, \
+        (total, model_flops)
+
+
+def test_decode_kind_scales_with_batch_not_seq():
+    cfg = get("qwen1.5-0.5b").config
+    g1 = layer_graph(cfg, seq_len=32768, batch=128, kind="decode")
+    g2 = layer_graph(cfg, seq_len=32768, batch=256, kind="decode")
+    assert g2.flops().sum() > 1.5 * g1.flops().sum()
+
+
+def test_monotone_projection():
+    g = layer_graph(get("qwen1.5-0.5b").smoke_config, 64, 2)
+    order = topological_order(g)
+    rng = np.random.default_rng(0)
+    placement = rng.integers(0, 4, g.num_nodes)
+    mono = _monotone_projection(placement, order, 4)
+    seq = mono[order]
+    assert np.all(np.diff(seq) >= 0)          # non-decreasing along topo
+    assert mono.max() <= 3
+
+
+def test_plan_stages_beats_or_matches_even_split():
+    cfg = get("jamba-1.5-large-398b").smoke_config
+    plan = plan_stages(cfg, seq_len=128, batch=4, num_stages=2,
+                       hsdag_cfg=HSDAGConfig(
+                           num_devices=2, max_episodes=4, update_timestep=6,
+                           hidden_channel=32))
+    assert isinstance(plan, PlacementPlan)
+    # RL keeps the best placement seen; even-split is in reach of random
+    # exploration so the plan should not be dramatically worse.
+    assert plan.latency <= plan.baseline_latency * 1.25
+    seq = plan.stage_of_node[topological_order(plan.graph)]
+    assert np.all(np.diff(seq) >= 0)

@@ -1,0 +1,114 @@
+"""Cross-cutting hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import extract_features, FeatureConfig, paper_platform, simulate
+from repro.core.costmodel import op_class
+from repro.core.gpn import gpn_init, gpn_apply
+from repro.core.gnn import encoder_apply, encoder_init
+from repro.optim import adamw, apply_updates, clip_by_global_norm
+
+from conftest import random_dag
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(4, 28), st.integers(0, 500), st.integers(0, 3))
+def test_placement_to_fine_consistency(n, seed, param_seed):
+    """fine placement == coarse placement gathered via labels (X mapping)."""
+    from repro.core.policy import policy_apply, policy_init
+    rng = np.random.default_rng(seed)
+    g = random_dag(rng, n)
+    arr = extract_features(g, FeatureConfig(d_pos=8))
+    k = jax.random.PRNGKey(param_seed)
+    enc = encoder_init(k, arr.x.shape[1], 16)
+    gpn = gpn_init(jax.random.fold_in(k, 1), 16)
+    pol = policy_init(jax.random.fold_in(k, 2), 16, 3)
+    z = encoder_apply(enc, jnp.asarray(arr.x), jnp.asarray(arr.adj))
+    parse = gpn_apply(gpn, z, jnp.asarray(arr.edges), jnp.asarray(arr.adj))
+    out = policy_apply(pol, parse.pooled_z, parse.active, parse.labels,
+                       jax.random.fold_in(k, 3))
+    fine = np.asarray(out.fine_placement)
+    coarse = np.asarray(out.coarse_placement)
+    labels = np.asarray(parse.labels)
+    np.testing.assert_array_equal(fine, coarse[labels])
+    # all nodes in a group share a device (the grouper-placer contract)
+    for c in np.unique(labels):
+        assert len(set(fine[labels == c])) == 1
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(4, 24), st.integers(0, 500))
+def test_simulator_placement_permutation_invariance(n, seed):
+    """Swapping the two identical queues of a device never changes latency;
+    relabeling devices of a symmetric platform permutes busy times."""
+    from repro.core.costmodel import DeviceSpec, Platform, _uniform_links
+    rng = np.random.default_rng(seed)
+    g = random_dag(rng, n)
+    dev = DeviceSpec("d", "gpu", 1e12, 1e11, 1e-6)
+    bw, lat = _uniform_links(2, 1e9, 1e-6)
+    plat = Platform((dev, dev), bw, lat)
+    p = rng.integers(0, 2, n)
+    r1 = simulate(g, p, plat)
+    r2 = simulate(g, 1 - p, plat)
+    assert np.isclose(r1.latency, r2.latency)
+    np.testing.assert_allclose(r1.per_device_busy,
+                               r2.per_device_busy[::-1])
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 4), st.integers(0, 100))
+def test_adamw_descends_quadratic(dim, seed):
+    rng = jax.random.PRNGKey(seed)
+    target = jax.random.normal(rng, (dim,))
+    params = {"w": jnp.zeros((dim,))}
+    opt = adamw(0.1)
+    state = opt.init(params)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    l0 = float(loss(params))
+    for _ in range(50):
+        grads = jax.grad(loss)(params)
+        updates, state = opt.update(grads, state, params)
+        params = apply_updates(params, updates)
+    assert float(loss(params)) < l0 * 0.5 + 1e-6
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(1, 5), st.floats(0.1, 10.0), st.integers(0, 100))
+def test_clip_by_global_norm_bound(nleaves, max_norm, seed):
+    rng = np.random.default_rng(seed)
+    tree = {f"p{i}": jnp.asarray(rng.standard_normal(7).astype(np.float32))
+            for i in range(nleaves)}
+    clipped, norm = clip_by_global_norm(tree, max_norm)
+    from repro.optim import global_norm
+    assert float(global_norm(clipped)) <= max_norm * (1 + 1e-5)
+    if float(norm) <= max_norm:   # no-op when under the bound
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(clipped)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(4, 20), st.integers(0, 300))
+def test_colocated_placement_latency_close_to_expanded(n, seed):
+    """Placing the co-located graph and expanding to the fine graph gives a
+    latency within dispatch-overhead slack of the coarse estimate (the
+    Appendix-G coarsening is cost-faithful)."""
+    from repro.core import colocate_chains
+    rng = np.random.default_rng(seed)
+    g = random_dag(rng, n, p=0.12)
+    coarse, labels = colocate_chains(g)
+    plat = paper_platform()
+    cp = rng.integers(0, 2, coarse.num_nodes)
+    uniq = {lab: i for i, lab in enumerate(sorted(set(labels.tolist())))}
+    fine_placement = np.array([cp[uniq[lab]] for lab in labels])
+    lat_fine = simulate(g, fine_placement, plat).latency
+    lat_coarse = simulate(coarse, cp, plat).latency
+    # same flops, same transfers across boundaries; fine pays more dispatch
+    assert lat_fine >= lat_coarse * 0.5
+    assert lat_fine <= lat_coarse * 3 + n * 40e-6

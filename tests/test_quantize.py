@@ -1,0 +1,65 @@
+"""Weight-only int8 serving (EXPERIMENTS.md §Perf B2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import (ModelConfig, decode_step, forward, init_params,
+                          prefill)
+from repro.models.quantize import (QTensor, dequantize, quantize_params,
+                                   quantize_tensor)
+
+CFG = ModelConfig(name="q", n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                  d_ff=128, vocab_size=97, remat=False, dtype="float32")
+
+
+def test_quantize_tensor_roundtrip_error_bound():
+    w = jax.random.normal(jax.random.PRNGKey(0), (32, 48)) * 0.1
+    q = quantize_tensor(w)
+    assert q.data.dtype == jnp.int8 and q.scale.shape == (48,)
+    err = np.abs(np.asarray(dequantize(q, jnp.float32)) - np.asarray(w))
+    bound = np.abs(np.asarray(w)).max(0) / 254.0 + 1e-8
+    assert np.all(err.max(0) <= bound * 1.01)
+
+
+def test_stacked_weights_keep_scan_dim():
+    w = jax.random.normal(jax.random.PRNGKey(1), (3, 16, 8))
+    q = quantize_tensor(w)
+    assert q.data.shape == (3, 16, 8)
+    assert q.scale.shape == (3, 8)          # leading scan dim preserved
+    deq = np.asarray(dequantize(q, jnp.float32))
+    np.testing.assert_allclose(deq, np.asarray(w), atol=float(
+        np.abs(np.asarray(w)).max() / 100))
+
+
+def test_quantized_forward_close_and_smaller():
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, 97)
+    base = forward(params, CFG, toks)
+    qp = quantize_params(params, CFG)
+    out = forward(qp, CFG, toks)
+    rel = float(jnp.max(jnp.abs(base - out)) / (jnp.max(jnp.abs(base)) + 1e-9))
+    assert rel < 0.05
+    orig = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(params))
+    quant = sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(qp))
+    assert quant < orig / 2.5               # int8 weights (f32 baseline: ~3.8×)
+
+
+def test_quantized_decode_consistent_with_quantized_forward():
+    params = quantize_params(init_params(CFG, jax.random.PRNGKey(0)), CFG)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 14), 0, 97)
+    full = forward(params, CFG, toks)
+    _, caches = prefill(params, CFG, toks[:, :8], max_len=14)
+    for t in range(8, 14):
+        lg, caches = decode_step(params, CFG, toks[:, t:t + 1], caches,
+                                 jnp.int32(t))
+        err = float(jnp.max(jnp.abs(lg[:, 0] - full[:, t])))
+        assert err < 2e-4, (t, err)
+
+
+def test_norms_and_small_params_not_quantized():
+    params = init_params(CFG, jax.random.PRNGKey(0))
+    qp = quantize_params(params, CFG)
+    assert not isinstance(qp["final_norm"], QTensor)
+    assert not isinstance(qp["blocks"][0]["norm1"]["scale"], QTensor)
+    assert isinstance(qp["blocks"][0]["mixer"]["wq"], QTensor)

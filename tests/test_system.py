@@ -1,0 +1,123 @@
+"""End-to-end system behaviour tests (paper pipeline + substrate)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (HSDAG, HSDAGConfig, extract_features, FeatureConfig,
+                        paper_platform, simulate)
+from repro.core.baselines import cpu_only, gpu_only
+from repro.core.executor import MeasuredExecutor
+from repro.graphs import bert_base, inception_v3, resnet50, trace_to_graph
+
+
+@pytest.fixture(scope="module")
+def resnet():
+    return resnet50()
+
+
+def test_paper_benchmark_graph_statistics():
+    """Table 1 regime: node/edge counts and average degree."""
+    stats = {"inception_v3": (inception_v3(), 728, 764),
+             "resnet50": (resnet50(), 396, 411),
+             "bert_base": (bert_base(), 1009, 1071)}
+    for name, (g, pv, pe) in stats.items():
+        g.validate_acyclic()
+        assert 0.55 * pv <= g.num_nodes <= 1.3 * pv, (name, g.num_nodes)
+        assert 1.0 <= g.avg_degree() <= 1.15, (name, g.avg_degree())
+
+
+def test_calibration_matches_paper_ordering():
+    """GPU-only gain: inception ≪ resnet ≈ bert (paper Table 2 pattern)."""
+    plat = paper_platform()
+    gains = {}
+    for name, g in (("inception", inception_v3()), ("resnet", resnet50()),
+                    ("bert", bert_base())):
+        cpu = simulate(g, cpu_only(g), plat).latency
+        gpu = simulate(g, gpu_only(g), plat).latency
+        gains[name] = (cpu - gpu) / cpu
+    assert gains["inception"] < 0.25
+    assert gains["resnet"] > 0.45
+    assert gains["bert"] > 0.45
+
+
+def test_hsdag_end_to_end_beats_cpu(resnet):
+    arrays = extract_features(resnet, FeatureConfig(d_pos=16))
+    plat = paper_platform()
+
+    def reward_fn(p):
+        r = simulate(resnet, p, plat)
+        return r.reward, r.latency
+
+    agent = HSDAG(HSDAGConfig(num_devices=2, max_episodes=4,
+                              update_timestep=8, use_baseline=True,
+                              normalize_weights=True))
+    res = agent.search(resnet, arrays, reward_fn,
+                       rng=jax.random.PRNGKey(0))
+    cpu = simulate(resnet, cpu_only(resnet), plat).latency
+    assert res.best_latency < cpu
+    # learned grouping is non-trivial: fewer groups than nodes
+    assert 1 < res.history[-1]["mean_groups"] < resnet.num_nodes
+
+
+def test_measured_executor_runs_real_graph(diamond):
+    """The paper-faithful measured-latency path executes on jax devices."""
+    ex = MeasuredExecutor(diamond, warmup=1, timed=2)
+    reward, latency = ex(np.zeros(diamond.num_nodes, dtype=int))
+    assert latency > 0 and reward == pytest.approx(1.0 / latency)
+    # a different placement also executes (transfers path)
+    reward2, latency2 = ex(np.arange(diamond.num_nodes) % 2)
+    assert latency2 > 0
+
+
+def test_jaxpr_tracer_builds_placeable_graph():
+    """Any jitted JAX function → CompGraph → HSDAG-placeable."""
+    def fn(x, w1, w2):
+        h = jnp.tanh(x @ w1)
+        return jax.nn.softmax(h @ w2)
+
+    g = trace_to_graph(fn, jnp.zeros((4, 16)), jnp.zeros((16, 32)),
+                       jnp.zeros((32, 8)), name="mlp")
+    assert g.num_nodes >= 5
+    g.validate_acyclic()
+    plat = paper_platform()
+    res = simulate(g, np.zeros(g.num_nodes, int), plat)
+    assert np.isfinite(res.latency) and res.latency > 0
+
+
+def test_full_stack_train_ckpt_resume(tmp_path):
+    """Train → checkpoint → restart → bitwise-identical continuation."""
+    from repro.checkpoint import CheckpointManager
+    from repro.data import DataConfig, SyntheticTokens
+    from repro.models import (ModelConfig, TrainState, init_params,
+                              make_train_step)
+    from repro.optim import adamw
+
+    cfg = ModelConfig(name="mini", n_layers=2, d_model=64, n_heads=4,
+                      n_kv_heads=4, d_ff=128, vocab_size=128, remat=False,
+                      dtype="float32")
+    opt = adamw(1e-3)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+    data = SyntheticTokens(DataConfig(vocab_size=128, seq_len=32,
+                                      global_batch=4, seed=5))
+    mgr = CheckpointManager(str(tmp_path))
+
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    state = TrainState(params, opt.init(params), jnp.int32(0))
+    losses_a = []
+    for step in range(8):
+        state, m = step_fn(state, data.batch(step))
+        losses_a.append(float(m["loss"]))
+        if step == 3:
+            mgr.save(4, state)
+
+    # "crash" and restart from step 4
+    params2 = init_params(cfg, jax.random.PRNGKey(0))
+    state2 = TrainState(params2, opt.init(params2), jnp.int32(0))
+    state2 = mgr.restore(4, state2)
+    losses_b = []
+    for step in range(4, 8):
+        state2, m = step_fn(state2, data.batch(step))
+        losses_b.append(float(m["loss"]))
+    np.testing.assert_array_equal(np.asarray(losses_a[4:]),
+                                  np.asarray(losses_b))
