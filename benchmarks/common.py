@@ -41,17 +41,28 @@ def reward_fn_for(graph, platform=None):
 
 def run_hsdag(graph, arrays=None, feature_cfg: FeatureConfig = None,
               episodes: int = None, seed: int = 0,
-              platform=None) -> Tuple[np.ndarray, float, float]:
-    """→ (placement, latency_s, wall_s)."""
+              platform=None, batch_chains: int = 1,
+              num_devices: int = 2) -> Tuple[np.ndarray, float, float]:
+    """→ (placement, latency_s, wall_s).
+
+    ``batch_chains > 1`` switches to the batched multi-chain engine with the
+    fused in-jit cost model (rewards computed device-side by ``simulate_jax``
+    — no host round-trip per rollout step).
+    """
     fc = feature_cfg or FeatureConfig(d_pos=16)
     arrays = arrays if arrays is not None else extract_features(graph, fc)
-    reward_fn, _ = reward_fn_for(graph, platform)
     agent = HSDAG(HSDAGConfig(
-        num_devices=2, max_episodes=episodes or EPISODES,
+        num_devices=num_devices, max_episodes=episodes or EPISODES,
         update_timestep=UPDATE_TIMESTEP, use_baseline=True,
-        normalize_weights=True, seed=seed))
-    res = agent.search(graph, arrays, reward_fn,
-                       rng=jax.random.PRNGKey(seed))
+        normalize_weights=True, seed=seed, batch_chains=batch_chains))
+    if batch_chains > 1:
+        res = agent.search(graph, arrays,
+                           platform=platform or paper_platform(),
+                           rng=jax.random.PRNGKey(seed))
+    else:
+        reward_fn, _ = reward_fn_for(graph, platform)
+        res = agent.search(graph, arrays, reward_fn,
+                           rng=jax.random.PRNGKey(seed))
     return res.best_placement, res.best_latency, res.wall_time_s
 
 

@@ -16,6 +16,7 @@ import table2_placement
 import table3_ablation
 import table4_downstream
 import table5_complexity
+import table6_throughput
 
 
 def _roofline_rows() -> None:
@@ -42,6 +43,7 @@ def main() -> None:
     table3_ablation.main()
     table4_downstream.main()
     table5_complexity.main()
+    table6_throughput.main()
     _roofline_rows()
 
 

@@ -1,0 +1,106 @@
+"""Table 6 (repo-local): rollout-engine throughput — placements evaluated/sec.
+
+Two measurements per graph, each scalar-vs-batched:
+
+* ``rollout_throughput_sim_*``   — the reward source alone: host Python
+  list-scheduler ``simulate`` vs the jitted+vmapped ``simulate_batch``.
+* ``rollout_throughput_search_*`` — the full RL loop (Alg. 1): per-step
+  host-reward scalar engine vs the fused B-chain engine with in-jit rewards.
+  Steady-state rate (first, compile-bearing episode dropped).
+
+Rows land in ``BENCH_*.json`` so the scalar→batched speedup is
+regression-checkable.  Env knobs: ``REPRO_BENCH_CHAINS`` (default 16),
+``REPRO_BENCH_THROUGHPUT_GRAPHS`` (csv; default inception_v3 — the search
+measurement is minutes-per-graph), ``REPRO_BENCH_THROUGHPUT_EPISODES``
+(default 3).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core import (HSDAG, HSDAGConfig, FeatureConfig, extract_features,
+                        paper_platform, simulate, simulate_batch)
+from repro.graphs import PAPER_BENCHMARKS
+
+from common import emit
+
+CHAINS = int(os.environ.get("REPRO_BENCH_CHAINS", "16"))
+SEARCH_GRAPHS = os.environ.get(
+    "REPRO_BENCH_THROUGHPUT_GRAPHS", "inception_v3").split(",")
+SEARCH_EPISODES = int(os.environ.get("REPRO_BENCH_THROUGHPUT_EPISODES", "3"))
+SEARCH_TIMESTEP = int(os.environ.get("REPRO_BENCH_THROUGHPUT_TIMESTEP", "10"))
+
+
+def _sim_rates(graph, plat, budget_s: float = 2.0):
+    rng = np.random.default_rng(0)
+    batch = rng.integers(0, 2, size=(CHAINS, graph.num_nodes))
+    simulate_batch(graph, batch, plat)          # warm the jit cache
+
+    t0 = time.perf_counter()
+    n = 0
+    while time.perf_counter() - t0 < budget_s:
+        simulate(graph, batch[n % CHAINS], plat)
+        n += 1
+    scalar = n / (time.perf_counter() - t0)
+
+    t0 = time.perf_counter()
+    n = 0
+    while time.perf_counter() - t0 < budget_s:
+        simulate_batch(graph, batch, plat)
+        n += CHAINS
+    batched = n / (time.perf_counter() - t0)
+    return scalar, batched
+
+
+def _search_rate(graph, arrays, plat, batch_chains: int) -> float:
+    """Steady-state placements/sec of one search (compile episode dropped)."""
+    cfg = HSDAGConfig(num_devices=2, max_episodes=SEARCH_EPISODES,
+                      update_timestep=SEARCH_TIMESTEP,
+                      batch_chains=batch_chains)
+    agent = HSDAG(cfg)
+    if batch_chains > 1:
+        res = agent.search(graph, arrays, platform=plat,
+                           rng=jax.random.PRNGKey(0))
+    else:
+        def reward_fn(p):
+            r = simulate(graph, p, plat)
+            return r.reward, r.latency
+        res = agent.search(graph, arrays, reward_fn,
+                           rng=jax.random.PRNGKey(0), engine="scalar")
+    walls = [h["wall_s"] for h in res.history[1:]] or \
+        [h["wall_s"] for h in res.history]
+    return SEARCH_TIMESTEP * batch_chains * len(walls) / sum(walls)
+
+
+def main() -> None:
+    plat = paper_platform()
+    for name, build in PAPER_BENCHMARKS.items():
+        graph = build()
+        scalar, batched = _sim_rates(graph, plat)
+        emit(f"rollout_throughput_sim_{name}_scalar", 1e6 / scalar,
+             f"evals_per_s={scalar:.1f}")
+        emit(f"rollout_throughput_sim_{name}_b{CHAINS}", 1e6 / batched,
+             f"evals_per_s={batched:.1f};speedup={batched / scalar:.2f}x")
+
+    for name in SEARCH_GRAPHS:
+        if name not in PAPER_BENCHMARKS:
+            continue
+        graph = PAPER_BENCHMARKS[name]()
+        arrays = extract_features(graph, FeatureConfig(d_pos=16))
+        scalar = _search_rate(graph, arrays, plat, 1)
+        batched = _search_rate(graph, arrays, plat, CHAINS)
+        emit(f"rollout_throughput_search_{name}_scalar", 1e6 / scalar,
+             f"evals_per_s={scalar:.2f}")
+        emit(f"rollout_throughput_search_{name}_b{CHAINS}", 1e6 / batched,
+             f"evals_per_s={batched:.2f};speedup={batched / scalar:.2f}x")
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    print("name,us_per_call,derived")
+    main()

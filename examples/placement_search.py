@@ -23,6 +23,9 @@ from repro.graphs import bert_base
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--episodes", type=int, default=10)
+    ap.add_argument("--chains", type=int, default=8,
+                    help="parallel rollout chains (B); rewards are computed "
+                         "inside the jitted rollout by simulate_jax")
     args = ap.parse_args()
 
     # ---- Part 1: the paper's experiment (BERT, heterogeneous host) ----
@@ -30,15 +33,14 @@ def main():
     arrays = extract_features(graph, FeatureConfig(d_pos=16))
     platform = paper_platform()
 
-    def reward_fn(p):
-        r = simulate(graph, p, platform)
-        return r.reward, r.latency
-
     agent = HSDAG(HSDAGConfig(num_devices=2, max_episodes=args.episodes,
                               update_timestep=10, use_baseline=True,
-                              normalize_weights=True))
-    res = agent.search(graph, arrays, reward_fn, rng=jax.random.PRNGKey(0),
-                       verbose=True)
+                              normalize_weights=True,
+                              batch_chains=args.chains))
+    res = agent.search(graph, arrays, platform=platform,
+                       rng=jax.random.PRNGKey(0), verbose=True)
+    print(f"evaluated {res.num_evaluations} placements "
+          f"at {res.evals_per_sec:.1f}/s ({args.chains} chains)")
     cpu = simulate(graph, cpu_only(graph), platform).latency
     print(f"\nBERT: CPU-only {cpu*1e3:.3f} ms → HSDAG "
           f"{res.best_latency*1e3:.3f} ms "

@@ -36,11 +36,18 @@ import numpy as np
 __all__ = ["CheckpointManager"]
 
 
+def _keystr_simple(p) -> str:
+    """``jax.tree_util.keystr(..., simple=True)`` for jax 0.4.x too."""
+    for attr in ("key", "idx", "name"):
+        if hasattr(p, attr):
+            return str(getattr(p, attr))
+    return str(p)
+
+
 def _flatten(tree) -> Dict[str, np.ndarray]:
     flat = {}
     for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
-        key = "/".join(jax.tree_util.keystr((p,), simple=True)
-                       for p in path)
+        key = "/".join(_keystr_simple(p) for p in path)
         arr = np.asarray(leaf)
         if arr.dtype == jnp.bfloat16:
             # npz has no bf16: widen losslessly; restore casts back via the
@@ -54,8 +61,7 @@ def _unflatten(tree_like, flat: Dict[str, np.ndarray]):
     paths = jax.tree_util.tree_flatten_with_path(tree_like)[0]
     leaves = []
     for path, leaf in paths:
-        key = "/".join(jax.tree_util.keystr((p,), simple=True)
-                       for p in path)
+        key = "/".join(_keystr_simple(p) for p in path)
         if key not in flat:
             raise KeyError(f"checkpoint missing leaf {key!r}")
         arr = flat[key]

@@ -3,7 +3,9 @@ from .graph import CompGraph, OpNode, topological_order, colocate_chains
 from .features import (FeatureConfig, GraphArrays, extract_features,
                        fractal_dimension, positional_encoding)
 from .costmodel import (DeviceSpec, Platform, SimResult, simulate,
-                        paper_platform, tpu_stage_platform, critical_path)
+                        SimArrays, sim_arrays, simulate_jax, simulate_batch,
+                        BatchSimResult, paper_platform, tpu_stage_platform,
+                        critical_path)
 from .hsdag import HSDAG, HSDAGConfig, SearchResult
 
 __all__ = [
@@ -11,6 +13,8 @@ __all__ = [
     "FeatureConfig", "GraphArrays", "extract_features",
     "fractal_dimension", "positional_encoding",
     "DeviceSpec", "Platform", "SimResult", "simulate",
+    "SimArrays", "sim_arrays", "simulate_jax", "simulate_batch",
+    "BatchSimResult",
     "paper_platform", "tpu_stage_platform", "critical_path",
     "HSDAG", "HSDAGConfig", "SearchResult",
 ]

@@ -17,7 +17,8 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import List, Optional, Sequence, Tuple
+import weakref
+from typing import List, NamedTuple, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -26,6 +27,8 @@ from .graph import CompGraph, topological_order
 __all__ = [
     "DeviceSpec", "Platform", "simulate", "SimResult",
     "paper_platform", "tpu_stage_platform", "critical_path",
+    "SimArrays", "sim_arrays", "simulate_jax", "simulate_batch",
+    "BatchSimResult",
 ]
 
 
@@ -245,6 +248,243 @@ def simulate(g: CompGraph, placement: Sequence[int], platform: Platform,
         busy[d] += dur
     latency = float(finish.max()) if n else 0.0
     return SimResult(latency, busy, float(transfer_total), oom)
+
+
+# --------------------------------------------------------------------------
+# Vectorized simulator: precompiled graph cache + jit/vmap makespan kernel.
+#
+# ``simulate`` above is the reference list-scheduler; it runs one placement at
+# a time on the host.  The RL search evaluates thousands of placements, so the
+# hot path is ``simulate_jax``: everything placement-independent (topo order,
+# padded predecessor table, per-(device, op) durations with class efficiency /
+# eff-hints / dispatch folded in, link constants) is precomputed once per
+# (graph, platform) into a :class:`SimArrays`, and the makespan is a
+# ``lax.scan`` over topologically-ordered node slots with a padded-predecessor
+# max for readiness.  The scan walks nodes in the *same order* as the Python
+# scheduler (device queues are stateful, so within-level order matters for
+# exactness); topo levels are still precomputed for stats and for a future
+# level-parallel kernel.  ``jax.vmap`` over the placement axis gives
+# ``simulate_batch`` — B placements per device dispatch instead of one per
+# Python call.
+# --------------------------------------------------------------------------
+
+
+class SimArrays(NamedTuple):
+    """Placement-independent dense view of one (graph, platform) pair.
+
+    All fields are arrays so the tuple is a pytree (safe to close over or pass
+    through ``jax.jit``); static sizes are recovered from shapes.  Shapes:
+    V nodes, P = max in-degree (≥1), D devices, Q = max parallel queues.
+    """
+
+    order: np.ndarray        # (V,) i32 — topological order
+    preds: np.ndarray        # (V, P) i32 — row i: preds of node order[i], pad=V
+    levels: np.ndarray       # (V,) i32 — topo level per node
+    op_time: np.ndarray      # (D, V) f32 — per-op duration per device (0=data)
+    bytes_out: np.ndarray    # (V+1,) f32 — bytes emitted; 0 at the pad slot
+    is_data: np.ndarray      # (V+1,) bool — "data"-class ops; True at pad
+    inv_bw: np.ndarray       # (D, D) f32 — 1/link_bw, 0 on the diagonal
+    lat: np.ndarray          # (D, D) f32 — link latency, 0 on the diagonal
+    mem_capacity: np.ndarray  # (D,) f32
+    queue_init: np.ndarray   # (D, Q) f32 — 0 for real queues, +inf for masked
+
+    @property
+    def num_nodes(self) -> int:
+        return int(self.order.shape[0])
+
+    @property
+    def num_devices(self) -> int:
+        return int(self.op_time.shape[0])
+
+
+def _build_sim_arrays(g: CompGraph, platform: Platform) -> SimArrays:
+    n = g.num_nodes
+    order = topological_order(g).astype(np.int32)
+    preds: List[List[int]] = [[] for _ in range(n)]
+    for s, d in g.edges:
+        preds[int(d)].append(int(s))
+
+    p_max = max([len(p) for p in preds], default=0) or 1
+    pred_tab = np.full((n, p_max), n, dtype=np.int32)       # pad = sentinel n
+    for i, v in enumerate(order):
+        pv = preds[int(v)]
+        pred_tab[i, :len(pv)] = pv
+
+    levels = np.zeros(n, dtype=np.int32)
+    for v in order:
+        v = int(v)
+        if preds[v]:
+            levels[v] = 1 + max(levels[u] for u in preds[v])
+
+    flops = g.flops()
+    byts = g.bytes_out()
+    classes = [op_class(node.op_type) for node in g.nodes]
+    ndev = platform.num_devices
+    op_time = np.zeros((ndev, n), dtype=np.float64)
+    for d, dev in enumerate(platform.devices):
+        for v in range(n):
+            op_time[d, v] = _op_time(flops[v], byts[v], dev, classes[v],
+                                     _eff_hint(g.nodes[v], dev))
+
+    q_max = max(max(1, dev.parallel_queues) for dev in platform.devices)
+    queue_init = np.full((ndev, q_max), np.inf, dtype=np.float32)
+    for d, dev in enumerate(platform.devices):
+        queue_init[d, :max(1, dev.parallel_queues)] = 0.0
+
+    inv_bw = np.where(np.isfinite(platform.link_bw),
+                      1.0 / platform.link_bw, 0.0)
+    np.fill_diagonal(inv_bw, 0.0)
+
+    return SimArrays(
+        order=order,
+        preds=pred_tab,
+        levels=levels,
+        op_time=op_time.astype(np.float32),
+        bytes_out=np.concatenate([byts, [0.0]]).astype(np.float32),
+        is_data=np.asarray([c == "data" for c in classes] + [True]),
+        inv_bw=inv_bw.astype(np.float32),
+        lat=platform.link_latency.astype(np.float32),
+        mem_capacity=np.asarray(
+            [dev.mem_capacity for dev in platform.devices], np.float32),
+        queue_init=queue_init,
+    )
+
+
+# graph → {(graph fingerprint, platform fingerprint): SimArrays}.  WeakKey so
+# dropping a graph drops its cache; platforms are hashed by value (DeviceSpec
+# is a frozen dataclass, link matrices by content).  The graph fingerprint
+# (topology + flops/bytes) catches post-cache mutation via add_edge/add_op;
+# in-place ``node.meta`` eff-hint edits are NOT detected — rebuild the graph
+# instead of mutating hints.
+_SIM_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+# One jitted+vmapped kernel shared by every cache entry: SimArrays is a
+# pytree *argument*, so XLA compilations are reused across all graphs and
+# platforms with matching array shapes.
+_BATCH_SIM_FN = None
+
+
+def _batch_sim_fn():
+    global _BATCH_SIM_FN
+    if _BATCH_SIM_FN is None:
+        import jax
+        _BATCH_SIM_FN = jax.jit(jax.vmap(simulate_jax, in_axes=(None, 0)))
+    return _BATCH_SIM_FN
+
+
+def _cache_key(g: CompGraph, platform: Platform):
+    return (g.num_nodes, g.num_edges, g.edges.tobytes(),
+            g.flops().tobytes(), g.bytes_out().tobytes(),
+            platform.devices, platform.link_bw.tobytes(),
+            platform.link_latency.tobytes())
+
+
+def sim_arrays(g: CompGraph, platform: Platform) -> SimArrays:
+    """The precompiled (cached) dense view used by ``simulate_jax``."""
+    per_graph = _SIM_CACHE.setdefault(g, {})
+    key = _cache_key(g, platform)
+    sa = per_graph.get(key)
+    if sa is None:
+        sa = per_graph[key] = _build_sim_arrays(g, platform)
+    return sa
+
+
+class SimJaxResult(NamedTuple):
+    latency: "jnp.ndarray"           # () f32 — makespan, seconds
+    reward: "jnp.ndarray"            # () f32 — 1/latency, 0 on OOM
+    oom: "jnp.ndarray"               # () bool
+    per_device_busy: "jnp.ndarray"   # (D,) f32
+    transfer_time: "jnp.ndarray"     # () f32
+
+
+def simulate_jax(sa: SimArrays, placement) -> SimJaxResult:
+    """Pure-``jax.numpy`` makespan kernel — jit- and vmap-compatible.
+
+    Matches :func:`simulate` node for node (same list-scheduling decisions,
+    same queue argmin tie-breaks); only f32-vs-f64 rounding separates them.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    n = sa.order.shape[0]
+    ndev = sa.op_time.shape[0]
+    placement = jnp.asarray(placement, jnp.int32)
+    bytes_out = jnp.asarray(sa.bytes_out)
+    is_data = jnp.asarray(sa.is_data)
+    op_time = jnp.asarray(sa.op_time)
+    inv_bw = jnp.asarray(sa.inv_bw)
+    lat = jnp.asarray(sa.lat)
+
+    dev_bytes = jnp.zeros(ndev).at[placement].add(bytes_out[:n])
+    oom = jnp.any(dev_bytes > jnp.asarray(sa.mem_capacity))
+
+    dur_all = op_time[placement, jnp.arange(n)]              # (V,) 0 for data
+    busy = jnp.zeros(ndev).at[placement].add(dur_all)
+
+    place_pad = jnp.concatenate([placement, jnp.zeros(1, jnp.int32)])
+
+    def step(carry, xs):
+        finish, queues, transfer = carry
+        v, pv = xs                                    # node id, (P,) pred ids
+        d = placement[v]
+        pd = place_pad[pv]
+        tx = jnp.where(is_data[pv] | (pd == d), 0.0,
+                       bytes_out[pv] * inv_bw[pd, d] + lat[pd, d])
+        ready = jnp.max(finish[pv] + tx, initial=0.0)
+        q_row = queues[d]
+        q = jnp.argmin(q_row)
+        fin = jnp.maximum(ready, q_row[q]) + op_time[d, v]
+        data_v = is_data[v]
+        finish = finish.at[v].set(jnp.where(data_v, 0.0, fin))
+        queues = queues.at[d, q].set(jnp.where(data_v, q_row[q], fin))
+        transfer = transfer + jnp.where(data_v, 0.0, jnp.sum(tx))
+        return (finish, queues, transfer), None
+
+    carry = (jnp.zeros(n + 1), jnp.asarray(sa.queue_init), jnp.float32(0.0))
+    (finish, _, transfer), _ = jax.lax.scan(
+        step, carry, (jnp.asarray(sa.order), jnp.asarray(sa.preds)))
+    latency = jnp.max(finish[:n]) if n else jnp.float32(0.0)
+    bad = oom | ~jnp.isfinite(latency)
+    reward = jnp.where(bad, 0.0, 1.0 / jnp.where(bad, 1.0, latency))
+    return SimJaxResult(latency, reward, oom, busy, transfer)
+
+
+@dataclasses.dataclass
+class BatchSimResult:
+    """Host-side view of a vmapped simulation over B placements."""
+
+    latency: np.ndarray          # (B,) seconds
+    reward: np.ndarray           # (B,) 1/latency, 0 on OOM
+    oom: np.ndarray              # (B,) bool
+    per_device_busy: np.ndarray  # (B, D) seconds
+    transfer_time: np.ndarray    # (B,) seconds
+
+    def __len__(self) -> int:
+        return int(self.latency.shape[0])
+
+
+def simulate_batch(g: CompGraph, placements, platform: Platform
+                   ) -> BatchSimResult:
+    """Evaluate a (B, V) batch of placements in one jitted, vmapped call."""
+    sa = sim_arrays(g, platform)
+    fn = _batch_sim_fn()
+    placements = np.asarray(placements)
+    assert placements.ndim == 2 and placements.shape[1] == g.num_nodes, \
+        (placements.shape, g.num_nodes)
+    if placements.size and (placements.min() < 0
+                            or placements.max() >= platform.num_devices):
+        # jnp gather would silently clip; fail loudly like the host simulator.
+        raise ValueError(f"placement device ids must be in [0, "
+                         f"{platform.num_devices}); got "
+                         f"[{placements.min()}, {placements.max()}]")
+    res = fn(sa, placements.astype(np.int32))
+    return BatchSimResult(
+        latency=np.asarray(res.latency),
+        reward=np.asarray(res.reward),
+        oom=np.asarray(res.oom),
+        per_device_busy=np.asarray(res.per_device_busy),
+        transfer_time=np.asarray(res.transfer_time),
+    )
 
 
 def critical_path(g: CompGraph, platform: Platform) -> float:

@@ -80,7 +80,11 @@ def _connected_components(edges: jnp.ndarray, retained: jnp.ndarray,
                           num_nodes: int) -> jnp.ndarray:
     """Min-label propagation over the retained edge set; O(diameter) rounds.
 
-    jit-able: fixed shapes, ``lax.while_loop`` until fixpoint.
+    jit-able: fixed shapes, ``lax.while_loop`` until fixpoint.  Also
+    vmap-safe: under a lifted while_loop every chain keeps iterating until
+    *all* chains converge, and extra ``body`` passes are no-ops at the
+    fixpoint (min-propagation is idempotent) — a property the batched
+    multi-chain rollout engine relies on.
     """
     src, dst = edges[:, 0], edges[:, 1]
     big = jnp.int32(num_nodes)

@@ -4,23 +4,30 @@ Usage::
 
     graph  = inception_v3()                       # step 1: graph construction
     arrays = extract_features(graph)              # step 2: features (§2.3)
-    agent  = HSDAG(HSDAGConfig(num_devices=2))
-    result = agent.search(graph, arrays, reward_fn)   # steps 3–5 + RL
+    agent  = HSDAG(HSDAGConfig(num_devices=2, batch_chains=16))
+    result = agent.search(graph, arrays, platform=paper_platform())
 
-``reward_fn(fine_placement) -> (reward, latency)`` is any latency backend
-(cost-model simulator, measured executor, roofline planner) — the paper's
-OpenVINO measurement slot.
+Two reward backends:
+
+* ``platform=`` (preferred) — rewards come from the vectorized cost-model
+  kernel ``simulate_jax`` *inside* the jitted rollout, so a whole
+  ``update_timestep`` window of ``batch_chains`` parallel REINFORCE chains
+  runs device-resident with no host↔device sync per step.
+* ``reward_fn(fine_placement) -> (reward, latency)`` — any host callable
+  (e.g. ``MeasuredExecutor``, the paper's OpenVINO measurement slot).  The
+  rollout is still batched; rewards are filled in on the host per window.
 
 Training is exact REINFORCE via *replayed rollouts*: the sampling pass records
 PRNG keys and rewards; the gradient pass re-runs the identical rollout
-differentiably with rewards as constants, so ∇θ J matches Eq. 14 including
-gradients through the GPN's straight-through pooling gates.
+differentiably (a ``lax.scan`` over the window) with rewards as constants, so
+∇θ J matches Eq. 14 including gradients through the GPN's straight-through
+pooling gates.  ``engine="scalar"`` keeps the original one-placement-at-a-time
+reference loop (used by the B=1 equivalence tests).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from functools import partial
 from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
@@ -28,6 +35,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..optim import adam, apply_updates
+from .costmodel import Platform, sim_arrays, simulate_jax
 from .features import GraphArrays
 from .gnn import encoder_apply, encoder_init, mlp_apply, mlp_init
 from .gpn import ParseResult, gpn_apply, gpn_init
@@ -66,6 +74,9 @@ class HSDAGConfig:
     # rounds; pure numerical stabilizer for the Alg.1 line-10 accumulation
     # (sum-pooling grows ‖Z‖ geometrically over 20 rounds otherwise).
     seed: int = 0
+    # Number of parallel REINFORCE chains per rollout window.  Chain 0 uses
+    # the exact PRNG stream of the scalar engine, so B=1 reproduces it.
+    batch_chains: int = 1
 
 
 class StepOutput(NamedTuple):
@@ -81,11 +92,20 @@ class SearchResult(NamedTuple):
     params: Dict
     baseline_latencies: Dict[str, float]
     wall_time_s: float
+    num_evaluations: int = 0     # placements scored during the search
+    evals_per_sec: float = 0.0   # rollout throughput (placements / wall-s)
+    chain_best: Optional[np.ndarray] = None   # (B,) per-chain best latency
 
 
 def _rms_normalize(z: jnp.ndarray) -> jnp.ndarray:
     rms = jnp.sqrt(jnp.mean(jnp.square(z)) + 1e-6)
     return z / rms
+
+
+def _split_chain_keys(rngs: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-chain ``rng, key = split(rng)`` over a (B, 2) key batch."""
+    both = jax.vmap(jax.random.split)(rngs)          # (B, 2, 2)
+    return both[:, 0], both[:, 1]
 
 
 class HSDAG:
@@ -139,7 +159,7 @@ class HSDAG:
             z_next = _rms_normalize(z_next)
         return StepOutput(pol, parse, z_next)
 
-    # -------------------------------------------------------------- rollouts
+    # ------------------------------------------------- scalar (reference) jit
     def _make_jitted(self, arrays: GraphArrays):
         adj = jnp.asarray(arrays.adj)
         x0 = jnp.asarray(arrays.x)
@@ -174,11 +194,151 @@ class HSDAG:
                           static_argnames=("num_steps", "start_first"))
         return rollout_step, window_loss, grad_fn
 
+    # --------------------------------------------------- batched-chain engine
+    def _make_batched(self, arrays: GraphArrays, sim):
+        """Jitted window-granular rollout + replay over B parallel chains.
+
+        ``sim`` is a :class:`SimArrays` or None.  When given, rewards are
+        computed by ``simulate_jax`` inside the jitted window — zero host
+        round-trips per step; when None, the window returns placements and the
+        caller fills rewards in (``reward_fn`` / MeasuredExecutor fallback).
+        """
+        adj = jnp.asarray(arrays.adj)
+        x0 = jnp.asarray(arrays.x)
+        edges = jnp.asarray(arrays.edges)
+        cfg = self.cfg
+
+        def _chain_sample(params, z, key, first: bool):
+            out = self._step(params, z, x0, adj, edges, key,
+                             first=first, train=True)
+            fine = out.policy.fine_placement
+            if sim is not None:
+                s = simulate_jax(sim, fine)
+                reward, latency = s.reward, s.latency
+            else:
+                reward = latency = jnp.float32(0.0)
+            return (fine, out.parse.num_groups, out.z_next, reward, latency)
+
+        def _vsample(params, z, keys, first: bool):
+            return jax.vmap(
+                lambda z1, k1: _chain_sample(params, z1, k1, first))(z, keys)
+
+        def _rollout_window(params, z, rngs, num_steps: int,
+                            start_first: bool):
+            """→ (z_final, rngs_final, keys (T,B,2), fine (T,B,V),
+                  ngroups (T,B), rewards (T,B), latencies (T,B))."""
+
+            def body(carry, _):
+                z_c, rngs_c = carry
+                rngs_c, keys = _split_chain_keys(rngs_c)
+                fine, ngroups, z_next, rew, lat = _vsample(
+                    params, z_c, keys, first=False)
+                return (z_next, rngs_c), (keys, fine, ngroups, rew, lat)
+
+            if start_first:
+                rngs, keys0 = _split_chain_keys(rngs)
+                fine0, ng0, z, rew0, lat0 = _vsample(params, z, keys0,
+                                                     first=True)
+                (z, rngs), tail = jax.lax.scan(body, (z, rngs), None,
+                                               length=num_steps - 1)
+                head = (keys0, fine0, ng0, rew0, lat0)
+                outs = tuple(jnp.concatenate([h[None], t], axis=0)
+                             for h, t in zip(head, tail))
+            else:
+                (z, rngs), outs = jax.lax.scan(body, (z, rngs), None,
+                                               length=num_steps)
+            return (z, rngs) + outs
+
+        def _window_loss(params, z0, keys, weights, num_steps: int,
+                         start_first: bool):
+            """Differentiable lax.scan replay of a window (Eq. 14), averaged
+            over chains.  keys (T,B,2), weights (T,B)."""
+
+            def _chain_loss(params_, z1, k1, w1, first: bool):
+                out = self._step(params_, z1, x0, adj, edges, k1,
+                                 first=first, train=True)
+                loss = -out.policy.logp * w1
+                loss = loss - cfg.entropy_coef * out.policy.entropy
+                return out.z_next, loss
+
+            def _vloss(z_c, k_t, w_t, first: bool):
+                return jax.vmap(
+                    lambda z1, k1, w1: _chain_loss(params, z1, k1, w1, first)
+                )(z_c, k_t, w_t)
+
+            total = jnp.float32(0.0)
+            z = z0
+            if start_first:
+                z, l0 = _vloss(z, keys[0], weights[0], first=True)
+                total = total + jnp.sum(l0)
+                keys, weights = keys[1:], weights[1:]
+
+            def body(carry, xs):
+                z_c, tot = carry
+                k_t, w_t = xs
+                z_c, l_t = _vloss(z_c, k_t, w_t, first=False)
+                return (z_c, tot + jnp.sum(l_t)), None
+
+            (z, total), _ = jax.lax.scan(body, (z, total), (keys, weights))
+            nchains = z0.shape[0]
+            return total / nchains
+
+        rollout_window = jax.jit(_rollout_window,
+                                 static_argnames=("num_steps", "start_first"))
+        grad_fn = jax.jit(jax.grad(_window_loss),
+                          static_argnames=("num_steps", "start_first"))
+        return rollout_window, grad_fn
+
     # ---------------------------------------------------------------- search
     def search(self, graph: CompGraph, arrays: GraphArrays,
-               reward_fn: Callable[[np.ndarray], Tuple[float, float]],
-               rng=None, verbose: bool = False) -> SearchResult:
-        """Run the full RL search (Alg. 1) and return the best placement."""
+               reward_fn: Optional[Callable[[np.ndarray],
+                                            Tuple[float, float]]] = None,
+               rng=None, verbose: bool = False, *,
+               platform: Optional[Platform] = None,
+               engine: str = "auto") -> SearchResult:
+        """Run the full RL search (Alg. 1) and return the best placement.
+
+        Reward source: ``platform`` (fused in-jit cost model — fastest) or
+        ``reward_fn`` (host callable; batched rollout, host rewards).  Engine:
+        ``"auto"`` picks batched unless ``batch_chains == 1`` with a host
+        ``reward_fn`` (the original scalar loop, kept as the reference
+        implementation); ``"batched"`` / ``"scalar"`` force a path.
+        """
+        cfg = self.cfg
+        if platform is None and reward_fn is None:
+            raise ValueError("search() needs a reward source: platform= or "
+                             "reward_fn")
+        if platform is not None and reward_fn is not None:
+            raise ValueError(
+                "search() got both platform= and reward_fn — ambiguous "
+                "reward source (the in-jit cost model would silently shadow "
+                "the callable); pass exactly one")
+        if platform is not None and cfg.num_devices > platform.num_devices:
+            # jnp gathers inside simulate_jax would silently clip policy
+            # device ids ≥ platform.num_devices; fail loudly up front.
+            raise ValueError(
+                f"cfg.num_devices={cfg.num_devices} exceeds the platform's "
+                f"{platform.num_devices} devices")
+        if engine not in ("auto", "scalar", "batched"):
+            raise ValueError(f"unknown engine {engine!r}")
+        if engine == "scalar":
+            if cfg.batch_chains != 1:
+                raise ValueError("engine='scalar' requires batch_chains == 1")
+            if reward_fn is None:
+                from .costmodel import simulate
+
+                def reward_fn(p, _g=graph, _plat=platform):
+                    r = simulate(_g, p, _plat)
+                    return r.reward, r.latency
+            return self._search_scalar(arrays, reward_fn, rng, verbose)
+        if engine == "auto" and cfg.batch_chains == 1 and platform is None:
+            return self._search_scalar(arrays, reward_fn, rng, verbose)
+        sim = sim_arrays(graph, platform) if platform is not None else None
+        return self._search_batched(arrays, sim, reward_fn, rng, verbose)
+
+    # ------------------------------------------------- scalar reference loop
+    def _search_scalar(self, arrays: GraphArrays, reward_fn,
+                       rng, verbose: bool) -> SearchResult:
         cfg = self.cfg
         t_start = time.perf_counter()
         rng = rng if rng is not None else jax.random.PRNGKey(cfg.seed)
@@ -201,6 +361,7 @@ class HSDAG:
         step_in_episode = 0
 
         for episode in range(cfg.max_episodes):
+            t_ep = time.perf_counter()
             ep_rewards: List[float] = []
             ep_groups: List[int] = []
             for _ in range(cfg.update_timestep):
@@ -245,14 +406,113 @@ class HSDAG:
                 "mean_reward": float(np.mean(ep_rewards)),
                 "best_latency": best_latency,
                 "mean_groups": float(np.mean(ep_groups)),
+                "wall_s": time.perf_counter() - t_ep,
             })
             if verbose:
                 h = history[-1]
                 print(f"ep {episode:3d} reward {h['mean_reward']:.4g} "
                       f"best {best_latency:.6f}s groups {h['mean_groups']:.1f}")
 
+        wall = time.perf_counter() - t_start
+        n_evals = cfg.max_episodes * cfg.update_timestep
         return SearchResult(best_placement, best_latency, history,
-                            self.params, {}, time.perf_counter() - t_start)
+                            self.params, {}, wall, n_evals,
+                            n_evals / max(wall, 1e-9))
+
+    # ------------------------------------------------ batched multi-chain loop
+    def _search_batched(self, arrays: GraphArrays, sim, reward_fn,
+                        rng, verbose: bool) -> SearchResult:
+        cfg = self.cfg
+        nchains = max(1, cfg.batch_chains)
+        t_start = time.perf_counter()
+        rng = rng if rng is not None else jax.random.PRNGKey(cfg.seed)
+        if self.params is None:
+            rng, k_init = jax.random.split(rng)
+            self.init(k_init, arrays)
+
+        rollout_window, grad_fn = self._make_batched(arrays, sim)
+        baseline = RunningBaseline() if cfg.use_baseline else None
+
+        best_latency = float("inf")
+        best_placement = np.zeros(arrays.num_nodes, dtype=np.int64)
+        chain_best = np.full(nchains, np.inf)
+        history: List[dict] = []
+
+        # Chain 0 carries the exact scalar-engine PRNG stream; chains ≥ 1 get
+        # independent folded streams, so B=1 reproduces the scalar trajectory.
+        chain_rngs = jnp.stack(
+            [rng] + [jax.random.fold_in(rng, b) for b in range(1, nchains)])
+        x0 = jnp.asarray(arrays.x)
+        z = jnp.broadcast_to(x0, (nchains,) + x0.shape)
+        z0_window = z
+        first_of_window = True
+        tsteps = cfg.update_timestep
+
+        for episode in range(cfg.max_episodes):
+            t_ep = time.perf_counter()
+            (z, chain_rngs, keys, fines, ngroups, rewards,
+             latencies) = rollout_window(
+                self.params, z0_window, chain_rngs,
+                num_steps=tsteps, start_first=first_of_window)
+            if sim is None:
+                # Host-reward fallback: score each sampled placement.
+                fines_np = np.asarray(fines)
+                rewards = np.empty((tsteps, nchains))
+                latencies = np.empty((tsteps, nchains))
+                for t in range(tsteps):
+                    for b in range(nchains):
+                        rewards[t, b], latencies[t, b] = reward_fn(
+                            fines_np[t, b])
+            else:
+                rewards = np.asarray(rewards, dtype=np.float64)
+                latencies = np.asarray(latencies, dtype=np.float64)
+                fines_np = np.asarray(fines)
+
+            # Bookkeeping in (t, b) order — identical to the scalar loop at
+            # B=1 (EMA baseline order and strict-< best tie-breaks matter).
+            for t in range(tsteps):
+                for b in range(nchains):
+                    if baseline is not None:
+                        baseline.update(rewards[t, b])
+                    if latencies[t, b] < best_latency:
+                        best_latency = float(latencies[t, b])
+                        best_placement = fines_np[t, b].astype(np.int64)
+            chain_best = np.minimum(chain_best, latencies.min(axis=0))
+
+            # ---- policy update over the (B, T) window (Eq. 14) ----
+            weights_bt = step_weights(
+                rewards.T, cfg.gamma,
+                reward_to_go=cfg.reward_to_go,
+                baseline=(baseline.value if baseline is not None else None),
+                normalize=cfg.normalize_weights)
+            weights_tb = jnp.asarray(weights_bt.T)
+            for _ in range(max(1, cfg.k_epochs)):
+                grads = grad_fn(self.params, z0_window, keys, weights_tb,
+                                num_steps=tsteps,
+                                start_first=first_of_window)
+                updates, self._opt_state = self._opt.update(
+                    grads, self._opt_state, self.params)
+                self.params = apply_updates(self.params, updates)
+            z0_window = z
+            first_of_window = False
+            history.append({
+                "episode": episode,
+                "mean_reward": float(np.mean(rewards)),
+                "best_latency": best_latency,
+                "mean_groups": float(np.mean(np.asarray(ngroups))),
+                "wall_s": time.perf_counter() - t_ep,
+            })
+            if verbose:
+                h = history[-1]
+                print(f"ep {episode:3d} reward {h['mean_reward']:.4g} "
+                      f"best {best_latency:.6f}s groups {h['mean_groups']:.1f}"
+                      f" chains {nchains}")
+
+        wall = time.perf_counter() - t_start
+        n_evals = cfg.max_episodes * tsteps * nchains
+        return SearchResult(best_placement, best_latency, history,
+                            self.params, {}, wall, n_evals,
+                            n_evals / max(wall, 1e-9), chain_best)
 
     # ------------------------------------------------------------- inference
     def place(self, arrays: GraphArrays, rng=None,

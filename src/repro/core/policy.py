@@ -4,6 +4,12 @@ An MLP classifies each *coarsened* node (cluster slot) to one of |D| devices;
 sampling is categorical; the coarse placement P' maps back to the original
 graph through the cluster labels (the assignment matrix X in the paper — we
 gather by label, which is X applied as an index map).
+
+Batch contract: everything here is written per-chain — (V,)-shaped slots, one
+PRNG key, ``axis=-1`` reductions — and is lifted over a chain axis with
+``jax.vmap`` by the batched rollout engine (hsdag ``batch_chains``).  Keep new
+ops vmap-safe: no data-dependent shapes, no host callbacks, per-chain keys
+come from the caller (never split a shared key inside).
 """
 from __future__ import annotations
 

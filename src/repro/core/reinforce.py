@@ -21,12 +21,17 @@ __all__ = ["RolloutBuffer", "step_weights", "RunningBaseline"]
 
 @dataclasses.dataclass
 class RolloutBuffer:
-    """Per-update-window storage (paper's "buffer of x steps")."""
+    """Per-update-window storage (paper's "buffer of x steps").
+
+    Rows are appended per step.  The scalar engine appends scalars/(V,)
+    placements; the batched engine appends a whole window of (B, ...) rows via
+    :meth:`add_window`, so a full buffer holds a (B, T) batch of chains.
+    """
 
     rngs: List = dataclasses.field(default_factory=list)
-    rewards: List[float] = dataclasses.field(default_factory=list)
+    rewards: List = dataclasses.field(default_factory=list)
     placements: List[np.ndarray] = dataclasses.field(default_factory=list)
-    latencies: List[float] = dataclasses.field(default_factory=list)
+    latencies: List = dataclasses.field(default_factory=list)
 
     def add(self, rng, reward: float, placement: np.ndarray,
             latency: float) -> None:
@@ -34,6 +39,32 @@ class RolloutBuffer:
         self.rewards.append(float(reward))
         self.placements.append(np.asarray(placement))
         self.latencies.append(float(latency))
+
+    def add_window(self, rngs, rewards, placements, latencies) -> None:
+        """Append a whole rollout window of batched rows.
+
+        ``rngs`` (T, B, 2), ``rewards``/``latencies`` (T, B),
+        ``placements`` (T, B, V) — time-major, as produced by the jitted
+        window rollout; per-step rows are stored so ``len()`` stays T.
+        """
+        for t in range(len(rewards)):
+            self.rngs.append(np.asarray(rngs[t]))
+            self.rewards.append(np.asarray(rewards[t]))
+            self.placements.append(np.asarray(placements[t]))
+            self.latencies.append(np.asarray(latencies[t]))
+
+    def stacked(self):
+        """→ (rngs, rewards (B, T), placements, latencies (B, T)).
+
+        Scalar-filled buffers come back with B=1; batched ones with their
+        chain dimension first (time last, matching ``step_weights``).
+        """
+        rewards = np.stack([np.atleast_1d(r) for r in self.rewards], axis=-1)
+        latencies = np.stack([np.atleast_1d(l) for l in self.latencies],
+                             axis=-1)
+        placements = np.stack(
+            [np.atleast_2d(p) for p in self.placements], axis=1)
+        return np.stack(self.rngs), rewards, placements, latencies
 
     def __len__(self) -> int:
         return len(self.rewards)
@@ -51,29 +82,32 @@ def step_weights(rewards: np.ndarray, gamma: float, *,
                  normalize: bool = False) -> np.ndarray:
     """Per-step loss weights w_i so that loss = −Σ_i w_i · log p(P_i).
 
-    Default (paper Eq. 14): w_i = γ^i · r_i  (i zero-based here; the constant
-    γ offset between 1-based and 0-based indexing is absorbed by the learning
-    rate).  Options:
+    ``rewards`` may be (T,) — one chain — or (B, T): any leading batch axes
+    are carried through elementwise; **time is the last axis**.  Default
+    (paper Eq. 14): w_i = γ^i · r_i  (i zero-based here; the constant γ offset
+    between 1-based and 0-based indexing is absorbed by the learning rate).
+    Options:
       * ``reward_to_go``: w_i = Σ_{j≥i} γ^{j−i} r_j (classic REINFORCE return)
       * ``baseline``: subtract a scalar baseline from rewards first
-      * ``normalize``: standardize the weights (variance reduction)
+      * ``normalize``: standardize the weights per chain (variance reduction)
     """
     r = np.asarray(rewards, dtype=np.float64)
     if baseline is not None:
         r = r - float(baseline)
-    x = len(r)
+    x = r.shape[-1]
     if reward_to_go:
-        w = np.zeros(x)
-        acc = 0.0
+        w = np.zeros_like(r)
+        acc = np.zeros(r.shape[:-1])
         for i in range(x - 1, -1, -1):
-            acc = r[i] + gamma * acc
-            w[i] = acc
+            acc = r[..., i] + gamma * acc
+            w[..., i] = acc
     else:
         w = (gamma ** np.arange(x)) * r
     if normalize and x > 1:
-        std = w.std()
-        if std > 1e-12:
-            w = (w - w.mean()) / std
+        std = w.std(axis=-1, keepdims=True)
+        safe = np.where(std > 1e-12, std, 1.0)
+        w = np.where(std > 1e-12, (w - w.mean(axis=-1, keepdims=True)) / safe,
+                     w)
     return w.astype(np.float32)
 
 

@@ -3,6 +3,29 @@ import pytest
 
 from repro.core import CompGraph
 
+# ---------------------------------------------------------------- hypothesis
+# ``hypothesis`` is a test extra (pyproject ``[test]``), not a runtime dep.
+# Mixed test modules import the stand-ins below when it is missing so their
+# example-based tests still run and only the property tests skip.
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised on minimal environments
+    HAVE_HYPOTHESIS = False
+
+    def _skip_property_test(*_args, **_kwargs):
+        def deco(fn):
+            return pytest.mark.skip(reason="hypothesis not installed")(fn)
+        return deco
+
+    given = settings = _skip_property_test
+
+    class _AnyStrategy:
+        def __getattr__(self, _name):
+            return lambda *_a, **_k: None
+
+    st = _AnyStrategy()
+
 
 def make_diamond() -> CompGraph:
     """Small branchy DAG used across unit tests."""

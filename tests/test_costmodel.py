@@ -1,7 +1,10 @@
 """Tests for the latency simulator (DESIGN.md §3 reward backend)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hypothesis optional: property tests skip cleanly
+    from conftest import given, settings, st
 
 from repro.core import (critical_path, paper_platform, simulate,
                         tpu_stage_platform)

@@ -1,7 +1,10 @@
 """Tests for §2.3 feature extraction (Eq. 3–5) incl. fractal dimension."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hypothesis optional: property tests skip cleanly
+    from conftest import given, settings, st
 
 from repro.core import CompGraph, extract_features, FeatureConfig
 from repro.core.features import (fractal_dimension, one_hot,

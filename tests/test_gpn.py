@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hypothesis optional: property tests skip cleanly
+    from conftest import given, settings, st
 
 from repro.core import extract_features, FeatureConfig
 from repro.core.gnn import encoder_apply, encoder_init
@@ -121,12 +124,15 @@ def test_groups_are_learned_not_preset():
 def test_gradients_flow_through_scores():
     g = make_diamond()
     arr = _arrays(g)
-    k = jax.random.PRNGKey(0)
+    # Seed 1: at width 8, seed 0's final ReLU kills every activation and all
+    # gradients are legitimately zero — the premise needs a nonzero Z.
+    k = jax.random.PRNGKey(1)
     enc = encoder_init(k, arr.x.shape[1], 8)
     gpn = gpn_init(jax.random.fold_in(k, 1), 8)
+    z = encoder_apply(enc, jnp.asarray(arr.x), jnp.asarray(arr.adj))
+    assert float(jnp.abs(z).sum()) > 0
 
     def loss(gpn_params):
-        z = encoder_apply(enc, jnp.asarray(arr.x), jnp.asarray(arr.adj))
         res = gpn_apply(gpn_params, z, jnp.asarray(arr.edges),
                         jnp.asarray(arr.adj))
         return jnp.sum(res.pooled_z ** 2)

@@ -1,7 +1,10 @@
 """Unit + property tests for the CompGraph IR (paper §2.1–2.2, Appendix G)."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hypothesis optional: property tests skip cleanly
+    from conftest import given, settings, st
 
 from repro.core import CompGraph, topological_order, colocate_chains
 from repro.core.graph import OpNode

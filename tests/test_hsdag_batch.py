@@ -1,0 +1,183 @@
+"""Batched multi-chain search engine tests (B parallel REINFORCE chains).
+
+Covers: B=1 batched ≡ scalar reference (same PRNG stream → bit-for-bit
+best-latency trajectory), multi-chain dominance (the returned best is never
+worse than any single chain's own best), the fused in-jit ``simulate_jax``
+reward path, the host ``reward_fn`` fallback, and the (B, T) reinforce
+machinery.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (HSDAG, HSDAGConfig, extract_features, FeatureConfig,
+                        paper_platform, simulate, tpu_stage_platform)
+from repro.core.reinforce import RolloutBuffer, step_weights
+
+from conftest import make_diamond, random_dag
+
+
+def _reward_fn(graph, plat):
+    def reward_fn(p):
+        r = simulate(graph, p, plat)
+        return r.reward, r.latency
+    return reward_fn
+
+
+def _cfg(**kw):
+    base = dict(num_devices=2, hidden_channel=32, max_episodes=4,
+                update_timestep=6)
+    base.update(kw)
+    return HSDAGConfig(**base)
+
+
+def test_b1_batched_matches_scalar_bit_for_bit(diamond):
+    """Same seed + same host reward backend: the batched engine at B=1 must
+    replay the scalar engine's sampling stream exactly — identical
+    best-latency trajectory, per-episode mean rewards and best placement."""
+    arrays = extract_features(diamond, FeatureConfig(d_pos=8))
+    plat = paper_platform()
+    rs = HSDAG(_cfg()).search(diamond, arrays, _reward_fn(diamond, plat),
+                              rng=jax.random.PRNGKey(0), engine="scalar")
+    rb = HSDAG(_cfg(batch_chains=1)).search(
+        diamond, arrays, _reward_fn(diamond, plat),
+        rng=jax.random.PRNGKey(0), engine="batched")
+    assert [h["best_latency"] for h in rs.history] == \
+        [h["best_latency"] for h in rb.history]
+    assert [h["mean_reward"] for h in rs.history] == \
+        [h["mean_reward"] for h in rb.history]
+    np.testing.assert_array_equal(rs.best_placement, rb.best_placement)
+    assert rs.best_latency == rb.best_latency
+
+
+def test_b1_fused_matches_scalar_trajectory(diamond):
+    """The in-jit simulate_jax reward path differs from the f64 host
+    simulator only by f32 rounding — latencies agree to ~1e-5."""
+    arrays = extract_features(diamond, FeatureConfig(d_pos=8))
+    plat = paper_platform()
+    rs = HSDAG(_cfg()).search(diamond, arrays, _reward_fn(diamond, plat),
+                              rng=jax.random.PRNGKey(0), engine="scalar")
+    rf = HSDAG(_cfg(batch_chains=1)).search(
+        diamond, arrays, platform=plat, rng=jax.random.PRNGKey(0))
+    np.testing.assert_allclose(
+        [h["best_latency"] for h in rs.history],
+        [h["best_latency"] for h in rf.history], rtol=1e-5)
+
+
+def test_multichain_best_dominates_every_chain(diamond):
+    """B>1: the reported best latency is the min over chains — never worse
+    than the worst chain's own best."""
+    arrays = extract_features(diamond, FeatureConfig(d_pos=8))
+    res = HSDAG(_cfg(batch_chains=4)).search(
+        diamond, arrays, platform=paper_platform(),
+        rng=jax.random.PRNGKey(0))
+    assert res.chain_best is not None and res.chain_best.shape == (4,)
+    assert np.isfinite(res.chain_best).all()
+    assert res.best_latency <= res.chain_best.max() + 1e-15
+    np.testing.assert_allclose(res.best_latency, res.chain_best.min(),
+                               rtol=1e-7)
+
+
+def test_fused_best_latency_is_replayable(diamond):
+    """best_placement re-simulated on the host matches best_latency."""
+    arrays = extract_features(diamond, FeatureConfig(d_pos=8))
+    plat = paper_platform()
+    res = HSDAG(_cfg(batch_chains=8)).search(
+        diamond, arrays, platform=plat, rng=jax.random.PRNGKey(1))
+    ref = simulate(diamond, res.best_placement, plat)
+    np.testing.assert_allclose(res.best_latency, ref.latency, rtol=1e-5)
+    assert set(np.unique(res.best_placement)) <= {0, 1}
+
+
+def test_reward_fn_fallback_batched(diamond):
+    """MeasuredExecutor-style host callable with B>1 chains."""
+    arrays = extract_features(diamond, FeatureConfig(d_pos=8))
+    plat = paper_platform()
+    calls = []
+
+    def counting_reward(p):
+        calls.append(np.asarray(p).copy())
+        r = simulate(diamond, p, plat)
+        return r.reward, r.latency
+
+    cfg = _cfg(batch_chains=2, max_episodes=2, update_timestep=3)
+    res = HSDAG(cfg).search(diamond, arrays, counting_reward,
+                            rng=jax.random.PRNGKey(0))
+    assert len(calls) == 2 * 3 * 2          # episodes × steps × chains
+    assert res.num_evaluations == len(calls)
+    assert np.isfinite(res.best_latency)
+
+
+def test_multichain_multidevice_fused():
+    rng = np.random.default_rng(5)
+    g = random_dag(rng, 24, p=0.12)
+    arrays = extract_features(g, FeatureConfig(d_pos=8))
+    cfg = _cfg(num_devices=4, batch_chains=4, max_episodes=3,
+               update_timestep=5)
+    res = HSDAG(cfg).search(g, arrays, platform=tpu_stage_platform(4),
+                            rng=jax.random.PRNGKey(0))
+    assert res.best_placement.max() <= 3
+    assert np.isfinite(res.best_latency)
+    assert res.num_evaluations == 3 * 5 * 4
+
+
+def test_search_requires_a_reward_source(diamond):
+    arrays = extract_features(diamond, FeatureConfig(d_pos=8))
+    with pytest.raises(ValueError):
+        HSDAG(_cfg()).search(diamond, arrays)
+
+
+def test_batched_params_update(diamond):
+    arrays = extract_features(diamond, FeatureConfig(d_pos=8))
+    agent = HSDAG(_cfg(batch_chains=4, max_episodes=2))
+    agent.init(jax.random.PRNGKey(0), arrays)
+    before = jax.tree.map(lambda x: np.asarray(x).copy(), agent.params)
+    agent.search(diamond, arrays, platform=paper_platform(),
+                 rng=jax.random.PRNGKey(1))
+    changed = any(
+        not np.allclose(b, np.asarray(a))
+        for b, a in zip(jax.tree.leaves(before),
+                        jax.tree.leaves(agent.params)))
+    assert changed
+
+
+# ----------------------------------------------------------- reinforce (B, T)
+def test_step_weights_batched_matches_per_chain():
+    rng = np.random.default_rng(0)
+    r = rng.random((3, 5))
+    for kw in (dict(), dict(reward_to_go=True), dict(normalize=True),
+               dict(reward_to_go=True, baseline=0.3, normalize=True)):
+        batched = step_weights(r, 0.9, **kw)
+        assert batched.shape == (3, 5)
+        for b in range(3):
+            np.testing.assert_allclose(batched[b],
+                                       step_weights(r[b], 0.9, **kw),
+                                       rtol=1e-6)
+
+
+def test_rollout_buffer_add_window_shapes():
+    buf = RolloutBuffer()
+    T, B, V = 4, 3, 7
+    rng = np.random.default_rng(0)
+    buf.add_window(rng.integers(0, 2**31, (T, B, 2)),
+                   rng.random((T, B)),
+                   rng.integers(0, 2, (T, B, V)),
+                   rng.random((T, B)))
+    assert len(buf) == T
+    rngs, rewards, placements, latencies = buf.stacked()
+    assert rngs.shape == (T, B, 2)
+    assert rewards.shape == (B, T)
+    assert placements.shape == (B, T, V)
+    assert latencies.shape == (B, T)
+    buf.clear()
+    assert len(buf) == 0
+
+
+def test_rollout_buffer_scalar_rows_stack_to_b1():
+    buf = RolloutBuffer()
+    for t in range(3):
+        buf.add(np.zeros(2, np.uint32), 0.5 * t, np.zeros(5, int), 1.0 + t)
+    _, rewards, placements, latencies = buf.stacked()
+    assert rewards.shape == (1, 3)
+    assert placements.shape == (1, 3, 5)
+    np.testing.assert_allclose(latencies[0], [1.0, 2.0, 3.0])

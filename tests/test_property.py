@@ -3,6 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # this module is entirely property-based
 from hypothesis import given, settings, strategies as st
 
 from repro.core import extract_features, FeatureConfig, paper_platform, simulate
