@@ -17,6 +17,7 @@ import table3_ablation
 import table4_downstream
 import table5_complexity
 import table6_throughput
+import table7_generalization
 
 
 def _roofline_rows() -> None:
@@ -44,6 +45,7 @@ def main() -> None:
     table4_downstream.main()
     table5_complexity.main()
     table6_throughput.main()
+    table7_generalization.main()
     _roofline_rows()
 
 

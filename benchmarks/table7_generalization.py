@@ -1,0 +1,95 @@
+"""Table 7 (repo-local): cross-graph generalization — one policy, many graphs.
+
+Three measurements, echoing GDP (Zhou et al., 2019) / Placeto (Addanki et
+al., 2019) style generalization studies on the paper's Table-2 graphs:
+
+* ``generalization_joint_{g}``     — best + greedy-decode latency per graph
+  from ONE shared policy trained jointly over all three graphs in a single
+  jitted (G, B) batched loop (``MultiGraphTrainer``).
+* ``generalization_pergraph_{g}``  — the PR-1 single-graph batched search at
+  the same per-graph episode budget, for a joint-vs-per-graph comparison.
+* ``generalization_transfer_{g}``  — zero-shot transfer: the policy trained
+  on the OTHER two graphs greedy-decodes the held-out graph (no training on
+  it), vs its CPU-only / best-single-device baselines.
+* ``generalization_joint_throughput`` — placements/s of the joint loop
+  (steady state, compile episode dropped).
+
+Env knobs: ``REPRO_BENCH_EPISODES`` / ``REPRO_BENCH_TIMESTEP`` (common.py),
+``REPRO_BENCH_CHAINS`` (default 8 here — G multiplies the batch).
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+
+from repro.core import (HSDAGConfig, MultiGraphTrainer, paper_platform,
+                        simulate)
+from repro.core.baselines import cpu_only, gpu_only
+from repro.graphs import PAPER_BENCHMARKS
+
+from common import EPISODES, UPDATE_TIMESTEP, emit, run_hsdag
+
+CHAINS = int(os.environ.get("REPRO_BENCH_CHAINS", "8"))
+
+
+def _cfg(episodes: int = None) -> HSDAGConfig:
+    return HSDAGConfig(num_devices=2, max_episodes=episodes or EPISODES,
+                       update_timestep=UPDATE_TIMESTEP,
+                       batch_chains=CHAINS)
+
+
+def _baselines(graph, plat):
+    return (simulate(graph, cpu_only(graph), plat).latency,
+            simulate(graph, gpu_only(graph), plat).latency)
+
+
+def main() -> None:
+    plat = paper_platform()
+    names = list(PAPER_BENCHMARKS)
+    graphs = {n: PAPER_BENCHMARKS[n]() for n in names}
+
+    # ---- one shared policy over all graphs (the tentpole loop) ----
+    trainer = MultiGraphTrainer(_cfg())
+    res = trainer.train([graphs[n] for n in names], platform=plat,
+                        rng=jax.random.PRNGKey(0))
+    walls = [h["wall_s"] for h in res.history[1:]] or \
+        [h["wall_s"] for h in res.history]
+    joint_rate = (UPDATE_TIMESTEP * CHAINS * len(names) * len(walls)
+                  / sum(walls))
+    emit("generalization_joint_throughput", 1e6 / joint_rate,
+         f"evals_per_s={joint_rate:.1f};G={len(names)};B={CHAINS}")
+
+    for i, n in enumerate(names):
+        cpu, gpu = _baselines(graphs[n], plat)
+        best = float(res.best_latencies[i])
+        greedy = float(res.greedy_latencies[i])
+        emit(f"generalization_joint_{n}", best * 1e6,
+             f"greedy_us={greedy*1e6:.1f};speedup_vs_cpu="
+             f"{100*(cpu-best)/cpu:.1f}%")
+
+        # per-graph reference: the single-graph batched engine, same budget
+        _, lat, _ = run_hsdag(graphs[n], batch_chains=CHAINS, platform=plat)
+        emit(f"generalization_pergraph_{n}", lat * 1e6,
+             f"joint_over_pergraph={best/lat:.3f}x")
+
+    # ---- zero-shot transfer: hold each graph out, train on the rest ----
+    for held in names:
+        train_names = [n for n in names if n != held]
+        t = MultiGraphTrainer(_cfg())
+        t.train([graphs[n] for n in train_names], platform=plat,
+                rng=jax.random.PRNGKey(1))
+        _, lat = t.evaluate_zero_shot(graphs[held], platform=plat)
+        cpu, gpu = _baselines(graphs[held], plat)
+        best_dev = min(cpu, gpu)
+        emit(f"generalization_transfer_{held}", lat * 1e6,
+             f"trained_on={'+'.join(train_names)};vs_cpu="
+             f"{100*(cpu-lat)/cpu:.1f}%;vs_best_device="
+             f"{100*(best_dev-lat)/best_dev:.1f}%")
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    print("name,us_per_call,derived")
+    main()

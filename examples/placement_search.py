@@ -6,18 +6,56 @@ partitioning an assigned architecture's layer graph across 2 pods
 (DESIGN.md §3.2).
 
     PYTHONPATH=src python examples/placement_search.py [--episodes N]
+
+``--multi-graph`` switches Part 1 to cross-graph joint training: ONE policy
+over Inception-V3 + ResNet-50 in a single jitted (G, B) batched loop, then
+zero-shot transfer of that policy to the held-out BERT graph:
+
+    PYTHONPATH=src python examples/placement_search.py --multi-graph
 """
 import argparse
 
 import jax
 import numpy as np
 
-from repro.core import (HSDAG, HSDAGConfig, extract_features, FeatureConfig,
+from repro.core import (HSDAG, HSDAGConfig, MultiGraphTrainer,
+                        extract_features, FeatureConfig,
                         paper_platform, simulate)
 from repro.core.baselines import cpu_only, gpu_only
 from repro.core.planner import plan_stages
 from repro.configs import get
-from repro.graphs import bert_base
+from repro.graphs import bert_base, inception_v3, resnet50
+
+
+def run_multi_graph(args, platform) -> None:
+    """Joint training over heterogeneous graphs + zero-shot transfer."""
+    train_graphs = [inception_v3(), resnet50()]
+    trainer = MultiGraphTrainer(HSDAGConfig(
+        num_devices=2, max_episodes=args.episodes, update_timestep=10,
+        use_baseline=True, normalize_weights=True,
+        batch_chains=args.chains))
+    res = trainer.train(train_graphs, platform=platform,
+                        rng=jax.random.PRNGKey(0), verbose=True)
+    print(f"\njoint training: {res.num_evaluations} placements "
+          f"at {res.evals_per_sec:.1f}/s "
+          f"(G={len(train_graphs)} × B={args.chains} chains, one policy)")
+    for g, best, greedy in zip(train_graphs, res.best_latencies,
+                               res.greedy_latencies):
+        cpu = simulate(g, cpu_only(g), platform).latency
+        print(f"  {g.name:16s} CPU-only {cpu*1e3:7.3f} ms → joint best "
+              f"{best*1e3:7.3f} ms (greedy decode {greedy*1e3:7.3f} ms)")
+
+    held = bert_base()
+    placement, lat = trainer.evaluate_zero_shot(held, platform=platform)
+    cpu = simulate(held, cpu_only(held), platform).latency
+    gpu = simulate(held, gpu_only(held), platform).latency
+    print(f"\nzero-shot transfer → {held.name} (never trained on):")
+    print(f"  CPU-only {cpu*1e3:.3f} ms | GPU-only {gpu*1e3:.3f} ms | "
+          f"transferred policy {lat*1e3:.3f} ms "
+          f"({100*(cpu-lat)/cpu:.1f}% vs CPU)")
+    if args.checkpoint:
+        trainer.save_policy(args.checkpoint)
+        print(f"shared policy + feature layout saved to {args.checkpoint}")
 
 
 def main():
@@ -26,7 +64,17 @@ def main():
     ap.add_argument("--chains", type=int, default=8,
                     help="parallel rollout chains (B); rewards are computed "
                          "inside the jitted rollout by simulate_jax")
+    ap.add_argument("--multi-graph", action="store_true",
+                    help="train ONE policy jointly over Inception+ResNet "
+                         "and transfer zero-shot to held-out BERT")
+    ap.add_argument("--checkpoint", default="",
+                    help="with --multi-graph: directory to save the shared "
+                         "policy checkpoint")
     args = ap.parse_args()
+
+    if args.multi_graph:
+        run_multi_graph(args, paper_platform())
+        return
 
     # ---- Part 1: the paper's experiment (BERT, heterogeneous host) ----
     graph = bert_base()

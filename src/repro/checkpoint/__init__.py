@@ -1,3 +1,3 @@
-from .manager import CheckpointManager
+from .manager import CheckpointManager, save_policy, restore_policy
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "save_policy", "restore_policy"]

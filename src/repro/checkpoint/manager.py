@@ -33,7 +33,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["CheckpointManager"]
+__all__ = ["CheckpointManager", "save_policy", "restore_policy"]
 
 
 def _keystr_simple(p) -> str:
@@ -187,3 +187,68 @@ class CheckpointManager:
             self._q.put(None)
             self._worker.join(timeout=10)
             self._worker = None
+
+
+# --------------------------------------------------------------------------
+# Shared-policy checkpoints (multi-graph training).
+#
+# A cross-graph policy is only usable on a new graph if that graph is
+# featurized with the *same* shared vocabularies the policy was trained on,
+# so the feature layout rides along in the checkpoint manifest (it is small,
+# JSON-serializable, and the thing people forget to persist).
+# --------------------------------------------------------------------------
+
+
+def _feature_config_to_meta(feature_config) -> Optional[Dict]:
+    if feature_config is None:
+        return None
+    import dataclasses
+    d = dataclasses.asdict(feature_config)
+    return {k: (list(v) if isinstance(v, tuple) else v) for k, v in d.items()}
+
+
+def _feature_config_from_meta(meta: Optional[Dict]):
+    if not meta:
+        return None
+    from ..core.features import FeatureConfig
+    kw = dict(meta)
+    for key in ("op_vocab", "in_deg_vocab", "out_deg_vocab"):
+        if kw.get(key) is not None:
+            kw[key] = tuple(kw[key])
+    return FeatureConfig(**kw)
+
+
+def save_policy(directory: str, params: Any, *, step: int = 0,
+                feature_config=None, meta: Optional[Dict] = None,
+                keep: int = 3) -> None:
+    """Atomically save a (shared) policy pytree + its feature layout."""
+    mgr = CheckpointManager(directory, keep=keep)
+    full_meta = dict(meta or {})
+    fc = _feature_config_to_meta(feature_config)
+    if fc is not None:
+        full_meta["feature_config"] = fc
+    try:
+        mgr.save(step, params, full_meta)
+    finally:
+        mgr.close()
+
+
+def restore_policy(directory: str, params_like: Any,
+                   step: Optional[int] = None):
+    """→ (params, feature_config, step) from a ``save_policy`` checkpoint.
+
+    ``params_like`` supplies the pytree structure/dtypes (e.g. a freshly
+    ``init()``-ed parameter tree of the same architecture).
+    """
+    mgr = CheckpointManager(directory)
+    try:
+        if step is None:
+            step = mgr.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory!r}")
+        params = mgr.restore(step, params_like)
+        manifest = mgr.manifest(step)
+    finally:
+        mgr.close()
+    return params, _feature_config_from_meta(
+        manifest.get("feature_config")), step

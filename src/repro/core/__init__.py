@@ -1,20 +1,28 @@
 """HSDAG core — the paper's contribution as a composable JAX module."""
 from .graph import CompGraph, OpNode, topological_order, colocate_chains
-from .features import (FeatureConfig, GraphArrays, extract_features,
-                       fractal_dimension, positional_encoding)
+from .features import (FeatureConfig, GraphArrays, GraphArraysBatch,
+                       batch_graph_arrays, extract_features,
+                       fractal_dimension, positional_encoding,
+                       shared_feature_config)
 from .costmodel import (DeviceSpec, Platform, SimResult, simulate,
                         SimArrays, sim_arrays, simulate_jax, simulate_batch,
-                        BatchSimResult, paper_platform, tpu_stage_platform,
+                        BatchSimResult, SimArraysBatch, pad_sim_arrays,
+                        sim_arrays_batch, simulate_multi,
+                        paper_platform, tpu_stage_platform,
                         critical_path)
-from .hsdag import HSDAG, HSDAGConfig, SearchResult
+from .hsdag import (HSDAG, HSDAGConfig, SearchResult,
+                    MultiGraphTrainer, MultiSearchResult)
 
 __all__ = [
     "CompGraph", "OpNode", "topological_order", "colocate_chains",
-    "FeatureConfig", "GraphArrays", "extract_features",
-    "fractal_dimension", "positional_encoding",
+    "FeatureConfig", "GraphArrays", "GraphArraysBatch",
+    "batch_graph_arrays", "extract_features",
+    "fractal_dimension", "positional_encoding", "shared_feature_config",
     "DeviceSpec", "Platform", "SimResult", "simulate",
     "SimArrays", "sim_arrays", "simulate_jax", "simulate_batch",
-    "BatchSimResult",
+    "BatchSimResult", "SimArraysBatch", "pad_sim_arrays",
+    "sim_arrays_batch", "simulate_multi",
     "paper_platform", "tpu_stage_platform", "critical_path",
     "HSDAG", "HSDAGConfig", "SearchResult",
+    "MultiGraphTrainer", "MultiSearchResult",
 ]

@@ -29,6 +29,7 @@ __all__ = [
     "paper_platform", "tpu_stage_platform", "critical_path",
     "SimArrays", "sim_arrays", "simulate_jax", "simulate_batch",
     "BatchSimResult",
+    "SimArraysBatch", "pad_sim_arrays", "sim_arrays_batch", "simulate_multi",
 ]
 
 
@@ -353,9 +354,11 @@ def _build_sim_arrays(g: CompGraph, platform: Platform) -> SimArrays:
 # graph → {(graph fingerprint, platform fingerprint): SimArrays}.  WeakKey so
 # dropping a graph drops its cache; platforms are hashed by value (DeviceSpec
 # is a frozen dataclass, link matrices by content).  The graph fingerprint
-# (topology + flops/bytes) catches post-cache mutation via add_edge/add_op;
-# in-place ``node.meta`` eff-hint edits are NOT detected — rebuild the graph
-# instead of mutating hints.
+# covers everything ``_build_sim_arrays`` reads — topology, flops/bytes,
+# op types (they pick the op class, hence durations and the "data" mask) and
+# per-node ``eff_*`` meta hints — so *any* post-cache mutation (add_op /
+# add_edge / op-type rewrites / in-place eff-hint edits) misses the stale
+# entry and rebuilds instead of silently serving old durations.
 _SIM_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
 
 # One jitted+vmapped kernel shared by every cache entry: SimArrays is a
@@ -372,11 +375,22 @@ def _batch_sim_fn():
     return _BATCH_SIM_FN
 
 
-def _cache_key(g: CompGraph, platform: Platform):
+def _graph_fingerprint(g: CompGraph):
+    """Content hash of every graph property the dense build consumes."""
+    eff_hints = tuple(
+        (i, tuple(sorted((k, float(v)) for k, v in node.meta.items()
+                         if k.startswith("eff_"))))
+        for i, node in enumerate(g.nodes)
+        if node.meta and any(k.startswith("eff_") for k in node.meta))
     return (g.num_nodes, g.num_edges, g.edges.tobytes(),
             g.flops().tobytes(), g.bytes_out().tobytes(),
-            platform.devices, platform.link_bw.tobytes(),
-            platform.link_latency.tobytes())
+            tuple(g.op_types()), eff_hints)
+
+
+def _cache_key(g: CompGraph, platform: Platform):
+    return _graph_fingerprint(g) + (
+        platform.devices, platform.link_bw.tobytes(),
+        platform.link_latency.tobytes())
 
 
 def sim_arrays(g: CompGraph, platform: Platform) -> SimArrays:
@@ -485,6 +499,151 @@ def simulate_batch(g: CompGraph, placements, platform: Platform
         per_device_busy=np.asarray(res.per_device_busy),
         transfer_time=np.asarray(res.transfer_time),
     )
+
+
+# --------------------------------------------------------------------------
+# Multi-graph batching: pad per-graph SimArrays to a common (G, V_max) shape.
+#
+# The padding contract that makes ``simulate_jax`` run unchanged on a padded
+# graph: every pad slot is a zero-byte "data" op with zero duration and
+# sentinel-only predecessors, appended *after* the real topological order.
+# Data ops are exact no-ops in the scan (finish pinned to 0, queues and the
+# transfer accumulator untouched), so the padded makespan is bitwise the
+# unpadded one — the property the cross-graph trainer and the equivalence
+# tests in tests/test_multi_graph.py rely on.
+# --------------------------------------------------------------------------
+
+
+class SimArraysBatch(NamedTuple):
+    """G padded :class:`SimArrays` stacked on a leading graph axis.
+
+    ``arrays`` holds one SimArrays whose every field carries a leading G axis
+    (a valid pytree — ``jax.vmap(simulate_jax)`` maps straight over it).
+    ``node_mask`` marks real node slots; pad slots are inert data ops.
+    """
+
+    arrays: SimArrays        # each field: (G, ...) stacked padded view
+    node_mask: np.ndarray    # (G, V_max) bool — True at real node slots
+    num_nodes: np.ndarray    # (G,) int32 — real node count per graph
+
+    @property
+    def num_graphs(self) -> int:
+        return int(self.node_mask.shape[0])
+
+    @property
+    def max_nodes(self) -> int:
+        return int(self.node_mask.shape[1])
+
+    @property
+    def num_devices(self) -> int:
+        return int(self.arrays.op_time.shape[1])
+
+
+def pad_sim_arrays(sa: SimArrays, v_max: int,
+                   p_max: Optional[int] = None) -> SimArrays:
+    """Pad one graph's dense view to ``v_max`` node slots / ``p_max`` preds.
+
+    Pad slots are data ops (no duration, no bytes, sentinel preds), so
+    ``simulate_jax`` on the padded view matches the unpadded one exactly for
+    any ``v_max >= V`` — including V_max ≫ V.
+    """
+    n = sa.num_nodes
+    p = sa.preds.shape[1]
+    p_max = p if p_max is None else p_max
+    if v_max < n or p_max < p:
+        raise ValueError(f"cannot pad {n} nodes/{p} preds down to "
+                         f"({v_max}, {p_max})")
+    if v_max == n and p_max == p:
+        return sa
+    order = np.concatenate([sa.order,
+                            np.arange(n, v_max, dtype=np.int32)])
+    # Real rows keep their original sentinel n; pad rows use v_max.  Both
+    # slots are data ops in the padded view, so both sentinels are inert.
+    preds = np.full((v_max, p_max), v_max, dtype=np.int32)
+    preds[:n, :p] = sa.preds
+    levels = np.concatenate([sa.levels, np.zeros(v_max - n, np.int32)])
+    ndev = sa.op_time.shape[0]
+    op_time = np.zeros((ndev, v_max), np.float32)
+    op_time[:, :n] = sa.op_time
+    bytes_out = np.zeros(v_max + 1, np.float32)
+    bytes_out[:n] = sa.bytes_out[:n]
+    is_data = np.ones(v_max + 1, bool)
+    is_data[:n] = sa.is_data[:n]
+    return SimArrays(order=order, preds=preds, levels=levels,
+                     op_time=op_time, bytes_out=bytes_out, is_data=is_data,
+                     inv_bw=sa.inv_bw, lat=sa.lat,
+                     mem_capacity=sa.mem_capacity, queue_init=sa.queue_init)
+
+
+def sim_arrays_batch(graphs: Sequence[CompGraph], platform: Platform, *,
+                     v_max: Optional[int] = None) -> SimArraysBatch:
+    """Stack ``graphs`` into one padded (G, V_max) batch for ``platform``."""
+    if not graphs:
+        raise ValueError("sim_arrays_batch needs at least one graph")
+    if any(g.num_nodes == 0 for g in graphs):
+        raise ValueError("cannot batch an empty graph")
+    sas = [sim_arrays(g, platform) for g in graphs]
+    vm = max(sa.num_nodes for sa in sas)
+    if v_max is not None:
+        if v_max < vm:
+            raise ValueError(f"v_max={v_max} < largest graph ({vm} nodes)")
+        vm = v_max
+    pm = max(sa.preds.shape[1] for sa in sas)
+    padded = [pad_sim_arrays(sa, vm, pm) for sa in sas]
+    stacked = SimArrays(*[np.stack([getattr(sa, f) for sa in padded])
+                          for f in SimArrays._fields])
+    node_mask = np.zeros((len(sas), vm), dtype=bool)
+    for i, sa in enumerate(sas):
+        node_mask[i, :sa.num_nodes] = True
+    return SimArraysBatch(stacked, node_mask,
+                          np.asarray([sa.num_nodes for sa in sas], np.int32))
+
+
+_MULTI_SIM_FN = None
+
+
+def _multi_sim_fn():
+    global _MULTI_SIM_FN
+    if _MULTI_SIM_FN is None:
+        import jax
+        _MULTI_SIM_FN = jax.jit(jax.vmap(          # graph axis
+            jax.vmap(simulate_jax, in_axes=(None, 0))))   # chain axis
+    return _MULTI_SIM_FN
+
+
+def simulate_multi(batch: SimArraysBatch, placements) -> BatchSimResult:
+    """Evaluate placements for every graph of a padded batch in one call.
+
+    ``placements``: (G, V_max) — one placement per graph — or (G, B, V_max)
+    — B placements per graph.  Pad slots are ignored (forced to device 0
+    before dispatch); real slots are validated like :func:`simulate_batch`.
+    Returns a :class:`BatchSimResult` whose arrays keep the input's leading
+    (G,) or (G, B) shape.
+    """
+    placements = np.asarray(placements)
+    squeeze = placements.ndim == 2
+    if squeeze:
+        placements = placements[:, None, :]
+    G, vm = batch.num_graphs, batch.max_nodes
+    if placements.ndim != 3 or placements.shape[0] != G \
+            or placements.shape[2] != vm:
+        raise ValueError(f"expected placements (G={G}, B, V_max={vm}); got "
+                         f"{placements.shape}")
+    mask = batch.node_mask[:, None, :]
+    masked = np.where(mask, placements, 0)
+    if masked.size and (masked.min() < 0
+                        or masked.max() >= batch.num_devices):
+        # jnp gather would silently clip; fail loudly like simulate_batch.
+        raise ValueError(f"placement device ids must be in [0, "
+                         f"{batch.num_devices}); got "
+                         f"[{masked.min()}, {masked.max()}]")
+    res = _multi_sim_fn()(batch.arrays, masked.astype(np.int32))
+    fields = [np.asarray(a) for a in (res.latency, res.reward, res.oom,
+                                      res.per_device_busy,
+                                      res.transfer_time)]
+    if squeeze:
+        fields = [a[:, 0] for a in fields]
+    return BatchSimResult(*fields)
 
 
 def critical_path(g: CompGraph, platform: Platform) -> float:

@@ -28,6 +28,9 @@ __all__ = [
     "one_hot",
     "extract_features",
     "GraphArrays",
+    "GraphArraysBatch",
+    "shared_feature_config",
+    "batch_graph_arrays",
 ]
 
 
@@ -144,6 +147,97 @@ class GraphArrays:
     @property
     def num_nodes(self) -> int:
         return int(self.x.shape[0])
+
+
+@dataclasses.dataclass
+class GraphArraysBatch:
+    """G :class:`GraphArrays` padded/stacked to a common (G, V_max) shape.
+
+    The encoder-side twin of ``costmodel.SimArraysBatch``: one policy can run
+    vmapped over the graph axis because every graph shares the feature width
+    (build the per-graph arrays with :func:`shared_feature_config`) and the
+    node/edge axes are padded to the batch maximum.  Pad nodes carry zero
+    features and no adjacency; pad edges are (0, 0) with ``edge_mask`` False —
+    the GPN/policy mask them out of scores, components and log-probs.
+    """
+
+    x: np.ndarray            # (G, V_max, d) float32 — zero rows at pad slots
+    adj: np.ndarray          # (G, V_max, V_max) float32
+    edges: np.ndarray        # (G, E_max, 2) int32 — (0, 0) at pad slots
+    node_mask: np.ndarray    # (G, V_max) bool
+    edge_mask: np.ndarray    # (G, E_max) bool
+    num_nodes: np.ndarray    # (G,) int32
+    num_edges: np.ndarray    # (G,) int32
+
+    @property
+    def num_graphs(self) -> int:
+        return int(self.x.shape[0])
+
+    @property
+    def max_nodes(self) -> int:
+        return int(self.x.shape[1])
+
+    @property
+    def padded(self) -> bool:
+        """True when any graph actually needs its masks (unequal sizes)."""
+        return not (bool(self.node_mask.all()) and bool(self.edge_mask.all()))
+
+
+def shared_feature_config(graphs: Sequence[CompGraph],
+                          base: FeatureConfig = FeatureConfig()
+                          ) -> FeatureConfig:
+    """A FeatureConfig whose vocabularies span every graph in ``graphs``.
+
+    Cross-graph training needs one feature layout: the op-type / degree
+    one-hots must index into shared vocabularies or the same column means
+    different things on different graphs (and widths disagree).  Held-out
+    graphs evaluated zero-shot must be featurized with this same config.
+    """
+    ops, in_deg, out_deg = set(), set(), set()
+    for g in graphs:
+        ops.update(g.op_types())
+        in_deg.update(g.in_degrees().tolist())
+        out_deg.update(g.out_degrees().tolist())
+    return dataclasses.replace(
+        base,
+        op_vocab=tuple(sorted(ops)),
+        in_deg_vocab=tuple(sorted(in_deg)),
+        out_deg_vocab=tuple(sorted(out_deg)))
+
+
+def batch_graph_arrays(arrays: Sequence[GraphArrays], *,
+                       v_max: Optional[int] = None) -> GraphArraysBatch:
+    """Pad and stack per-graph arrays for the vmapped multi-graph policy."""
+    if not arrays:
+        raise ValueError("batch_graph_arrays needs at least one graph")
+    widths = {a.x.shape[1] for a in arrays}
+    if len(widths) != 1:
+        raise ValueError(
+            f"feature widths differ across graphs ({sorted(widths)}); "
+            "extract all graphs with one shared_feature_config()")
+    vm = max(a.num_nodes for a in arrays)
+    if v_max is not None:
+        if v_max < vm:
+            raise ValueError(f"v_max={v_max} < largest graph ({vm} nodes)")
+        vm = v_max
+    em = max(1, max(a.edges.shape[0] for a in arrays))
+    G, d = len(arrays), arrays[0].x.shape[1]
+    x = np.zeros((G, vm, d), np.float32)
+    adj = np.zeros((G, vm, vm), np.float32)
+    edges = np.zeros((G, em, 2), np.int32)
+    node_mask = np.zeros((G, vm), bool)
+    edge_mask = np.zeros((G, em), bool)
+    for i, a in enumerate(arrays):
+        n, e = a.num_nodes, a.edges.shape[0]
+        x[i, :n] = a.x
+        adj[i, :n, :n] = a.adj
+        edges[i, :e] = a.edges
+        node_mask[i, :n] = True
+        edge_mask[i, :e] = True
+    return GraphArraysBatch(
+        x=x, adj=adj, edges=edges, node_mask=node_mask, edge_mask=edge_mask,
+        num_nodes=np.asarray([a.num_nodes for a in arrays], np.int32),
+        num_edges=np.asarray([a.edges.shape[0] for a in arrays], np.int32))
 
 
 def extract_features(g: CompGraph,

@@ -89,19 +89,28 @@ def encoder_init(rng, d_in: int, hidden: int, *, layer_trans: int = 2,
 
 def encoder_apply(params: Params, x: jnp.ndarray, adj: jnp.ndarray, *,
                   dropout_rng=None, edge_dropout: float = 0.0,
-                  transform: bool = True) -> jnp.ndarray:
+                  transform: bool = True,
+                  node_mask: "jnp.ndarray | None" = None) -> jnp.ndarray:
     """X^(0) → Z (Eq. 6).  ``edge_dropout`` implements Appendix-H
     ``dropout_network`` (edges dropped during exploration).
 
     ``transform=False`` skips the input MLP — used on rounds ≥ 1 of the
     multi-round rollout (Alg. 1 line 12) where the state is already at the
     hidden width.
+
+    ``node_mask`` (V,) bool marks real nodes of a padded multi-graph batch.
+    Pad rows are zeroed after the input MLP (its bias would otherwise give
+    them nonzero embeddings); they have no edges, so the GCN layers keep them
+    at zero and real nodes never see them.  ``None`` keeps the exact
+    single-graph computation.
     """
     if dropout_rng is not None and edge_dropout > 0.0:
         keep = jax.random.bernoulli(dropout_rng, 1.0 - edge_dropout, adj.shape)
         adj = adj * keep.astype(adj.dtype)
     a_hat = normalize_adjacency(adj)
     z = mlp_apply(params["trans"], x, act_final=True) if transform else x
+    if node_mask is not None:
+        z = z * node_mask.astype(z.dtype)[:, None]
     # The layer-param keys identify the model (keeps the pytree string-free).
     model = "gcn" if (params["gnn"] and "w" in params["gnn"][0]) else "sage"
     n_layers = len(params["gnn"])

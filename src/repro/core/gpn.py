@@ -62,18 +62,25 @@ def edge_scores(params: Dict, z: jnp.ndarray, edges: jnp.ndarray, *,
 
 
 def _dominant_edges(scores: jnp.ndarray, edges: jnp.ndarray,
-                    num_nodes: int) -> jnp.ndarray:
+                    num_nodes: int,
+                    edge_mask: "jnp.ndarray | None" = None) -> jnp.ndarray:
     """Eq. 9 — retain, per node, its max-score incident edge (N = in ∪ out).
 
     An edge survives if it is the dominant edge of either endpoint.  Ties keep
-    all tied edges (harmless: merges stay symmetric).
+    all tied edges (harmless: merges stay symmetric).  Masked (pad) edges
+    score −inf and are never retained.
     """
     src, dst = edges[:, 0], edges[:, 1]
     neg = jnp.float32(-jnp.inf)
+    if edge_mask is not None:
+        scores = jnp.where(edge_mask, scores, neg)
     node_max = jnp.full((num_nodes,), neg)
     node_max = node_max.at[src].max(scores)
     node_max = node_max.at[dst].max(scores)
-    return (scores >= node_max[src]) | (scores >= node_max[dst])
+    retained = (scores >= node_max[src]) | (scores >= node_max[dst])
+    if edge_mask is not None:
+        retained = retained & edge_mask
+    return retained
 
 
 def _connected_components(edges: jnp.ndarray, retained: jnp.ndarray,
@@ -111,31 +118,53 @@ def _connected_components(edges: jnp.ndarray, retained: jnp.ndarray,
 
 
 def parse_graph(scores: jnp.ndarray, edges: jnp.ndarray, z: jnp.ndarray,
-                adj: jnp.ndarray, *, straight_through: bool = True
-                ) -> ParseResult:
-    """Eq. 9–11: dominant edges → components → X, A', Z'."""
+                adj: jnp.ndarray, *, straight_through: bool = True,
+                node_mask: "jnp.ndarray | None" = None,
+                edge_mask: "jnp.ndarray | None" = None) -> ParseResult:
+    """Eq. 9–11: dominant edges → components → X, A', Z'.
+
+    ``node_mask``/``edge_mask`` support padded multi-graph batches: pad edges
+    never dominate, never merge components and never gate contributions; pad
+    nodes (isolated by construction) end up as singleton clusters that are
+    excluded from ``active`` — and therefore from the policy's log-prob,
+    entropy and ``num_groups``.  ``None`` masks keep the exact single-graph
+    computation.
+    """
     num_nodes = z.shape[0]
     if edges.shape[0] == 0:
         labels = jnp.arange(num_nodes, dtype=jnp.int32)
         assign = jnp.eye(num_nodes, dtype=jnp.float32)
+        active = (jnp.ones((num_nodes,), bool) if node_mask is None
+                  else node_mask)
         return ParseResult(labels, assign, jnp.zeros_like(adj), z,
-                           jnp.ones((num_nodes,), bool), scores,
+                           active, scores,
                            jnp.zeros((0,), bool),
-                           jnp.int32(num_nodes))
+                           active.sum().astype(jnp.int32))
 
-    retained = _dominant_edges(scores, edges, num_nodes)
+    retained = _dominant_edges(scores, edges, num_nodes, edge_mask)
     labels = _connected_components(edges, retained, num_nodes)
 
     # X: (V, V) one-hot rows into the component-representative slot (Eq. 10).
     assign = jax.nn.one_hot(labels, num_nodes, dtype=jnp.float32)
-    active = assign.sum(0) > 0
+    if node_mask is None:
+        active = assign.sum(0) > 0
+    else:
+        # A slot is active only if a *real* node landed in it.
+        active = (assign * node_mask.astype(assign.dtype)[:, None]).sum(0) > 0
 
     # Differentiable gate: a node contributes through its dominant edge score.
     src, dst = edges[:, 0], edges[:, 1]
+    g_scores = scores if edge_mask is None else \
+        jnp.where(edge_mask, scores, -jnp.inf)
     gate = jnp.zeros((num_nodes,), scores.dtype)
-    gate = gate.at[src].max(scores)
-    gate = gate.at[dst].max(scores)
-    has_edge = jnp.zeros((num_nodes,), bool).at[src].set(True).at[dst].set(True)
+    gate = gate.at[src].max(g_scores)
+    gate = gate.at[dst].max(g_scores)
+    if edge_mask is None:
+        has_edge = (jnp.zeros((num_nodes,), bool)
+                    .at[src].set(True).at[dst].set(True))
+    else:
+        has_edge = (jnp.zeros((num_nodes,), bool)
+                    .at[src].max(edge_mask).at[dst].max(edge_mask))
     gate = jnp.where(has_edge, gate, 1.0)
     if straight_through:
         gate = gate + jax.lax.stop_gradient(1.0 - gate)
@@ -145,7 +174,9 @@ def parse_graph(scores: jnp.ndarray, edges: jnp.ndarray, z: jnp.ndarray,
     pooled_z = jax.ops.segment_sum(z * gate[:, None], labels,
                                    num_segments=num_nodes)          # Z'
     ls, ld = labels[src], labels[dst]
-    pooled_adj = jnp.zeros_like(adj).at[ls, ld].add(1.0)            # Eq. 11
+    edge_w = (jnp.ones_like(scores) if edge_mask is None
+              else edge_mask.astype(adj.dtype))
+    pooled_adj = jnp.zeros_like(adj).at[ls, ld].add(edge_w)         # Eq. 11
     pooled_adj = (pooled_adj > 0).astype(adj.dtype)
     pooled_adj = pooled_adj * (1.0 - jnp.eye(num_nodes, dtype=adj.dtype))
     return ParseResult(labels, assign, pooled_adj, pooled_z, active,
@@ -154,8 +185,11 @@ def parse_graph(scores: jnp.ndarray, edges: jnp.ndarray, z: jnp.ndarray,
 
 def gpn_apply(params: Dict, z: jnp.ndarray, edges: jnp.ndarray,
               adj: jnp.ndarray, *, dropout_rng=None,
-              dropout_parsing: float = 0.0) -> ParseResult:
+              dropout_parsing: float = 0.0,
+              node_mask: "jnp.ndarray | None" = None,
+              edge_mask: "jnp.ndarray | None" = None) -> ParseResult:
     """Full §2.4 grouping step: scores (Eq. 7) then parse (Eq. 9–11)."""
     s = edge_scores(params, z, edges, dropout_rng=dropout_rng,
                     dropout_parsing=dropout_parsing)
-    return parse_graph(s, edges, z, adj)
+    return parse_graph(s, edges, z, adj, node_mask=node_mask,
+                       edge_mask=edge_mask)

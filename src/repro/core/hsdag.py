@@ -35,15 +35,19 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..optim import adam, apply_updates
-from .costmodel import Platform, sim_arrays, simulate_jax
-from .features import GraphArrays
+from .costmodel import (Platform, SimArraysBatch, sim_arrays,
+                        sim_arrays_batch, simulate, simulate_jax)
+from .features import (FeatureConfig, GraphArrays, GraphArraysBatch,
+                       batch_graph_arrays, extract_features,
+                       shared_feature_config)
 from .gnn import encoder_apply, encoder_init, mlp_apply, mlp_init
 from .gpn import ParseResult, gpn_apply, gpn_init
 from .graph import CompGraph
 from .policy import PolicyOutput, policy_apply, policy_init
 from .reinforce import RolloutBuffer, RunningBaseline, step_weights
 
-__all__ = ["HSDAGConfig", "HSDAG", "SearchResult"]
+__all__ = ["HSDAGConfig", "HSDAG", "SearchResult",
+           "MultiGraphTrainer", "MultiSearchResult"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -97,15 +101,42 @@ class SearchResult(NamedTuple):
     chain_best: Optional[np.ndarray] = None   # (B,) per-chain best latency
 
 
-def _rms_normalize(z: jnp.ndarray) -> jnp.ndarray:
-    rms = jnp.sqrt(jnp.mean(jnp.square(z)) + 1e-6)
-    return z / rms
+class MultiSearchResult(NamedTuple):
+    """Outcome of one joint cross-graph training run (``train_multi``)."""
+
+    best_placements: List[np.ndarray]   # per graph: best sampled, (V_g,) i64
+    best_latencies: np.ndarray          # (G,) seconds
+    greedy_placements: List[np.ndarray]  # per graph: greedy decode after train
+    greedy_latencies: np.ndarray        # (G,) seconds
+    history: List[dict]                 # per-episode stats
+    params: Dict                        # the one shared policy/GNN/GPN tree
+    wall_time_s: float
+    num_evaluations: int                # placements scored (episodes·T·G·B)
+    evals_per_sec: float
+    chain_best: Optional[np.ndarray] = None   # (G, B) per-chain best latency
+
+
+def _rms_normalize(z: jnp.ndarray, node_mask=None) -> jnp.ndarray:
+    if node_mask is None:
+        rms = jnp.sqrt(jnp.mean(jnp.square(z)) + 1e-6)
+        return z / rms
+    # Padded batch: the mean-square runs over real rows only, otherwise the
+    # pad fraction (which varies per graph) would rescale real activations.
+    m = node_mask.astype(z.dtype)[:, None]
+    mean_sq = jnp.sum(jnp.square(z) * m) / (jnp.sum(m) * z.shape[1])
+    return z / jnp.sqrt(mean_sq + 1e-6)
 
 
 def _split_chain_keys(rngs: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
     """Per-chain ``rng, key = split(rng)`` over a (B, 2) key batch."""
     both = jax.vmap(jax.random.split)(rngs)          # (B, 2, 2)
     return both[:, 0], both[:, 1]
+
+
+def _split_multi_keys(rngs: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-chain key split over a (G, B, 2) key batch."""
+    both = jax.vmap(jax.vmap(jax.random.split))(rngs)    # (G, B, 2, 2)
+    return both[:, :, 0], both[:, :, 1]
 
 
 class HSDAG:
@@ -116,6 +147,9 @@ class HSDAG:
         self.params: Optional[Dict] = None
         self._opt = adam(cfg.learning_rate)
         self._opt_state = None
+        # Set by train_multi(); the config held-out graphs must be featurized
+        # with so the shared policy sees a consistent feature layout.
+        self.feature_config: Optional[FeatureConfig] = None
 
     # ------------------------------------------------------------------ init
     def init(self, rng, arrays: GraphArrays) -> Dict:
@@ -138,25 +172,34 @@ class HSDAG:
     # ------------------------------------------------------------- one round
     def _step(self, params: Dict, z: jnp.ndarray, x0: jnp.ndarray,
               adj: jnp.ndarray, edges: jnp.ndarray, rng, *,
-              first: bool, train: bool, greedy: bool = False) -> StepOutput:
-        """One Alg.-1 iteration: encode → parse → place → state update."""
+              first: bool, train: bool, greedy: bool = False,
+              node_mask=None, edge_mask=None) -> StepOutput:
+        """One Alg.-1 iteration: encode → parse → place → state update.
+
+        ``node_mask``/``edge_mask`` (``None`` for single-graph use) thread the
+        padded multi-graph batch contract through the encoder, the GPN and the
+        state update; the masked computation on an unpadded graph is the
+        unmasked one.
+        """
         cfg = self.cfg
         k_net, k_parse, k_pol = jax.random.split(rng, 3)
         feats = x0 if first else z
         z_enc = encoder_apply(
             params["enc"], feats, adj, transform=first,
             dropout_rng=k_net if train else None,
-            edge_dropout=cfg.dropout_network if train else 0.0)
+            edge_dropout=cfg.dropout_network if train else 0.0,
+            node_mask=node_mask)
         parse = gpn_apply(
             params["gpn"], z_enc, edges, adj,
             dropout_rng=k_parse if train else None,
-            dropout_parsing=cfg.dropout_parsing if train else 0.0)
+            dropout_parsing=cfg.dropout_parsing if train else 0.0,
+            node_mask=node_mask, edge_mask=edge_mask)
         pol = policy_apply(params["pol"], parse.pooled_z, parse.active,
                            parse.labels, k_pol, greedy=greedy)
         # Alg. 1 line 10: Z_v ← Z_v + Z_{v'}.
         z_next = z_enc + parse.pooled_z[parse.labels]
         if cfg.state_norm:
-            z_next = _rms_normalize(z_next)
+            z_next = _rms_normalize(z_next, node_mask)
         return StepOutput(pol, parse, z_next)
 
     # ------------------------------------------------- scalar (reference) jit
@@ -514,6 +557,300 @@ class HSDAG:
                             self.params, {}, wall, n_evals,
                             n_evals / max(wall, 1e-9), chain_best)
 
+    # ---------------------------------------------- multi-graph (G, B) engine
+    def _make_multi(self, gb: GraphArraysBatch, simb: SimArraysBatch):
+        """Jitted (G, B)-chain window rollout + replay over a padded batch.
+
+        Structure mirrors ``_make_batched`` with one extra vmapped graph axis:
+        per-graph features/adjacency/edges/masks/SimArrays map over G while
+        the parameter tree is shared (closed over), so one gradient step
+        trains one policy on every graph at once.  When the batch needs no
+        padding (all graphs the same size — in particular G=1), masks are
+        dropped at trace time and each (g, b) chain runs the exact
+        single-graph batched computation.
+        """
+        cfg = self.cfg
+        x0 = jnp.asarray(gb.x)                       # (G, V, d)
+        adj = jnp.asarray(gb.adj)                    # (G, V, V)
+        edges = jnp.asarray(gb.edges)                # (G, E, 2)
+        use_masks = gb.padded
+        nmask = jnp.asarray(gb.node_mask) if use_masks else None
+        emask = jnp.asarray(gb.edge_mask) if use_masks else None
+        sim = jax.tree.map(jnp.asarray, simb.arrays)  # leaves lead with G
+
+        def _chain_sample(params, xg, ag, eg, nmg, emg, simg, z, key,
+                          first: bool):
+            out = self._step(params, z, xg, ag, eg, key,
+                             first=first, train=True,
+                             node_mask=nmg, edge_mask=emg)
+            s = simulate_jax(simg, out.policy.fine_placement)
+            return (out.policy.fine_placement, out.parse.num_groups,
+                    out.z_next, s.reward, s.latency)
+
+        def _vsample(params, z, keys, first: bool):
+            """z (G, B, V, d), keys (G, B, 2) → per-(g, b) samples."""
+
+            def per_graph(xg, ag, eg, nmg, emg, simg, z_b, k_b):
+                return jax.vmap(lambda z1, k1: _chain_sample(
+                    params, xg, ag, eg, nmg, emg, simg, z1, k1, first)
+                )(z_b, k_b)
+
+            if use_masks:
+                return jax.vmap(per_graph)(x0, adj, edges, nmask, emask,
+                                           sim, z, keys)
+            return jax.vmap(
+                lambda xg, ag, eg, simg, z_b, k_b: per_graph(
+                    xg, ag, eg, None, None, simg, z_b, k_b)
+            )(x0, adj, edges, sim, z, keys)
+
+        def _rollout_window(params, z, rngs, num_steps: int,
+                            start_first: bool):
+            """→ (z_final, rngs_final, keys (T,G,B,2), fine (T,G,B,V),
+                  ngroups (T,G,B), rewards (T,G,B), latencies (T,G,B))."""
+
+            def body(carry, _):
+                z_c, rngs_c = carry
+                rngs_c, keys = _split_multi_keys(rngs_c)
+                fine, ngroups, z_next, rew, lat = _vsample(
+                    params, z_c, keys, first=False)
+                return (z_next, rngs_c), (keys, fine, ngroups, rew, lat)
+
+            if start_first:
+                rngs, keys0 = _split_multi_keys(rngs)
+                fine0, ng0, z, rew0, lat0 = _vsample(params, z, keys0,
+                                                     first=True)
+                (z, rngs), tail = jax.lax.scan(body, (z, rngs), None,
+                                               length=num_steps - 1)
+                head = (keys0, fine0, ng0, rew0, lat0)
+                outs = tuple(jnp.concatenate([h[None], t], axis=0)
+                             for h, t in zip(head, tail))
+            else:
+                (z, rngs), outs = jax.lax.scan(body, (z, rngs), None,
+                                               length=num_steps)
+            return (z, rngs) + outs
+
+        def _window_loss(params, z0, keys, weights, num_steps: int,
+                         start_first: bool):
+            """Differentiable replay (Eq. 14) averaged over every (g, b)
+            chain.  keys (T,G,B,2), weights (T,G,B)."""
+
+            def _chain_loss(params_, xg, ag, eg, nmg, emg, z1, k1, w1,
+                            first: bool):
+                out = self._step(params_, z1, xg, ag, eg, k1,
+                                 first=first, train=True,
+                                 node_mask=nmg, edge_mask=emg)
+                loss = -out.policy.logp * w1
+                loss = loss - cfg.entropy_coef * out.policy.entropy
+                return out.z_next, loss
+
+            def _vloss(z_c, k_t, w_t, first: bool):
+                def per_graph(xg, ag, eg, nmg, emg, z_b, k_b, w_b):
+                    z_n, l_b = jax.vmap(
+                        lambda z1, k1, w1: _chain_loss(
+                            params, xg, ag, eg, nmg, emg, z1, k1, w1, first)
+                    )(z_b, k_b, w_b)
+                    return z_n, l_b
+
+                if use_masks:
+                    return jax.vmap(per_graph)(x0, adj, edges, nmask, emask,
+                                               z_c, k_t, w_t)
+                return jax.vmap(
+                    lambda xg, ag, eg, z_b, k_b, w_b: per_graph(
+                        xg, ag, eg, None, None, z_b, k_b, w_b)
+                )(x0, adj, edges, z_c, k_t, w_t)
+
+            total = jnp.float32(0.0)
+            z = z0
+            if start_first:
+                z, l0 = _vloss(z, keys[0], weights[0], first=True)
+                total = total + jnp.sum(l0)
+                keys, weights = keys[1:], weights[1:]
+
+            def body(carry, xs):
+                z_c, tot = carry
+                k_t, w_t = xs
+                z_c, l_t = _vloss(z_c, k_t, w_t, first=False)
+                return (z_c, tot + jnp.sum(l_t)), None
+
+            (z, total), _ = jax.lax.scan(body, (z, total), (keys, weights))
+            nchains = z0.shape[0] * z0.shape[1]
+            return total / nchains
+
+        rollout_window = jax.jit(_rollout_window,
+                                 static_argnames=("num_steps", "start_first"))
+        grad_fn = jax.jit(jax.grad(_window_loss),
+                          static_argnames=("num_steps", "start_first"))
+        return rollout_window, grad_fn
+
+    def train_multi(self, graphs: List[CompGraph],
+                    arrays: Optional[List[GraphArrays]] = None, *,
+                    platform: Platform,
+                    rng=None, verbose: bool = False,
+                    feature_cfg: Optional[FeatureConfig] = None,
+                    reward_norm: str = "pergraph") -> MultiSearchResult:
+        """Train ONE policy jointly over ``graphs`` (GDP/Placeto-style).
+
+        Runs ``(G, batch_chains)`` REINFORCE chains in a single jitted
+        window rollout per episode — every chain's rewards come from the
+        padded in-jit cost model (``simulate_jax`` over the stacked
+        :class:`SimArraysBatch`), and one shared parameter tree receives the
+        averaged Eq.-14 gradient.  Example::
+
+            graphs = [inception_v3(), resnet50()]
+            trainer = MultiGraphTrainer(HSDAGConfig(batch_chains=8))
+            res = trainer.train(graphs, platform=paper_platform(),
+                                rng=jax.random.PRNGKey(0))
+            bert_lat = trainer.evaluate_zero_shot(  # held-out transfer
+                bert_base(), platform=paper_platform())[1]
+
+        ``reward_norm="pergraph"`` standardizes each graph's rewards within
+        the update window so graphs with very different latency scales (BERT
+        at ~60 ms vs Inception at ~9 ms) contribute comparably scaled
+        gradients; it subsumes ``cfg.use_baseline`` (the standardization is
+        itself a per-graph baseline, so the raw-scale scalar EMA is not also
+        subtracted).  ``"none"`` keeps raw 1/latency rewards and the scalar
+        baseline (with G=1 this reproduces the single-graph batched engine
+        bit for bit).
+
+        When ``arrays`` is omitted, features are extracted with a
+        :func:`shared_feature_config` spanning all graphs (stored on
+        ``self.feature_config`` — held-out graphs must reuse it).
+        """
+        cfg = self.cfg
+        if not graphs:
+            raise ValueError("train_multi needs at least one graph")
+        if reward_norm not in ("none", "pergraph"):
+            raise ValueError(f"unknown reward_norm {reward_norm!r}")
+        if cfg.num_devices > platform.num_devices:
+            raise ValueError(
+                f"cfg.num_devices={cfg.num_devices} exceeds the platform's "
+                f"{platform.num_devices} devices")
+        G = len(graphs)
+        nchains = max(1, cfg.batch_chains)
+        t_start = time.perf_counter()
+
+        if arrays is None:
+            fc = feature_cfg or shared_feature_config(graphs)
+            self.feature_config = fc
+            arrays = [extract_features(g, fc) for g in graphs]
+        elif feature_cfg is not None:
+            self.feature_config = feature_cfg
+        gb = batch_graph_arrays(arrays)
+        simb = sim_arrays_batch(graphs, platform, v_max=gb.max_nodes)
+
+        rng = rng if rng is not None else jax.random.PRNGKey(cfg.seed)
+        if self.params is None:
+            rng, k_init = jax.random.split(rng)
+            self.init(k_init, arrays[0])
+
+        rollout_window, grad_fn = self._make_multi(gb, simb)
+        # The per-graph standardization below already centers rewards (it IS
+        # a per-graph baseline); layering the scalar EMA baseline on top
+        # would subtract a raw-reward-scale value (~1/latency) from ~N(0, 1)
+        # standardized rewards and swamp the learning signal.
+        baseline = (RunningBaseline()
+                    if cfg.use_baseline and reward_norm != "pergraph"
+                    else None)
+
+        num_nodes = [int(n) for n in gb.num_nodes]
+        best_latencies = np.full(G, np.inf)
+        best_placements = [np.zeros(n, dtype=np.int64) for n in num_nodes]
+        chain_best = np.full((G, nchains), np.inf)
+        history: List[dict] = []
+
+        # Graph 0 / chain 0 carries the exact single-graph batched PRNG
+        # stream (and graph 0's chain row is exactly ``_search_batched``'s),
+        # so G=1 with reward_norm="none" reproduces that engine bit for bit.
+        def _graph_base(g: int):
+            return rng if g == 0 else jax.random.fold_in(rng, nchains + g)
+
+        chain_rngs = jnp.stack([
+            jnp.stack([_graph_base(g)] +
+                      [jax.random.fold_in(_graph_base(g), b)
+                       for b in range(1, nchains)])
+            for g in range(G)])                       # (G, B, 2)
+        x0 = jnp.asarray(gb.x)
+        z = jnp.broadcast_to(x0[:, None], (G, nchains) + x0.shape[1:])
+        z0_window = z
+        first_of_window = True
+        tsteps = cfg.update_timestep
+
+        for episode in range(cfg.max_episodes):
+            t_ep = time.perf_counter()
+            (z, chain_rngs, keys, fines, ngroups, rewards,
+             latencies) = rollout_window(
+                self.params, z0_window, chain_rngs,
+                num_steps=tsteps, start_first=first_of_window)
+            rewards = np.asarray(rewards, dtype=np.float64)     # (T, G, B)
+            latencies = np.asarray(latencies, dtype=np.float64)
+            fines_np = np.asarray(fines)                        # (T, G, B, V)
+
+            # Bookkeeping in (t, g, b) order — reduces to the single-graph
+            # engine's (t, b) order at G=1 (EMA baseline order and strict-<
+            # best tie-breaks matter for reproducibility).
+            for t in range(tsteps):
+                for g in range(G):
+                    for b in range(nchains):
+                        if baseline is not None:
+                            baseline.update(rewards[t, g, b])
+                        if latencies[t, g, b] < best_latencies[g]:
+                            best_latencies[g] = float(latencies[t, g, b])
+                            best_placements[g] = (
+                                fines_np[t, g, b, :num_nodes[g]]
+                                .astype(np.int64))
+            chain_best = np.minimum(chain_best, latencies.min(axis=0))
+
+            # ---- shared-policy update over the (G, B, T) window ----
+            r_for_w = rewards
+            if reward_norm == "pergraph":
+                mean_g = rewards.mean(axis=(0, 2), keepdims=True)
+                std_g = rewards.std(axis=(0, 2), keepdims=True)
+                r_for_w = (rewards - mean_g) / (std_g + 1e-8)
+            weights_gbt = step_weights(
+                np.transpose(r_for_w, (1, 2, 0)), cfg.gamma,
+                reward_to_go=cfg.reward_to_go,
+                baseline=(baseline.value if baseline is not None else None),
+                normalize=cfg.normalize_weights)
+            weights_tgb = jnp.asarray(np.transpose(weights_gbt, (2, 0, 1)))
+            for _ in range(max(1, cfg.k_epochs)):
+                grads = grad_fn(self.params, z0_window, keys, weights_tgb,
+                                num_steps=tsteps,
+                                start_first=first_of_window)
+                updates, self._opt_state = self._opt.update(
+                    grads, self._opt_state, self.params)
+                self.params = apply_updates(self.params, updates)
+            z0_window = z
+            first_of_window = False
+            history.append({
+                "episode": episode,
+                "mean_reward": float(np.mean(rewards)),
+                "best_latency": float(best_latencies.min()),
+                "per_graph_best": [float(l) for l in best_latencies],
+                "mean_groups": float(np.mean(np.asarray(ngroups))),
+                "wall_s": time.perf_counter() - t_ep,
+            })
+            if verbose:
+                h = history[-1]
+                per_g = "/".join(f"{l*1e3:.2f}" for l in h["per_graph_best"])
+                print(f"ep {episode:3d} reward {h['mean_reward']:.4g} "
+                      f"best[ms] {per_g} groups {h['mean_groups']:.1f} "
+                      f"G={G} B={nchains}")
+
+        # Per-graph greedy decodes with the final shared policy.
+        greedy_placements: List[np.ndarray] = []
+        greedy_latencies = np.empty(G)
+        for g in range(G):
+            p = self.place(arrays[g], greedy=True).astype(np.int64)
+            greedy_placements.append(p)
+            greedy_latencies[g] = simulate(graphs[g], p, platform).latency
+
+        wall = time.perf_counter() - t_start
+        n_evals = cfg.max_episodes * tsteps * G * nchains
+        return MultiSearchResult(
+            best_placements, best_latencies, greedy_placements,
+            greedy_latencies, history, self.params, wall, n_evals,
+            n_evals / max(wall, 1e-9), chain_best)
+
     # ------------------------------------------------------------- inference
     def place(self, arrays: GraphArrays, rng=None,
               greedy: bool = True) -> np.ndarray:
@@ -524,3 +861,79 @@ class HSDAG:
         fine, _, _, _ = rollout_step(self.params, jnp.asarray(arrays.x), rng,
                                      first=True, greedy=greedy)
         return np.asarray(fine)
+
+
+class MultiGraphTrainer(HSDAG):
+    """Cross-graph trainer: one policy over a padded multi-graph batch.
+
+    A thin facade over :meth:`HSDAG.train_multi` that pins the reward
+    normalization, remembers the shared feature layout for held-out graphs,
+    and adds zero-shot evaluation plus checkpointing of the shared policy::
+
+        trainer = MultiGraphTrainer(HSDAGConfig(batch_chains=8))
+        res = trainer.train([inception_v3(), resnet50()],
+                            platform=paper_platform())
+        placement, latency = trainer.evaluate_zero_shot(
+            bert_base(), platform=paper_platform())
+        trainer.save_policy("ckpt/joint")
+    """
+
+    def __init__(self, cfg: HSDAGConfig = HSDAGConfig(), *,
+                 reward_norm: str = "pergraph"):
+        super().__init__(cfg)
+        if reward_norm not in ("none", "pergraph"):
+            raise ValueError(f"unknown reward_norm {reward_norm!r}")
+        self.reward_norm = reward_norm
+
+    def train(self, graphs: List[CompGraph],
+              arrays: Optional[List[GraphArrays]] = None, *,
+              platform: Platform, rng=None, verbose: bool = False,
+              feature_cfg: Optional[FeatureConfig] = None
+              ) -> MultiSearchResult:
+        return self.train_multi(graphs, arrays, platform=platform, rng=rng,
+                                verbose=verbose, feature_cfg=feature_cfg,
+                                reward_norm=self.reward_norm)
+
+    def evaluate_zero_shot(self, graph: CompGraph, *, platform: Platform,
+                           arrays: Optional[GraphArrays] = None,
+                           rng=None) -> Tuple[np.ndarray, float]:
+        """Greedy-decode an *unseen* graph with the trained shared policy.
+
+        → (placement, latency).  The graph is featurized with the training
+        run's shared feature config so one-hot columns line up.
+        """
+        assert self.params is not None, "train() first"
+        if arrays is None:
+            if self.feature_config is None:
+                raise ValueError(
+                    "no stored feature_config; pass arrays= extracted with "
+                    "the training config")
+            arrays = extract_features(graph, self.feature_config)
+        p = self.place(arrays, rng=rng, greedy=True).astype(np.int64)
+        return p, simulate(graph, p, platform).latency
+
+    # ------------------------------------------------------------ checkpoint
+    def save_policy(self, directory: str, step: int = 0,
+                    meta: Optional[Dict] = None) -> None:
+        """Atomically persist the shared policy (+ feature layout)."""
+        from ..checkpoint import save_policy
+        assert self.params is not None, "train() first"
+        save_policy(directory, self.params, step=step,
+                    feature_config=self.feature_config, meta=meta)
+
+    def load_policy(self, directory: str,
+                    step: Optional[int] = None) -> int:
+        """Restore a saved shared policy into this trainer.
+
+        ``self.params`` must already be initialized (``init()`` on any graph
+        featurized with the same config) so the pytree structure is known.
+        Restores the stored feature config onto ``self.feature_config`` and
+        returns the restored step.
+        """
+        from ..checkpoint import restore_policy
+        assert self.params is not None, \
+            "init() first (the checkpoint restores into the param structure)"
+        self.params, self.feature_config, step = restore_policy(
+            directory, self.params, step=step)
+        self._opt_state = self._opt.init(self.params)
+        return step

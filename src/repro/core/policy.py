@@ -7,9 +7,15 @@ gather by label, which is X applied as an index map).
 
 Batch contract: everything here is written per-chain — (V,)-shaped slots, one
 PRNG key, ``axis=-1`` reductions — and is lifted over a chain axis with
-``jax.vmap`` by the batched rollout engine (hsdag ``batch_chains``).  Keep new
-ops vmap-safe: no data-dependent shapes, no host callbacks, per-chain keys
-come from the caller (never split a shared key inside).
+``jax.vmap`` by the batched rollout engine (hsdag ``batch_chains``), and over
+a further *graph* axis by the multi-graph trainer.  Keep new ops vmap-safe:
+no data-dependent shapes, no host callbacks, per-chain keys come from the
+caller (never split a shared key inside).
+
+Padded multi-graph batches need no masking here beyond ``active``: the GPN
+already excludes clusters containing only pad nodes from ``active``, so their
+slots contribute nothing to ``logp``/``entropy``; pad entries of
+``fine_placement`` are valid device ids that the padded simulator ignores.
 """
 from __future__ import annotations
 

@@ -122,6 +122,48 @@ def test_sim_arrays_cached_per_graph_platform(diamond):
     assert sa1.num_nodes == diamond.num_nodes
 
 
+def test_sim_arrays_cache_not_stale_after_mutation():
+    """Regression: mutating a graph after its first simulation must rebuild
+    the cached SimArrays — topology edits, op-type rewrites and in-place
+    eff-hint edits all change simulated latency and previously (for the
+    latter two) served stale durations."""
+    plat = paper_platform()
+    g = make_diamond()
+    p = np.zeros(g.num_nodes, int)
+    sa0 = sim_arrays(g, plat)
+    np.testing.assert_allclose(
+        simulate_batch(g, p[None], plat).latency[0],
+        simulate(g, p, plat).latency, rtol=RTOL)
+
+    # 1. topology + work mutation (add_op/add_edge)
+    g.add_op("extra", "MatMul", ["out"], (1, 8), flops=5e6, bytes_out=32)
+    p2 = np.zeros(g.num_nodes, int)
+    assert sim_arrays(g, plat) is not sa0
+    np.testing.assert_allclose(
+        simulate_batch(g, p2[None], plat).latency[0],
+        simulate(g, p2, plat).latency, rtol=RTOL)
+
+    # 2. op-type rewrite: changes the op class (duration + data mask) only —
+    #    flops/bytes/edges are untouched, so a topology-only key goes stale.
+    sa1 = sim_arrays(g, plat)
+    g.nodes[g.index_of("a")].op_type = "ReLU"     # gemm → eltwise
+    assert sim_arrays(g, plat) is not sa1
+    np.testing.assert_allclose(
+        simulate_batch(g, p2[None], plat).latency[0],
+        simulate(g, p2, plat).latency, rtol=RTOL)
+
+    # 3. in-place eff-hint edit (meta["eff_*"]) — per-device durations shift.
+    sa2 = sim_arrays(g, plat)
+    node = g.nodes[g.index_of("b")]
+    node.meta = dict(node.meta or {}, eff_cpu=0.05)
+    assert sim_arrays(g, plat) is not sa2
+    batch_lat = simulate_batch(g, p2[None], plat).latency[0]
+    host_lat = simulate(g, p2, plat).latency
+    np.testing.assert_allclose(batch_lat, host_lat, rtol=RTOL)
+    # the hint actually mattered (slower CPU conv → larger makespan)
+    assert host_lat > simulate(make_diamond(), p, plat).latency
+
+
 def test_sim_arrays_levels_are_topological(diamond):
     sa = sim_arrays(diamond, paper_platform())
     for s, d in diamond.edges:

@@ -1,0 +1,84 @@
+"""Golden latency regression tests for the calibrated cost model.
+
+The RL reward is 1/latency from ``simulate`` on ``paper_platform()``; every
+learned result (Table 2, the new joint-training rows) silently shifts if the
+cost model drifts.  These constants pin the deterministic baselines for the
+Table-2 graphs — CPU-only / GPU-only list-scheduled makespans and the
+critical-path lower bound — so a change to device constants, op classing,
+queue semantics or the simulator itself fails HERE, loudly, instead of
+quietly re-scaling rewards.
+
+If you *intentionally* recalibrate the cost model, regenerate with:
+
+    PYTHONPATH=src python tests/test_golden_latency.py
+"""
+import numpy as np
+import pytest
+
+from repro.core import critical_path, paper_platform, simulate
+from repro.core.baselines import cpu_only, gpu_only
+from repro.graphs import PAPER_BENCHMARKS
+
+# seconds; regenerate via the module docstring command on deliberate change
+GOLDEN = {
+    "inception_v3": dict(
+        cpu_only=0.01426463129086304,
+        gpu_only=0.01260998250303031,
+        critical_path=0.005384403515142156,
+        num_nodes=602, num_edges=636),
+    "resnet50": dict(
+        cpu_only=0.012994719181835576,
+        gpu_only=0.005319007889870125,
+        critical_path=0.004861630121303255,
+        num_nodes=341, num_edges=356),
+    "bert_base": dict(
+        cpu_only=0.00641193652822968,
+        gpu_only=0.00260248205714285,
+        critical_path=0.0013728075428571477,
+        num_nodes=776, num_edges=834),
+}
+
+RTOL = 1e-6     # f64 host simulator is deterministic; allow libm-level noise
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN))
+def test_golden_baseline_latencies(name):
+    g = PAPER_BENCHMARKS[name]()
+    gold = GOLDEN[name]
+    assert g.num_nodes == gold["num_nodes"], \
+        f"{name} topology changed; regenerate goldens if intentional"
+    assert g.num_edges == gold["num_edges"]
+    plat = paper_platform()
+    np.testing.assert_allclose(
+        simulate(g, cpu_only(g), plat).latency, gold["cpu_only"], rtol=RTOL,
+        err_msg=f"{name}: CPU-only makespan drifted — rewards re-scaled")
+    np.testing.assert_allclose(
+        simulate(g, gpu_only(g), plat).latency, gold["gpu_only"], rtol=RTOL,
+        err_msg=f"{name}: GPU-only makespan drifted — rewards re-scaled")
+    np.testing.assert_allclose(
+        critical_path(g, plat), gold["critical_path"], rtol=RTOL,
+        err_msg=f"{name}: critical-path bound drifted")
+
+
+@pytest.mark.parametrize("name", sorted(GOLDEN))
+def test_goldens_are_internally_consistent(name):
+    """Sanity on the constants themselves: the single-device makespans can
+    never beat the free-transfer critical-path lower bound."""
+    gold = GOLDEN[name]
+    assert gold["cpu_only"] >= gold["critical_path"]
+    assert gold["gpu_only"] >= gold["critical_path"]
+
+
+def _regenerate():
+    plat = paper_platform()
+    for name, build in PAPER_BENCHMARKS.items():
+        g = build()
+        print(f'    "{name}": dict(')
+        print(f'        cpu_only={simulate(g, cpu_only(g), plat).latency!r},')
+        print(f'        gpu_only={simulate(g, gpu_only(g), plat).latency!r},')
+        print(f'        critical_path={critical_path(g, plat)!r},')
+        print(f'        num_nodes={g.num_nodes}, num_edges={g.num_edges}),')
+
+
+if __name__ == "__main__":
+    _regenerate()

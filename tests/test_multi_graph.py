@@ -1,0 +1,318 @@
+"""Multi-graph batched training: padding equivalence + the (G, B) trainer.
+
+The contract under test: padding a graph's ``SimArrays`` to any V_max ≥ V
+leaves the simulated makespan bitwise unchanged (pad slots are inert data
+ops), so a ``simulate_multi`` over heterogeneous graphs can never corrupt
+rewards; and ``train_multi`` at G=1 IS the single-graph batched engine —
+bit-for-bit, through every episode and the final parameter tree.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (HSDAG, HSDAGConfig, MultiGraphTrainer,
+                        FeatureConfig, batch_graph_arrays, extract_features,
+                        paper_platform, shared_feature_config, simulate,
+                        tpu_stage_platform)
+from repro.core.costmodel import (pad_sim_arrays, sim_arrays,
+                                  sim_arrays_batch, simulate_jax,
+                                  simulate_multi)
+from repro.core.gnn import encoder_apply, encoder_init
+from repro.core.gpn import gpn_apply, gpn_init
+from repro.core.policy import policy_apply, policy_init
+from repro.graphs import PAPER_BENCHMARKS
+
+from conftest import given, make_diamond, random_dag, settings, st
+
+RTOL = 1e-5
+
+
+def _pad_placements(graphs, placements, v_max):
+    """Per-graph (B, V_g) placements → one (G, B, v_max) padded array."""
+    B = placements[0].shape[0]
+    out = np.zeros((len(graphs), B, v_max), dtype=np.int64)
+    for i, (g, p) in enumerate(zip(graphs, placements)):
+        out[i, :, :g.num_nodes] = p
+    return out
+
+
+def _assert_multi_matches(graphs, placements, plat, v_max):
+    """simulate_multi == per-graph simulate_jax (bitwise) == host (1e-5)."""
+    batch = sim_arrays_batch(graphs, plat, v_max=v_max)
+    padded = _pad_placements(graphs, placements, v_max)
+    res = simulate_multi(batch, padded)
+    for i, g in enumerate(graphs):
+        sa = sim_arrays(g, plat)
+        for b in range(padded.shape[1]):
+            p = placements[i][b]
+            jx = simulate_jax(sa, p.astype(np.int32))
+            assert float(jx.latency) == float(res.latency[i, b]), \
+                "padding changed the f32 kernel's makespan"
+            ref = simulate(g, p, plat)
+            np.testing.assert_allclose(res.latency[i, b], ref.latency,
+                                       rtol=RTOL)
+            np.testing.assert_allclose(res.reward[i, b], ref.reward,
+                                       rtol=RTOL)
+            assert bool(res.oom[i, b]) == ref.oom
+
+
+# ------------------------------------------------------------ simulate_multi
+def test_multi_matches_reference_mixed_graphs():
+    rng = np.random.default_rng(0)
+    graphs = [make_diamond(), random_dag(rng, 23, p=0.2),
+              random_dag(rng, 11, p=0.3)]
+    placements = [rng.integers(0, 2, (4, g.num_nodes)) for g in graphs]
+    _assert_multi_matches(graphs, placements, paper_platform(), v_max=23)
+
+
+def test_multi_matches_with_huge_padding():
+    """V_max ≫ V: a 7-node graph padded to 160 slots stays exact."""
+    rng = np.random.default_rng(1)
+    graphs = [make_diamond(), random_dag(rng, 9, p=0.3)]
+    placements = [rng.integers(0, 2, (3, g.num_nodes)) for g in graphs]
+    _assert_multi_matches(graphs, placements, paper_platform(), v_max=160)
+
+
+def test_multi_matches_tpu_platform():
+    rng = np.random.default_rng(2)
+    graphs = [random_dag(rng, 14, p=0.2), random_dag(rng, 27, p=0.15)]
+    placements = [rng.integers(0, 4, (3, g.num_nodes)) for g in graphs]
+    _assert_multi_matches(graphs, placements, tpu_stage_platform(4),
+                          v_max=40)
+
+
+@pytest.mark.parametrize("name", sorted(PAPER_BENCHMARKS))
+def test_multi_matches_on_benchmark_graphs(name):
+    """Acceptance: padded simulate_multi matches simulate_jax within 1e-5
+    relative latency on every Table-2 benchmark graph (padded to the batch
+    max, i.e. as it runs inside joint training)."""
+    v_max = max(b().num_nodes for b in PAPER_BENCHMARKS.values())
+    g = PAPER_BENCHMARKS[name]()
+    rng = np.random.default_rng(3)
+    placements = [rng.integers(0, 2, (2, g.num_nodes))]
+    _assert_multi_matches([g], placements, paper_platform(), v_max=v_max)
+
+
+def test_pad_sim_arrays_identity_and_validation(diamond):
+    plat = paper_platform()
+    sa = sim_arrays(diamond, plat)
+    assert pad_sim_arrays(sa, diamond.num_nodes) is sa
+    with pytest.raises(ValueError):
+        pad_sim_arrays(sa, diamond.num_nodes - 1)
+    padded = pad_sim_arrays(sa, diamond.num_nodes + 5)
+    assert padded.num_nodes == diamond.num_nodes + 5
+    assert padded.is_data[diamond.num_nodes:].all()
+    assert (padded.op_time[:, diamond.num_nodes:] == 0).all()
+
+
+def test_sim_arrays_batch_shapes_and_masks():
+    rng = np.random.default_rng(4)
+    graphs = [random_dag(rng, n, p=0.2) for n in (5, 12, 8)]
+    batch = sim_arrays_batch(graphs, paper_platform())
+    assert batch.num_graphs == 3
+    assert batch.max_nodes == 12
+    np.testing.assert_array_equal(batch.num_nodes, [5, 12, 8])
+    for i, g in enumerate(graphs):
+        assert batch.node_mask[i, :g.num_nodes].all()
+        assert not batch.node_mask[i, g.num_nodes:].any()
+
+
+def test_simulate_multi_rejects_bad_devices():
+    rng = np.random.default_rng(5)
+    graphs = [random_dag(rng, 6, p=0.3)]
+    batch = sim_arrays_batch(graphs, paper_platform())
+    bad = np.full((1, 6), 7)
+    with pytest.raises(ValueError):
+        simulate_multi(batch, bad)
+    # out-of-range values at PAD slots are ignored, not an error
+    batch2 = sim_arrays_batch(graphs, paper_platform(), v_max=10)
+    p = np.zeros((1, 10), int)
+    p[0, 6:] = 7
+    assert np.isfinite(simulate_multi(batch2, p).latency).all()
+
+
+# ------------------------------------------- padded policy forward vs single
+def test_padded_greedy_forward_matches_unpadded():
+    """Encoder→GPN→greedy policy on a padded batch slot must reproduce the
+    unpadded graph's grouping and greedy placement (real slots only)."""
+    rng = np.random.default_rng(6)
+    graphs = [random_dag(rng, 17, p=0.2), random_dag(rng, 9, p=0.3)]
+    fc = shared_feature_config(graphs, FeatureConfig(d_pos=8))
+    arrays = [extract_features(g, fc) for g in graphs]
+    gb = batch_graph_arrays(arrays, v_max=25)
+    k = jax.random.PRNGKey(0)
+    enc = encoder_init(k, gb.x.shape[-1], 16)
+    gpn = gpn_init(jax.random.fold_in(k, 1), 16)
+    pol = policy_init(jax.random.fold_in(k, 2), 16, 2)
+    for i, (g, a) in enumerate(zip(graphs, arrays)):
+        n = g.num_nodes
+        # unpadded reference
+        z_ref = encoder_apply(enc, jax.numpy.asarray(a.x),
+                              jax.numpy.asarray(a.adj))
+        parse_ref = gpn_apply(gpn, z_ref, jax.numpy.asarray(a.edges),
+                              jax.numpy.asarray(a.adj))
+        out_ref = policy_apply(pol, parse_ref.pooled_z, parse_ref.active,
+                               parse_ref.labels, k, greedy=True)
+        # padded slot i
+        nm = jax.numpy.asarray(gb.node_mask[i])
+        em = jax.numpy.asarray(gb.edge_mask[i])
+        z_pad = encoder_apply(enc, jax.numpy.asarray(gb.x[i]),
+                              jax.numpy.asarray(gb.adj[i]), node_mask=nm)
+        parse_pad = gpn_apply(gpn, z_pad, jax.numpy.asarray(gb.edges[i]),
+                              jax.numpy.asarray(gb.adj[i]),
+                              node_mask=nm, edge_mask=em)
+        out_pad = policy_apply(pol, parse_pad.pooled_z, parse_pad.active,
+                               parse_pad.labels, k, greedy=True)
+        np.testing.assert_allclose(np.asarray(z_pad)[:n], np.asarray(z_ref),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(parse_pad.labels)[:n],
+                                      np.asarray(parse_ref.labels))
+        assert int(parse_pad.num_groups) == int(parse_ref.num_groups)
+        np.testing.assert_array_equal(
+            np.asarray(out_pad.fine_placement)[:n],
+            np.asarray(out_ref.fine_placement))
+        # pad slots never count toward the policy's log-prob
+        assert not np.asarray(parse_pad.active)[
+            np.asarray(gb.node_mask[i]) == False].any()  # noqa: E712
+
+
+# --------------------------------------------------------------- train_multi
+def _cfg(**kw):
+    base = dict(num_devices=2, hidden_channel=32, max_episodes=3,
+                update_timestep=5)
+    base.update(kw)
+    return HSDAGConfig(**base)
+
+
+def test_g1_train_multi_matches_batched_bit_for_bit(diamond):
+    """Acceptance: G=1 reproduces the PR-1 batched engine's trajectory —
+    identical per-episode stats, best placement AND final parameters."""
+    arrays = extract_features(diamond, FeatureConfig(d_pos=8))
+    plat = paper_platform()
+    cfg = _cfg(batch_chains=3, max_episodes=4, update_timestep=6)
+    rs = HSDAG(cfg).search(diamond, arrays, platform=plat,
+                           rng=jax.random.PRNGKey(0))
+    tr = MultiGraphTrainer(cfg, reward_norm="none")
+    rm = tr.train([diamond], [arrays], platform=plat,
+                  rng=jax.random.PRNGKey(0))
+    assert [h["best_latency"] for h in rs.history] == \
+        [h["best_latency"] for h in rm.history]
+    assert [h["mean_reward"] for h in rs.history] == \
+        [h["mean_reward"] for h in rm.history]
+    assert [h["mean_groups"] for h in rs.history] == \
+        [h["mean_groups"] for h in rm.history]
+    np.testing.assert_array_equal(rs.best_placement, rm.best_placements[0])
+    assert rs.best_latency == float(rm.best_latencies[0])
+    for a, b in zip(jax.tree.leaves(rs.params), jax.tree.leaves(rm.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_train_multi_joint_three_graphs():
+    """One shared policy over three different-size graphs: every per-graph
+    best replays exactly on the host simulator and params update once."""
+    rng = np.random.default_rng(7)
+    graphs = [make_diamond(), random_dag(rng, 19, p=0.2),
+              random_dag(rng, 12, p=0.25)]
+    plat = paper_platform()
+    tr = MultiGraphTrainer(_cfg(batch_chains=4))
+    before_init = tr.params
+    res = tr.train(graphs, platform=plat, rng=jax.random.PRNGKey(0))
+    assert before_init is None and tr.params is not None
+    assert res.chain_best.shape == (3, 4)
+    assert np.isfinite(res.best_latencies).all()
+    assert res.num_evaluations == 3 * 5 * 3 * 4   # episodes·T·G·B
+    for g, p, lat in zip(graphs, res.best_placements, res.best_latencies):
+        assert p.shape == (g.num_nodes,)
+        np.testing.assert_allclose(simulate(g, p, plat).latency, lat,
+                                   rtol=RTOL)
+    for g, p, lat in zip(graphs, res.greedy_placements,
+                         res.greedy_latencies):
+        np.testing.assert_allclose(simulate(g, p, plat).latency, lat,
+                                   rtol=RTOL)
+
+
+def test_train_multi_per_graph_reward_norm_trains():
+    """pergraph normalization: gradients flow (params change) even when one
+    graph's rewards dwarf the others' — including with use_baseline=True,
+    whose raw-scale EMA must NOT be subtracted from standardized rewards
+    (regression: it used to swamp the learning signal)."""
+    rng = np.random.default_rng(8)
+    graphs = [random_dag(rng, 8, p=0.3), random_dag(rng, 16, p=0.2)]
+    tr = MultiGraphTrainer(_cfg(batch_chains=2, max_episodes=2,
+                                use_baseline=True, normalize_weights=True),
+                           reward_norm="pergraph")
+    res = tr.train(graphs, platform=paper_platform(),
+                   rng=jax.random.PRNGKey(1))
+    assert np.isfinite(res.best_latencies).all()
+    assert len(res.history) == 2
+    # standardization centers each graph's window rewards, so the update is
+    # advantage-like: sampled-best latencies should not be pathological
+    for g, p in zip(graphs, res.best_placements):
+        assert set(np.unique(p)) <= {0, 1}
+
+
+def test_zero_shot_transfer_unseen_graph():
+    rng = np.random.default_rng(9)
+    graphs = [random_dag(rng, 10, p=0.25), random_dag(rng, 15, p=0.2)]
+    plat = paper_platform()
+    tr = MultiGraphTrainer(_cfg(batch_chains=2, max_episodes=2))
+    tr.train(graphs, platform=plat, rng=jax.random.PRNGKey(0))
+    unseen = random_dag(rng, 21, p=0.2)
+    p, lat = tr.evaluate_zero_shot(unseen, platform=plat)
+    assert p.shape == (21,)
+    assert set(np.unique(p)) <= {0, 1}
+    np.testing.assert_allclose(simulate(unseen, p, plat).latency, lat,
+                               rtol=RTOL)
+
+
+def test_train_multi_validations(diamond):
+    arrays = extract_features(diamond, FeatureConfig(d_pos=8))
+    with pytest.raises(ValueError):
+        MultiGraphTrainer(_cfg(), reward_norm="bogus")
+    with pytest.raises(ValueError):
+        MultiGraphTrainer(_cfg()).train([], platform=paper_platform())
+    with pytest.raises(ValueError):
+        MultiGraphTrainer(_cfg(num_devices=5)).train(
+            [diamond], [arrays], platform=paper_platform())
+    # mismatched feature widths must be rejected up front
+    other = random_dag(np.random.default_rng(0), 9, p=0.3)
+    mixed = [arrays, extract_features(other, FeatureConfig(d_pos=8))]
+    with pytest.raises(ValueError):
+        batch_graph_arrays(mixed)
+
+
+def test_policy_checkpoint_roundtrip(tmp_path):
+    rng = np.random.default_rng(10)
+    graphs = [make_diamond(), random_dag(rng, 9, p=0.3)]
+    plat = paper_platform()
+    tr = MultiGraphTrainer(_cfg(batch_chains=2, max_episodes=1,
+                                update_timestep=3))
+    tr.train(graphs, platform=plat, rng=jax.random.PRNGKey(0))
+    tr.save_policy(str(tmp_path / "joint"), step=5)
+
+    tr2 = MultiGraphTrainer(tr.cfg)
+    arrays0 = extract_features(graphs[0], tr.feature_config)
+    tr2.init(jax.random.PRNGKey(123), arrays0)
+    assert tr2.load_policy(str(tmp_path / "joint")) == 5
+    assert tr2.feature_config == tr.feature_config
+    for a, b in zip(jax.tree.leaves(tr.params), jax.tree.leaves(tr2.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # restored policy decodes the same greedy placements
+    unseen = random_dag(rng, 13, p=0.2)
+    p1, l1 = tr.evaluate_zero_shot(unseen, platform=plat)
+    p2, l2 = tr2.evaluate_zero_shot(unseen, platform=plat)
+    np.testing.assert_array_equal(p1, p2)
+    assert l1 == l2
+
+
+# ------------------------------------------------------- property (optional)
+@settings(max_examples=10, deadline=None)
+@given(st.integers(3, 18), st.integers(0, 40), st.integers(0, 500))
+def test_property_padding_never_changes_latency(n, extra_pad, seed):
+    """For random DAGs and any padding amount, the padded kernel is bitwise
+    the unpadded kernel and within 1e-5 of the Python reference."""
+    rng = np.random.default_rng(seed)
+    g = random_dag(rng, n, p=0.2)
+    plat = paper_platform() if seed % 2 == 0 else tpu_stage_platform(2)
+    placements = [rng.integers(0, 2, (2, n))]
+    _assert_multi_matches([g], placements, plat, v_max=n + extra_pad)
