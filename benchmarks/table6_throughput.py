@@ -1,9 +1,13 @@
 """Table 6 (repo-local): rollout-engine throughput — placements evaluated/sec.
 
-Two measurements per graph, each scalar-vs-batched:
+Two measurements per graph:
 
 * ``rollout_throughput_sim_*``   — the reward source alone: host Python
-  list-scheduler ``simulate`` vs the jitted+vmapped ``simulate_batch``.
+  list-scheduler ``simulate`` vs the batched simulator backends (the
+  ``backend=`` field of the derived column compares the jitted+vmapped
+  ``scan`` kernel against the level-parallel ``level`` Pallas kernel; on
+  this CPU container the level kernel runs under interpret=True, so its
+  number is a correctness-mode floor, not the TPU-lowered rate).
 * ``rollout_throughput_search_*`` — the full RL loop (Alg. 1): per-step
   host-reward scalar engine vs the fused B-chain engine with in-jit rewards.
   Steady-state rate (first, compile-bearing episode dropped).
@@ -12,7 +16,8 @@ Rows land in ``BENCH_*.json`` so the scalar→batched speedup is
 regression-checkable.  Env knobs: ``REPRO_BENCH_CHAINS`` (default 16),
 ``REPRO_BENCH_THROUGHPUT_GRAPHS`` (csv; default inception_v3 — the search
 measurement is minutes-per-graph), ``REPRO_BENCH_THROUGHPUT_EPISODES``
-(default 3).
+(default 3), ``REPRO_BENCH_LEVEL_BACKEND`` (=0 skips the interpret-mode
+level rows).
 """
 from __future__ import annotations
 
@@ -23,7 +28,8 @@ import jax
 import numpy as np
 
 from repro.core import (HSDAG, HSDAGConfig, FeatureConfig, extract_features,
-                        paper_platform, simulate, simulate_batch)
+                        get_backend, paper_platform, simulate, simulate_batch)
+from repro.core.costmodel import sim_arrays
 from repro.graphs import PAPER_BENCHMARKS
 
 from common import emit
@@ -33,12 +39,16 @@ SEARCH_GRAPHS = os.environ.get(
     "REPRO_BENCH_THROUGHPUT_GRAPHS", "inception_v3").split(",")
 SEARCH_EPISODES = int(os.environ.get("REPRO_BENCH_THROUGHPUT_EPISODES", "3"))
 SEARCH_TIMESTEP = int(os.environ.get("REPRO_BENCH_THROUGHPUT_TIMESTEP", "10"))
+LEVEL_ROWS = os.environ.get("REPRO_BENCH_LEVEL_BACKEND", "1") != "0"
 
 
 def _sim_rates(graph, plat, budget_s: float = 2.0):
     rng = np.random.default_rng(0)
     batch = rng.integers(0, 2, size=(CHAINS, graph.num_nodes))
-    simulate_batch(graph, batch, plat)          # warm the jit cache
+    # Prebuilt SimArrays threaded through every call — the cache-key
+    # re-derivation (hashing edge/flops buffers) is off the measured path.
+    sa = sim_arrays(graph, plat)
+    simulate_batch(graph, batch, plat, sim=sa)      # warm the jit cache
 
     t0 = time.perf_counter()
     n = 0
@@ -50,10 +60,22 @@ def _sim_rates(graph, plat, budget_s: float = 2.0):
     t0 = time.perf_counter()
     n = 0
     while time.perf_counter() - t0 < budget_s:
-        simulate_batch(graph, batch, plat)
+        simulate_batch(graph, batch, plat, sim=sa)
         n += CHAINS
     batched = n / (time.perf_counter() - t0)
-    return scalar, batched
+
+    level = None
+    if LEVEL_ROWS:
+        backend = get_backend("level")
+        prep = backend.prepare(graph, plat)
+        backend.simulate_batch(prep, batch)         # warm/compile
+        t0 = time.perf_counter()
+        n = 0
+        while n == 0 or time.perf_counter() - t0 < budget_s:
+            backend.simulate_batch(prep, batch)
+            n += CHAINS
+        level = n / (time.perf_counter() - t0)
+    return scalar, batched, level
 
 
 def _search_rate(graph, arrays, plat, batch_chains: int) -> float:
@@ -80,11 +102,17 @@ def main() -> None:
     plat = paper_platform()
     for name, build in PAPER_BENCHMARKS.items():
         graph = build()
-        scalar, batched = _sim_rates(graph, plat)
+        scalar, batched, level = _sim_rates(graph, plat)
         emit(f"rollout_throughput_sim_{name}_scalar", 1e6 / scalar,
-             f"evals_per_s={scalar:.1f}")
+             f"evals_per_s={scalar:.1f};backend=reference")
         emit(f"rollout_throughput_sim_{name}_b{CHAINS}", 1e6 / batched,
-             f"evals_per_s={batched:.1f};speedup={batched / scalar:.2f}x")
+             f"evals_per_s={batched:.1f};speedup={batched / scalar:.2f}x;"
+             f"backend=scan")
+        if level is not None:
+            emit(f"rollout_throughput_sim_{name}_b{CHAINS}_level",
+                 1e6 / level,
+                 f"evals_per_s={level:.1f};speedup={level / scalar:.2f}x;"
+                 f"backend=level;mode=interpret")
 
     for name in SEARCH_GRAPHS:
         if name not in PAPER_BENCHMARKS:

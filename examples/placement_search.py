@@ -33,7 +33,7 @@ def run_multi_graph(args, platform) -> None:
     trainer = MultiGraphTrainer(HSDAGConfig(
         num_devices=2, max_episodes=args.episodes, update_timestep=10,
         use_baseline=True, normalize_weights=True,
-        batch_chains=args.chains))
+        batch_chains=args.chains, engine=args.engine))
     res = trainer.train(train_graphs, platform=platform,
                         rng=jax.random.PRNGKey(0), verbose=True)
     print(f"\njoint training: {res.num_evaluations} placements "
@@ -64,6 +64,11 @@ def main():
     ap.add_argument("--chains", type=int, default=8,
                     help="parallel rollout chains (B); rewards are computed "
                          "inside the jitted rollout by simulate_jax")
+    ap.add_argument("--engine", default="auto",
+                    help="rollout engine / simulator backend: auto | scalar "
+                         "| batched | reference | scan | level (scan = fused "
+                         "in-jit node-scan kernel, the default; level = "
+                         "level-parallel Pallas kernel, window-scored)")
     ap.add_argument("--multi-graph", action="store_true",
                     help="train ONE policy jointly over Inception+ResNet "
                          "and transfer zero-shot to held-out BERT")
@@ -84,11 +89,12 @@ def main():
     agent = HSDAG(HSDAGConfig(num_devices=2, max_episodes=args.episodes,
                               update_timestep=10, use_baseline=True,
                               normalize_weights=True,
-                              batch_chains=args.chains))
+                              batch_chains=args.chains, engine=args.engine))
     res = agent.search(graph, arrays, platform=platform,
                        rng=jax.random.PRNGKey(0), verbose=True)
     print(f"evaluated {res.num_evaluations} placements "
-          f"at {res.evals_per_sec:.1f}/s ({args.chains} chains)")
+          f"at {res.evals_per_sec:.1f}/s ({args.chains} chains, "
+          f"engine={args.engine})")
     cpu = simulate(graph, cpu_only(graph), platform).latency
     print(f"\nBERT: CPU-only {cpu*1e3:.3f} ms → HSDAG "
           f"{res.best_latency*1e3:.3f} ms "

@@ -33,7 +33,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-__all__ = ["CheckpointManager", "save_policy", "restore_policy"]
+__all__ = ["CheckpointManager", "save_policy", "restore_policy",
+           "policy_manifest"]
 
 
 def _keystr_simple(p) -> str:
@@ -233,12 +234,30 @@ def save_policy(directory: str, params: Any, *, step: int = 0,
         mgr.close()
 
 
+def policy_manifest(directory: str, step: Optional[int] = None) -> Dict:
+    """The manifest of a ``save_policy`` checkpoint (training config, the
+    simulation engine that produced the rewards, feature layout, ...)."""
+    mgr = CheckpointManager(directory)
+    try:
+        if step is None:
+            step = mgr.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {directory!r}")
+        return mgr.manifest(step)
+    finally:
+        mgr.close()
+
+
 def restore_policy(directory: str, params_like: Any,
                    step: Optional[int] = None):
-    """→ (params, feature_config, step) from a ``save_policy`` checkpoint.
+    """→ (params, feature_config, step, manifest) from a ``save_policy``
+    checkpoint.
 
     ``params_like`` supplies the pytree structure/dtypes (e.g. a freshly
-    ``init()``-ed parameter tree of the same architecture).
+    ``init()``-ed parameter tree of the same architecture).  ``manifest`` is
+    the full manifest dict (training config, reward engine, ...), already
+    loaded — callers should read it from here rather than re-opening the
+    directory via :func:`policy_manifest`.
     """
     mgr = CheckpointManager(directory)
     try:
@@ -251,4 +270,4 @@ def restore_policy(directory: str, params_like: Any,
     finally:
         mgr.close()
     return params, _feature_config_from_meta(
-        manifest.get("feature_config")), step
+        manifest.get("feature_config")), step, manifest

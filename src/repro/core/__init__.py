@@ -10,10 +10,14 @@ from .costmodel import (DeviceSpec, Platform, SimResult, simulate,
                         sim_arrays_batch, simulate_multi,
                         paper_platform, tpu_stage_platform,
                         critical_path)
+from .sim import (RewardPipeline, RolloutEngine, SimulatorBackend,
+                  backend_names, get_backend, register_backend)
 from .hsdag import (HSDAG, HSDAGConfig, SearchResult,
                     MultiGraphTrainer, MultiSearchResult)
 
 __all__ = [
+    "SimulatorBackend", "register_backend", "get_backend", "backend_names",
+    "RewardPipeline", "RolloutEngine",
     "CompGraph", "OpNode", "topological_order", "colocate_chains",
     "FeatureConfig", "GraphArrays", "GraphArraysBatch",
     "batch_graph_arrays", "extract_features",

@@ -276,6 +276,12 @@ class SimArrays(NamedTuple):
     All fields are arrays so the tuple is a pytree (safe to close over or pass
     through ``jax.jit``); static sizes are recovered from shapes.  Shapes:
     V nodes, P = max in-degree (≥1), D devices, Q = max parallel queues.
+
+    ``order`` is the list-schedule retire order.  Device queues make the
+    schedule order-sensitive, so the order is part of the cost model:
+    ``schedule="topo"`` (default, heap-Kahn — the PR-1 engine order, pinned by
+    the golden latencies) or ``schedule="level"`` (level-major stable re-sort
+    — the order the level-parallel Pallas backend retires nodes in).
     """
 
     order: np.ndarray        # (V,) i32 — topological order
@@ -298,24 +304,35 @@ class SimArrays(NamedTuple):
         return int(self.op_time.shape[0])
 
 
-def _build_sim_arrays(g: CompGraph, platform: Platform) -> SimArrays:
+def _build_sim_arrays(g: CompGraph, platform: Platform,
+                      schedule: str = "topo") -> SimArrays:
     n = g.num_nodes
     order = topological_order(g).astype(np.int32)
     preds: List[List[int]] = [[] for _ in range(n)]
     for s, d in g.edges:
         preds[int(d)].append(int(s))
 
-    p_max = max([len(p) for p in preds], default=0) or 1
-    pred_tab = np.full((n, p_max), n, dtype=np.int32)       # pad = sentinel n
-    for i, v in enumerate(order):
-        pv = preds[int(v)]
-        pred_tab[i, :len(pv)] = pv
-
     levels = np.zeros(n, dtype=np.int32)
     for v in order:
         v = int(v)
         if preds[v]:
             levels[v] = 1 + max(levels[u] for u in preds[v])
+
+    if schedule == "level":
+        # Level-major retire order: stable sort of the topo order by node
+        # level (ties keep topo position).  Still a topological order, but a
+        # different — equally valid — list schedule than heap-Kahn when
+        # parallel branches contend for device queues.
+        order = order[np.argsort(levels[order], kind="stable")]
+    elif schedule != "topo":
+        raise ValueError(f"unknown schedule {schedule!r}; "
+                         f"expected 'topo' or 'level'")
+
+    p_max = max([len(p) for p in preds], default=0) or 1
+    pred_tab = np.full((n, p_max), n, dtype=np.int32)       # pad = sentinel n
+    for i, v in enumerate(order):
+        pv = preds[int(v)]
+        pred_tab[i, :len(pv)] = pv
 
     flops = g.flops()
     byts = g.bytes_out()
@@ -393,13 +410,22 @@ def _cache_key(g: CompGraph, platform: Platform):
         platform.link_latency.tobytes())
 
 
-def sim_arrays(g: CompGraph, platform: Platform) -> SimArrays:
-    """The precompiled (cached) dense view used by ``simulate_jax``."""
+def sim_arrays(g: CompGraph, platform: Platform, *,
+               schedule: str = "topo") -> SimArrays:
+    """The precompiled (cached) dense view used by ``simulate_jax``.
+
+    ``schedule`` picks the retire order baked into ``order``/``preds`` (see
+    :class:`SimArrays`); each (graph, platform, schedule) triple caches its
+    own entry.
+    """
+    if schedule not in ("topo", "level"):
+        raise ValueError(f"unknown schedule {schedule!r}; "
+                         f"expected 'topo' or 'level'")
     per_graph = _SIM_CACHE.setdefault(g, {})
-    key = _cache_key(g, platform)
+    key = _cache_key(g, platform) + (schedule,)
     sa = per_graph.get(key)
     if sa is None:
-        sa = per_graph[key] = _build_sim_arrays(g, platform)
+        sa = per_graph[key] = _build_sim_arrays(g, platform, schedule)
     return sa
 
 
@@ -477,10 +503,46 @@ class BatchSimResult:
         return int(self.latency.shape[0])
 
 
-def simulate_batch(g: CompGraph, placements, platform: Platform
-                   ) -> BatchSimResult:
-    """Evaluate a (B, V) batch of placements in one jitted, vmapped call."""
-    sa = sim_arrays(g, platform)
+def simulate_batch(g: CompGraph, placements, platform: Platform, *,
+                   sim: Optional[SimArrays] = None) -> BatchSimResult:
+    """Evaluate a (B, V) batch of placements in one jitted, vmapped call.
+
+    ``sim`` — a prebuilt :class:`SimArrays` for (g, platform), as returned by
+    :func:`sim_arrays`.  Passing it skips re-deriving the cache key (which
+    hashes the graph's edge/flops/bytes buffers on every call — measurable at
+    search-loop call rates); callers that hold a window of batches build it
+    once.  The object must come from ``sim_arrays(g, ...)`` for THIS graph —
+    an identity check against the graph's cache rejects arrays built for a
+    different graph without re-hashing anything; the platform's device/link
+    constants are validated too.  A graph mutated since the build needs a
+    fresh ``sim_arrays`` call (the identity check cannot see staleness the
+    caller holds on to).
+    """
+    if sim is None:
+        sim = sim_arrays(g, platform)
+    else:
+        per_graph = _SIM_CACHE.get(g)
+        if per_graph is None or not any(sim is v
+                                        for v in per_graph.values()):
+            raise ValueError(
+                "prebuilt sim is not one of this graph's sim_arrays() "
+                "entries — it was built for a different graph (or outside "
+                "the cache); obtain it via sim_arrays(g, platform)")
+        expect_inv = np.where(np.isfinite(platform.link_bw),
+                              1.0 / platform.link_bw, 0.0)
+        np.fill_diagonal(expect_inv, 0.0)
+        if (sim.num_devices != platform.num_devices
+                or not np.array_equal(sim.inv_bw,
+                                      expect_inv.astype(np.float32))
+                or not np.array_equal(
+                    sim.lat, platform.link_latency.astype(np.float32))
+                or not np.array_equal(
+                    sim.mem_capacity,
+                    np.asarray([d.mem_capacity for d in platform.devices],
+                               np.float32))):
+            raise ValueError("prebuilt sim was built for a different "
+                             "platform (device/link constants differ)")
+    sa = sim
     fn = _batch_sim_fn()
     placements = np.asarray(placements)
     assert placements.ndim == 2 and placements.shape[1] == g.num_nodes, \
@@ -576,13 +638,14 @@ def pad_sim_arrays(sa: SimArrays, v_max: int,
 
 
 def sim_arrays_batch(graphs: Sequence[CompGraph], platform: Platform, *,
-                     v_max: Optional[int] = None) -> SimArraysBatch:
+                     v_max: Optional[int] = None,
+                     schedule: str = "topo") -> SimArraysBatch:
     """Stack ``graphs`` into one padded (G, V_max) batch for ``platform``."""
     if not graphs:
         raise ValueError("sim_arrays_batch needs at least one graph")
     if any(g.num_nodes == 0 for g in graphs):
         raise ValueError("cannot batch an empty graph")
-    sas = [sim_arrays(g, platform) for g in graphs]
+    sas = [sim_arrays(g, platform, schedule=schedule) for g in graphs]
     vm = max(sa.num_nodes for sa in sas)
     if v_max is not None:
         if v_max < vm:

@@ -7,12 +7,15 @@ Usage::
     agent  = HSDAG(HSDAGConfig(num_devices=2, batch_chains=16))
     result = agent.search(graph, arrays, platform=paper_platform())
 
-Two reward backends:
+Reward sources (one ``core/sim`` RewardPipeline behind both):
 
-* ``platform=`` (preferred) — rewards come from the vectorized cost-model
-  kernel ``simulate_jax`` *inside* the jitted rollout, so a whole
-  ``update_timestep`` window of ``batch_chains`` parallel REINFORCE chains
-  runs device-resident with no host↔device sync per step.
+* ``platform=`` (preferred) — rewards come from a registered simulator
+  backend: ``engine="scan"`` (default) fuses ``simulate_jax`` *inside* the
+  jitted rollout so a whole ``update_timestep`` window of ``batch_chains``
+  parallel REINFORCE chains runs device-resident with no host↔device sync
+  per step; ``engine="level"`` scores each window in one batched call of the
+  level-parallel Pallas kernel; ``engine="reference"`` scores on the host
+  with the ground-truth Python scheduler.
 * ``reward_fn(fine_placement) -> (reward, latency)`` — any host callable
   (e.g. ``MeasuredExecutor``, the paper's OpenVINO measurement slot).  The
   rollout is still batched; rewards are filled in on the host per window.
@@ -21,8 +24,10 @@ Training is exact REINFORCE via *replayed rollouts*: the sampling pass records
 PRNG keys and rewards; the gradient pass re-runs the identical rollout
 differentiably (a ``lax.scan`` over the window) with rewards as constants, so
 ∇θ J matches Eq. 14 including gradients through the GPN's straight-through
-pooling gates.  ``engine="scalar"`` keeps the original one-placement-at-a-time
-reference loop (used by the B=1 equivalence tests).
+pooling gates.  All rollout machinery lives in ``core/sim/rollout.py`` —
+ONE parameterized (G, B)-chain engine drives ``search``, the batched search
+and ``train_multi``; ``engine="scalar"`` keeps the original
+one-placement-at-a-time reference loop (used by the B=1 equivalence tests).
 """
 from __future__ import annotations
 
@@ -35,8 +40,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..optim import adam, apply_updates
-from .costmodel import (Platform, SimArraysBatch, sim_arrays,
-                        sim_arrays_batch, simulate, simulate_jax)
+from .costmodel import Platform, simulate
 from .features import (FeatureConfig, GraphArrays, GraphArraysBatch,
                        batch_graph_arrays, extract_features,
                        shared_feature_config)
@@ -45,9 +49,22 @@ from .gpn import ParseResult, gpn_apply, gpn_init
 from .graph import CompGraph
 from .policy import PolicyOutput, policy_apply, policy_init
 from .reinforce import RolloutBuffer, RunningBaseline, step_weights
+from .sim import RewardPipeline, RolloutEngine, backend_names, get_backend
 
 __all__ = ["HSDAGConfig", "HSDAG", "SearchResult",
            "MultiGraphTrainer", "MultiSearchResult"]
+
+#: rollout-loop selectors accepted by ``engine=`` on top of the registered
+#: simulator-backend names (which imply the batched loop + that backend).
+_LOOP_ENGINES = ("auto", "scalar", "batched")
+
+
+def _validate_engine(engine: str) -> str:
+    if engine in _LOOP_ENGINES or engine in backend_names():
+        return engine
+    raise ValueError(
+        f"unknown engine {engine!r}; rollout loops: {_LOOP_ENGINES}; "
+        f"registered simulator backends: {backend_names()}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +98,15 @@ class HSDAGConfig:
     # Number of parallel REINFORCE chains per rollout window.  Chain 0 uses
     # the exact PRNG stream of the scalar engine, so B=1 reproduces it.
     batch_chains: int = 1
+    # Rollout engine: "auto" | "scalar" | "batched" pick the loop (batched
+    # defaults to the fused "scan" simulator backend); a registered backend
+    # name ("reference" | "scan" | "level" | any plug-in) picks the batched
+    # loop with that reward backend.  Validated against the registry at
+    # construction; recorded in policy checkpoints.
+    engine: str = "auto"
+
+    def __post_init__(self):
+        _validate_engine(self.engine)
 
 
 class StepOutput(NamedTuple):
@@ -125,18 +151,6 @@ def _rms_normalize(z: jnp.ndarray, node_mask=None) -> jnp.ndarray:
     m = node_mask.astype(z.dtype)[:, None]
     mean_sq = jnp.sum(jnp.square(z) * m) / (jnp.sum(m) * z.shape[1])
     return z / jnp.sqrt(mean_sq + 1e-6)
-
-
-def _split_chain_keys(rngs: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Per-chain ``rng, key = split(rng)`` over a (B, 2) key batch."""
-    both = jax.vmap(jax.random.split)(rngs)          # (B, 2, 2)
-    return both[:, 0], both[:, 1]
-
-
-def _split_multi_keys(rngs: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
-    """Per-chain key split over a (G, B, 2) key batch."""
-    both = jax.vmap(jax.vmap(jax.random.split))(rngs)    # (G, B, 2, 2)
-    return both[:, :, 0], both[:, :, 1]
 
 
 class HSDAG:
@@ -202,135 +216,28 @@ class HSDAG:
             z_next = _rms_normalize(z_next, node_mask)
         return StepOutput(pol, parse, z_next)
 
-    # ------------------------------------------------- scalar (reference) jit
-    def _make_jitted(self, arrays: GraphArrays):
-        adj = jnp.asarray(arrays.adj)
-        x0 = jnp.asarray(arrays.x)
-        edges = jnp.asarray(arrays.edges)
-        cfg = self.cfg
+    # ----------------------------------------------------- engine construction
+    def _engine_single(self, arrays: GraphArrays,
+                       pipeline: Optional[RewardPipeline]) -> RolloutEngine:
+        """The unified (G, B) engine over a single graph (G=1).
 
-        def _rollout_step(params, z, rng, first: bool, greedy: bool = False):
-            out = self._step(params, z, x0, adj, edges, rng,
-                             first=first, train=not greedy, greedy=greedy)
-            return (out.policy.fine_placement, out.policy.coarse_placement,
-                    out.parse.num_groups, out.z_next)
-
-        def _window_loss(params, z0, rngs, weights, num_steps: int,
-                         start_first: bool):
-            """Differentiable replay of a buffer window (Eq. 14)."""
-            z = z0
-            loss = jnp.float32(0.0)
-            for i in range(num_steps):
-                first = start_first and i == 0
-                out = self._step(params, z, x0, adj, edges, rngs[i],
-                                 first=first, train=True)
-                loss = loss - out.policy.logp * weights[i]
-                loss = loss - cfg.entropy_coef * out.policy.entropy
-                z = out.z_next
-            return loss
-
-        rollout_step = jax.jit(_rollout_step,
-                               static_argnames=("first", "greedy"))
-        window_loss = jax.jit(_window_loss,
-                              static_argnames=("num_steps", "start_first"))
-        grad_fn = jax.jit(jax.grad(_window_loss),
-                          static_argnames=("num_steps", "start_first"))
-        return rollout_step, window_loss, grad_fn
-
-    # --------------------------------------------------- batched-chain engine
-    def _make_batched(self, arrays: GraphArrays, sim):
-        """Jitted window-granular rollout + replay over B parallel chains.
-
-        ``sim`` is a :class:`SimArrays` or None.  When given, rewards are
-        computed by ``simulate_jax`` inside the jitted window — zero host
-        round-trips per step; when None, the window returns placements and the
-        caller fills rewards in (``reward_fn`` / MeasuredExecutor fallback).
+        A G=1 batch normally needs no padding, so masks drop at trace time
+        and the computation is exactly the unmasked single-graph one.  The
+        exception is an edge-free graph: ``batch_graph_arrays`` pads the
+        edge table to one (masked) slot, and the masks must ride along or
+        the phantom edge would enter the GPN unmasked.
         """
-        adj = jnp.asarray(arrays.adj)
-        x0 = jnp.asarray(arrays.x)
-        edges = jnp.asarray(arrays.edges)
-        cfg = self.cfg
+        return self._engine_multi(batch_graph_arrays([arrays]), pipeline)
 
-        def _chain_sample(params, z, key, first: bool):
-            out = self._step(params, z, x0, adj, edges, key,
-                             first=first, train=True)
-            fine = out.policy.fine_placement
-            if sim is not None:
-                s = simulate_jax(sim, fine)
-                reward, latency = s.reward, s.latency
-            else:
-                reward = latency = jnp.float32(0.0)
-            return (fine, out.parse.num_groups, out.z_next, reward, latency)
-
-        def _vsample(params, z, keys, first: bool):
-            return jax.vmap(
-                lambda z1, k1: _chain_sample(params, z1, k1, first))(z, keys)
-
-        def _rollout_window(params, z, rngs, num_steps: int,
-                            start_first: bool):
-            """→ (z_final, rngs_final, keys (T,B,2), fine (T,B,V),
-                  ngroups (T,B), rewards (T,B), latencies (T,B))."""
-
-            def body(carry, _):
-                z_c, rngs_c = carry
-                rngs_c, keys = _split_chain_keys(rngs_c)
-                fine, ngroups, z_next, rew, lat = _vsample(
-                    params, z_c, keys, first=False)
-                return (z_next, rngs_c), (keys, fine, ngroups, rew, lat)
-
-            if start_first:
-                rngs, keys0 = _split_chain_keys(rngs)
-                fine0, ng0, z, rew0, lat0 = _vsample(params, z, keys0,
-                                                     first=True)
-                (z, rngs), tail = jax.lax.scan(body, (z, rngs), None,
-                                               length=num_steps - 1)
-                head = (keys0, fine0, ng0, rew0, lat0)
-                outs = tuple(jnp.concatenate([h[None], t], axis=0)
-                             for h, t in zip(head, tail))
-            else:
-                (z, rngs), outs = jax.lax.scan(body, (z, rngs), None,
-                                               length=num_steps)
-            return (z, rngs) + outs
-
-        def _window_loss(params, z0, keys, weights, num_steps: int,
-                         start_first: bool):
-            """Differentiable lax.scan replay of a window (Eq. 14), averaged
-            over chains.  keys (T,B,2), weights (T,B)."""
-
-            def _chain_loss(params_, z1, k1, w1, first: bool):
-                out = self._step(params_, z1, x0, adj, edges, k1,
-                                 first=first, train=True)
-                loss = -out.policy.logp * w1
-                loss = loss - cfg.entropy_coef * out.policy.entropy
-                return out.z_next, loss
-
-            def _vloss(z_c, k_t, w_t, first: bool):
-                return jax.vmap(
-                    lambda z1, k1, w1: _chain_loss(params, z1, k1, w1, first)
-                )(z_c, k_t, w_t)
-
-            total = jnp.float32(0.0)
-            z = z0
-            if start_first:
-                z, l0 = _vloss(z, keys[0], weights[0], first=True)
-                total = total + jnp.sum(l0)
-                keys, weights = keys[1:], weights[1:]
-
-            def body(carry, xs):
-                z_c, tot = carry
-                k_t, w_t = xs
-                z_c, l_t = _vloss(z_c, k_t, w_t, first=False)
-                return (z_c, tot + jnp.sum(l_t)), None
-
-            (z, total), _ = jax.lax.scan(body, (z, total), (keys, weights))
-            nchains = z0.shape[0]
-            return total / nchains
-
-        rollout_window = jax.jit(_rollout_window,
-                                 static_argnames=("num_steps", "start_first"))
-        grad_fn = jax.jit(jax.grad(_window_loss),
-                          static_argnames=("num_steps", "start_first"))
-        return rollout_window, grad_fn
+    def _engine_multi(self, gb: GraphArraysBatch,
+                      pipeline: Optional[RewardPipeline]) -> RolloutEngine:
+        """The same engine over a padded multi-graph batch."""
+        use_masks = gb.padded
+        return RolloutEngine(
+            self._step, self.cfg, x0=gb.x, adj=gb.adj, edges=gb.edges,
+            node_mask=gb.node_mask if use_masks else None,
+            edge_mask=gb.edge_mask if use_masks else None,
+            pipeline=pipeline)
 
     # ---------------------------------------------------------------- search
     def search(self, graph: CompGraph, arrays: GraphArrays,
@@ -338,16 +245,21 @@ class HSDAG:
                                             Tuple[float, float]]] = None,
                rng=None, verbose: bool = False, *,
                platform: Optional[Platform] = None,
-               engine: str = "auto") -> SearchResult:
+               engine: Optional[str] = None) -> SearchResult:
         """Run the full RL search (Alg. 1) and return the best placement.
 
-        Reward source: ``platform`` (fused in-jit cost model — fastest) or
-        ``reward_fn`` (host callable; batched rollout, host rewards).  Engine:
-        ``"auto"`` picks batched unless ``batch_chains == 1`` with a host
-        ``reward_fn`` (the original scalar loop, kept as the reference
-        implementation); ``"batched"`` / ``"scalar"`` force a path.
+        Reward source: ``platform`` (a registered simulator backend — the
+        fused ``scan`` kernel by default) or ``reward_fn`` (host callable;
+        batched rollout, host rewards).  ``engine`` overrides
+        ``cfg.engine``: ``"auto"`` picks batched unless ``batch_chains == 1``
+        with a host ``reward_fn`` (the original scalar loop, kept as the
+        reference implementation); ``"batched"``/``"scalar"`` force a loop;
+        a backend name ("reference"/"scan"/"level"/plug-ins) forces the
+        batched loop with that reward backend.
         """
         cfg = self.cfg
+        engine = _validate_engine(engine if engine is not None
+                                  else cfg.engine)
         if platform is None and reward_fn is None:
             raise ValueError("search() needs a reward source: platform= or "
                              "reward_fn")
@@ -357,27 +269,31 @@ class HSDAG:
                 "reward source (the in-jit cost model would silently shadow "
                 "the callable); pass exactly one")
         if platform is not None and cfg.num_devices > platform.num_devices:
-            # jnp gathers inside simulate_jax would silently clip policy
-            # device ids ≥ platform.num_devices; fail loudly up front.
+            # jnp gathers inside the simulator kernels would silently clip
+            # policy device ids ≥ platform.num_devices; fail loudly up front.
             raise ValueError(
                 f"cfg.num_devices={cfg.num_devices} exceeds the platform's "
                 f"{platform.num_devices} devices")
-        if engine not in ("auto", "scalar", "batched"):
-            raise ValueError(f"unknown engine {engine!r}")
+        if engine not in _LOOP_ENGINES and reward_fn is not None:
+            raise ValueError(
+                f"engine={engine!r} names a simulator backend but a host "
+                f"reward_fn was also given — pass exactly one reward source")
         if engine == "scalar":
             if cfg.batch_chains != 1:
                 raise ValueError("engine='scalar' requires batch_chains == 1")
             if reward_fn is None:
-                from .costmodel import simulate
-
                 def reward_fn(p, _g=graph, _plat=platform):
                     r = simulate(_g, p, _plat)
                     return r.reward, r.latency
             return self._search_scalar(arrays, reward_fn, rng, verbose)
         if engine == "auto" and cfg.batch_chains == 1 and platform is None:
             return self._search_scalar(arrays, reward_fn, rng, verbose)
-        sim = sim_arrays(graph, platform) if platform is not None else None
-        return self._search_batched(arrays, sim, reward_fn, rng, verbose)
+        if reward_fn is not None:
+            pipeline = RewardPipeline.from_reward_fn(reward_fn)
+        else:
+            backend = engine if engine not in _LOOP_ENGINES else "scan"
+            pipeline = RewardPipeline.from_platform(graph, platform, backend)
+        return self._search_batched(arrays, pipeline, rng, verbose)
 
     # ------------------------------------------------- scalar reference loop
     def _search_scalar(self, arrays: GraphArrays, reward_fn,
@@ -389,7 +305,7 @@ class HSDAG:
             rng, k_init = jax.random.split(rng)
             self.init(k_init, arrays)
 
-        rollout_step, window_loss, grad_fn = self._make_jitted(arrays)
+        engine = self._engine_single(arrays, pipeline=None)
         baseline = RunningBaseline() if cfg.use_baseline else None
         buffer = RolloutBuffer()
 
@@ -410,7 +326,7 @@ class HSDAG:
             for _ in range(cfg.update_timestep):
                 rng, k_step = jax.random.split(rng)
                 first = step_in_episode == 0
-                fine, coarse, ngroups, z_next = rollout_step(
+                fine, coarse, ngroups, z_next = engine.rollout_step(
                     self.params, z, k_step, first=first)
                 fine_np = np.asarray(fine)
                 reward, latency = reward_fn(fine_np)
@@ -433,10 +349,9 @@ class HSDAG:
                 normalize=cfg.normalize_weights)
             rngs = jnp.stack(buffer.rngs)
             for _ in range(max(1, cfg.k_epochs)):
-                grads = grad_fn(self.params, z0_window, rngs,
-                                jnp.asarray(weights),
-                                num_steps=len(buffer),
-                                start_first=first_of_window)
+                grads = engine.window_grads_scalar(
+                    self.params, z0_window, rngs, jnp.asarray(weights),
+                    num_steps=len(buffer), start_first=first_of_window)
                 updates, self._opt_state = self._opt.update(
                     grads, self._opt_state, self.params)
                 self.params = apply_updates(self.params, updates)
@@ -463,8 +378,10 @@ class HSDAG:
                             n_evals / max(wall, 1e-9))
 
     # ------------------------------------------------ batched multi-chain loop
-    def _search_batched(self, arrays: GraphArrays, sim, reward_fn,
+    def _search_batched(self, arrays: GraphArrays,
+                        pipeline: RewardPipeline,
                         rng, verbose: bool) -> SearchResult:
+        """B parallel chains through the unified (G, B) engine at G=1."""
         cfg = self.cfg
         nchains = max(1, cfg.batch_chains)
         t_start = time.perf_counter()
@@ -473,7 +390,7 @@ class HSDAG:
             rng, k_init = jax.random.split(rng)
             self.init(k_init, arrays)
 
-        rollout_window, grad_fn = self._make_batched(arrays, sim)
+        engine = self._engine_single(arrays, pipeline)
         baseline = RunningBaseline() if cfg.use_baseline else None
 
         best_latency = float("inf")
@@ -484,9 +401,10 @@ class HSDAG:
         # Chain 0 carries the exact scalar-engine PRNG stream; chains ≥ 1 get
         # independent folded streams, so B=1 reproduces the scalar trajectory.
         chain_rngs = jnp.stack(
-            [rng] + [jax.random.fold_in(rng, b) for b in range(1, nchains)])
+            [rng] + [jax.random.fold_in(rng, b)
+                     for b in range(1, nchains)])[None]       # (1, B, 2)
         x0 = jnp.asarray(arrays.x)
-        z = jnp.broadcast_to(x0, (nchains,) + x0.shape)
+        z = jnp.broadcast_to(x0, (1, nchains) + x0.shape)
         z0_window = z
         first_of_window = True
         tsteps = cfg.update_timestep
@@ -494,22 +412,17 @@ class HSDAG:
         for episode in range(cfg.max_episodes):
             t_ep = time.perf_counter()
             (z, chain_rngs, keys, fines, ngroups, rewards,
-             latencies) = rollout_window(
+             latencies) = engine.rollout_window(
                 self.params, z0_window, chain_rngs,
                 num_steps=tsteps, start_first=first_of_window)
-            if sim is None:
-                # Host-reward fallback: score each sampled placement.
-                fines_np = np.asarray(fines)
-                rewards = np.empty((tsteps, nchains))
-                latencies = np.empty((tsteps, nchains))
-                for t in range(tsteps):
-                    for b in range(nchains):
-                        rewards[t, b], latencies[t, b] = reward_fn(
-                            fines_np[t, b])
+            fines_np = np.asarray(fines)[:, 0]                # (T, B, V)
+            if pipeline.fused:
+                rewards = np.asarray(rewards, dtype=np.float64)[:, 0]
+                latencies = np.asarray(latencies, dtype=np.float64)[:, 0]
             else:
-                rewards = np.asarray(rewards, dtype=np.float64)
-                latencies = np.asarray(latencies, dtype=np.float64)
-                fines_np = np.asarray(fines)
+                # Window scoring: host reward_fn loop, or one batched device
+                # call for jit_window backends (the level kernel).
+                rewards, latencies = pipeline.score_window(fines_np)
 
             # Bookkeeping in (t, b) order — identical to the scalar loop at
             # B=1 (EMA baseline order and strict-< best tie-breaks matter).
@@ -528,11 +441,11 @@ class HSDAG:
                 reward_to_go=cfg.reward_to_go,
                 baseline=(baseline.value if baseline is not None else None),
                 normalize=cfg.normalize_weights)
-            weights_tb = jnp.asarray(weights_bt.T)
+            weights_tgb = jnp.asarray(weights_bt.T)[:, None]  # (T, 1, B)
             for _ in range(max(1, cfg.k_epochs)):
-                grads = grad_fn(self.params, z0_window, keys, weights_tb,
-                                num_steps=tsteps,
-                                start_first=first_of_window)
+                grads = engine.window_grads(
+                    self.params, z0_window, keys, weights_tgb,
+                    num_steps=tsteps, start_first=first_of_window)
                 updates, self._opt_state = self._opt.update(
                     grads, self._opt_state, self.params)
                 self.params = apply_updates(self.params, updates)
@@ -556,131 +469,6 @@ class HSDAG:
         return SearchResult(best_placement, best_latency, history,
                             self.params, {}, wall, n_evals,
                             n_evals / max(wall, 1e-9), chain_best)
-
-    # ---------------------------------------------- multi-graph (G, B) engine
-    def _make_multi(self, gb: GraphArraysBatch, simb: SimArraysBatch):
-        """Jitted (G, B)-chain window rollout + replay over a padded batch.
-
-        Structure mirrors ``_make_batched`` with one extra vmapped graph axis:
-        per-graph features/adjacency/edges/masks/SimArrays map over G while
-        the parameter tree is shared (closed over), so one gradient step
-        trains one policy on every graph at once.  When the batch needs no
-        padding (all graphs the same size — in particular G=1), masks are
-        dropped at trace time and each (g, b) chain runs the exact
-        single-graph batched computation.
-        """
-        cfg = self.cfg
-        x0 = jnp.asarray(gb.x)                       # (G, V, d)
-        adj = jnp.asarray(gb.adj)                    # (G, V, V)
-        edges = jnp.asarray(gb.edges)                # (G, E, 2)
-        use_masks = gb.padded
-        nmask = jnp.asarray(gb.node_mask) if use_masks else None
-        emask = jnp.asarray(gb.edge_mask) if use_masks else None
-        sim = jax.tree.map(jnp.asarray, simb.arrays)  # leaves lead with G
-
-        def _chain_sample(params, xg, ag, eg, nmg, emg, simg, z, key,
-                          first: bool):
-            out = self._step(params, z, xg, ag, eg, key,
-                             first=first, train=True,
-                             node_mask=nmg, edge_mask=emg)
-            s = simulate_jax(simg, out.policy.fine_placement)
-            return (out.policy.fine_placement, out.parse.num_groups,
-                    out.z_next, s.reward, s.latency)
-
-        def _vsample(params, z, keys, first: bool):
-            """z (G, B, V, d), keys (G, B, 2) → per-(g, b) samples."""
-
-            def per_graph(xg, ag, eg, nmg, emg, simg, z_b, k_b):
-                return jax.vmap(lambda z1, k1: _chain_sample(
-                    params, xg, ag, eg, nmg, emg, simg, z1, k1, first)
-                )(z_b, k_b)
-
-            if use_masks:
-                return jax.vmap(per_graph)(x0, adj, edges, nmask, emask,
-                                           sim, z, keys)
-            return jax.vmap(
-                lambda xg, ag, eg, simg, z_b, k_b: per_graph(
-                    xg, ag, eg, None, None, simg, z_b, k_b)
-            )(x0, adj, edges, sim, z, keys)
-
-        def _rollout_window(params, z, rngs, num_steps: int,
-                            start_first: bool):
-            """→ (z_final, rngs_final, keys (T,G,B,2), fine (T,G,B,V),
-                  ngroups (T,G,B), rewards (T,G,B), latencies (T,G,B))."""
-
-            def body(carry, _):
-                z_c, rngs_c = carry
-                rngs_c, keys = _split_multi_keys(rngs_c)
-                fine, ngroups, z_next, rew, lat = _vsample(
-                    params, z_c, keys, first=False)
-                return (z_next, rngs_c), (keys, fine, ngroups, rew, lat)
-
-            if start_first:
-                rngs, keys0 = _split_multi_keys(rngs)
-                fine0, ng0, z, rew0, lat0 = _vsample(params, z, keys0,
-                                                     first=True)
-                (z, rngs), tail = jax.lax.scan(body, (z, rngs), None,
-                                               length=num_steps - 1)
-                head = (keys0, fine0, ng0, rew0, lat0)
-                outs = tuple(jnp.concatenate([h[None], t], axis=0)
-                             for h, t in zip(head, tail))
-            else:
-                (z, rngs), outs = jax.lax.scan(body, (z, rngs), None,
-                                               length=num_steps)
-            return (z, rngs) + outs
-
-        def _window_loss(params, z0, keys, weights, num_steps: int,
-                         start_first: bool):
-            """Differentiable replay (Eq. 14) averaged over every (g, b)
-            chain.  keys (T,G,B,2), weights (T,G,B)."""
-
-            def _chain_loss(params_, xg, ag, eg, nmg, emg, z1, k1, w1,
-                            first: bool):
-                out = self._step(params_, z1, xg, ag, eg, k1,
-                                 first=first, train=True,
-                                 node_mask=nmg, edge_mask=emg)
-                loss = -out.policy.logp * w1
-                loss = loss - cfg.entropy_coef * out.policy.entropy
-                return out.z_next, loss
-
-            def _vloss(z_c, k_t, w_t, first: bool):
-                def per_graph(xg, ag, eg, nmg, emg, z_b, k_b, w_b):
-                    z_n, l_b = jax.vmap(
-                        lambda z1, k1, w1: _chain_loss(
-                            params, xg, ag, eg, nmg, emg, z1, k1, w1, first)
-                    )(z_b, k_b, w_b)
-                    return z_n, l_b
-
-                if use_masks:
-                    return jax.vmap(per_graph)(x0, adj, edges, nmask, emask,
-                                               z_c, k_t, w_t)
-                return jax.vmap(
-                    lambda xg, ag, eg, z_b, k_b, w_b: per_graph(
-                        xg, ag, eg, None, None, z_b, k_b, w_b)
-                )(x0, adj, edges, z_c, k_t, w_t)
-
-            total = jnp.float32(0.0)
-            z = z0
-            if start_first:
-                z, l0 = _vloss(z, keys[0], weights[0], first=True)
-                total = total + jnp.sum(l0)
-                keys, weights = keys[1:], weights[1:]
-
-            def body(carry, xs):
-                z_c, tot = carry
-                k_t, w_t = xs
-                z_c, l_t = _vloss(z_c, k_t, w_t, first=False)
-                return (z_c, tot + jnp.sum(l_t)), None
-
-            (z, total), _ = jax.lax.scan(body, (z, total), (keys, weights))
-            nchains = z0.shape[0] * z0.shape[1]
-            return total / nchains
-
-        rollout_window = jax.jit(_rollout_window,
-                                 static_argnames=("num_steps", "start_first"))
-        grad_fn = jax.jit(jax.grad(_window_loss),
-                          static_argnames=("num_steps", "start_first"))
-        return rollout_window, grad_fn
 
     def train_multi(self, graphs: List[CompGraph],
                     arrays: Optional[List[GraphArrays]] = None, *,
@@ -736,14 +524,25 @@ class HSDAG:
         elif feature_cfg is not None:
             self.feature_config = feature_cfg
         gb = batch_graph_arrays(arrays)
-        simb = sim_arrays_batch(graphs, platform, v_max=gb.max_nodes)
+        # cfg.engine names the reward backend; "auto"/"batched" mean the
+        # fused default.  "scalar" explicitly requests the reference loop,
+        # which has no multi-graph form — reject rather than silently train
+        # (and checkpoint) under a different engine.
+        if cfg.engine == "scalar":
+            raise ValueError(
+                "train_multi has no scalar loop; use engine='auto' or a "
+                f"simulator backend name {backend_names()}")
+        backend = (cfg.engine if cfg.engine not in _LOOP_ENGINES else "scan")
+        pipeline = RewardPipeline.from_graphs(graphs, platform,
+                                              backend=backend,
+                                              v_max=gb.max_nodes)
 
         rng = rng if rng is not None else jax.random.PRNGKey(cfg.seed)
         if self.params is None:
             rng, k_init = jax.random.split(rng)
             self.init(k_init, arrays[0])
 
-        rollout_window, grad_fn = self._make_multi(gb, simb)
+        engine = self._engine_multi(gb, pipeline)
         # The per-graph standardization below already centers rewards (it IS
         # a per-graph baseline); layering the scalar EMA baseline on top
         # would subtract a raw-reward-scale value (~1/latency) from ~N(0, 1)
@@ -778,12 +577,15 @@ class HSDAG:
         for episode in range(cfg.max_episodes):
             t_ep = time.perf_counter()
             (z, chain_rngs, keys, fines, ngroups, rewards,
-             latencies) = rollout_window(
+             latencies) = engine.rollout_window(
                 self.params, z0_window, chain_rngs,
                 num_steps=tsteps, start_first=first_of_window)
-            rewards = np.asarray(rewards, dtype=np.float64)     # (T, G, B)
-            latencies = np.asarray(latencies, dtype=np.float64)
             fines_np = np.asarray(fines)                        # (T, G, B, V)
+            if pipeline.fused:
+                rewards = np.asarray(rewards, dtype=np.float64)  # (T, G, B)
+                latencies = np.asarray(latencies, dtype=np.float64)
+            else:
+                rewards, latencies = pipeline.score_window(fines_np)
 
             # Bookkeeping in (t, g, b) order — reduces to the single-graph
             # engine's (t, b) order at G=1 (EMA baseline order and strict-<
@@ -813,9 +615,9 @@ class HSDAG:
                 normalize=cfg.normalize_weights)
             weights_tgb = jnp.asarray(np.transpose(weights_gbt, (2, 0, 1)))
             for _ in range(max(1, cfg.k_epochs)):
-                grads = grad_fn(self.params, z0_window, keys, weights_tgb,
-                                num_steps=tsteps,
-                                start_first=first_of_window)
+                grads = engine.window_grads(
+                    self.params, z0_window, keys, weights_tgb,
+                    num_steps=tsteps, start_first=first_of_window)
                 updates, self._opt_state = self._opt.update(
                     grads, self._opt_state, self.params)
                 self.params = apply_updates(self.params, updates)
@@ -856,10 +658,11 @@ class HSDAG:
               greedy: bool = True) -> np.ndarray:
         """One greedy forward placement with the current policy."""
         assert self.params is not None, "call init()/search() first"
-        rollout_step, _, _ = self._make_jitted(arrays)
+        engine = self._engine_single(arrays, pipeline=None)
         rng = rng if rng is not None else jax.random.PRNGKey(0)
-        fine, _, _, _ = rollout_step(self.params, jnp.asarray(arrays.x), rng,
-                                     first=True, greedy=greedy)
+        fine, _, _, _ = engine.rollout_step(
+            self.params, jnp.asarray(arrays.x), rng, first=True,
+            greedy=greedy)
         return np.asarray(fine)
 
 
@@ -915,11 +718,19 @@ class MultiGraphTrainer(HSDAG):
     # ------------------------------------------------------------ checkpoint
     def save_policy(self, directory: str, step: int = 0,
                     meta: Optional[Dict] = None) -> None:
-        """Atomically persist the shared policy (+ feature layout)."""
+        """Atomically persist the shared policy (+ feature layout).
+
+        The manifest records the training config — in particular which
+        simulation engine/backend produced the rewards, so a restored policy
+        can be re-evaluated (or fine-tuned) under the same cost model.
+        """
         from ..checkpoint import save_policy
         assert self.params is not None, "train() first"
+        full_meta = dict(meta or {})
+        full_meta.setdefault("engine", self.cfg.engine)
+        full_meta.setdefault("config", dataclasses.asdict(self.cfg))
         save_policy(directory, self.params, step=step,
-                    feature_config=self.feature_config, meta=meta)
+                    feature_config=self.feature_config, meta=full_meta)
 
     def load_policy(self, directory: str,
                     step: Optional[int] = None) -> int:
@@ -933,7 +744,14 @@ class MultiGraphTrainer(HSDAG):
         from ..checkpoint import restore_policy
         assert self.params is not None, \
             "init() first (the checkpoint restores into the param structure)"
-        self.params, self.feature_config, step = restore_policy(
+        self.params, self.feature_config, step, manifest = restore_policy(
             directory, self.params, step=step)
+        recorded = manifest.get("engine")
+        if recorded is not None and recorded not in (
+                _LOOP_ENGINES + tuple(backend_names())):
+            raise ValueError(
+                f"checkpoint was trained with engine {recorded!r}, which is "
+                f"not registered here; registered simulator backends: "
+                f"{backend_names()}")
         self._opt_state = self._opt.init(self.params)
         return step

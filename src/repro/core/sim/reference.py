@@ -1,0 +1,78 @@
+"""``reference`` backend — the host Python list-scheduler, one placement at a
+time.  The ground truth every vectorized backend is validated against; also
+the slot host reward callables (``MeasuredExecutor``) plug into conceptually:
+anything that must run outside jit scores through this path.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Sequence
+
+import numpy as np
+
+from ..costmodel import (BatchSimResult, SimResult, sim_arrays, simulate)
+from .base import SimulatorBackend, register_backend, stack_batch_results
+
+__all__ = ["ReferenceBackend", "RefSim"]
+
+
+class RefSim(NamedTuple):
+    """Prepared handle: the graph/platform pair plus the retire order."""
+
+    graph: object            # CompGraph
+    platform: object         # Platform
+    order: np.ndarray        # (V,) retire order handed to ``simulate``
+
+
+class ReferenceBackend(SimulatorBackend):
+    name = "reference"
+    jit_fused = False
+    jit_window = False
+
+    def prepare(self, graph, platform, *,
+                order: Optional[np.ndarray] = None,
+                schedule: str = "topo") -> RefSim:
+        """``order`` (or ``schedule=``) picks the retire order — pass the
+        level backend's order to cross-check it against the ground truth."""
+        if order is None:
+            order = np.asarray(
+                sim_arrays(graph, platform, schedule=schedule).order,
+                np.int64)
+        return RefSim(graph, platform, np.asarray(order, np.int64))
+
+    def prepare_batch(self, graphs: Sequence, platform, *,
+                      v_max: Optional[int] = None):
+        preps = [self.prepare(g, platform) for g in graphs]
+        if v_max is not None and graphs:
+            need = max(g.num_nodes for g in graphs)
+            if v_max < need:
+                raise ValueError(f"v_max={v_max} < largest graph ({need})")
+        return preps
+
+    def simulate(self, prep: RefSim, placement) -> SimResult:
+        return simulate(prep.graph, np.asarray(placement, np.int64),
+                        prep.platform, order=prep.order)
+
+    def simulate_batch(self, prep: RefSim, placements) -> BatchSimResult:
+        placements = np.asarray(placements)
+        results = [self.simulate(prep, p) for p in placements]
+        return BatchSimResult(
+            latency=np.asarray([r.latency for r in results]),
+            reward=np.asarray([r.reward for r in results]),
+            oom=np.asarray([r.oom for r in results]),
+            per_device_busy=np.stack([r.per_device_busy for r in results])
+            if results else np.zeros((0, prep.platform.num_devices)),
+            transfer_time=np.asarray([r.transfer_time for r in results]),
+        )
+
+    def simulate_multi(self, preps, placements) -> BatchSimResult:
+        """``placements`` (G, B, V_max); pad columns beyond V_g are ignored."""
+        placements = np.asarray(placements)
+        return stack_batch_results([
+            self.simulate_batch(prep, placements[i, :, :prep.graph.num_nodes])
+            for i, prep in enumerate(preps)])
+
+    def schedule_order(self, prep: RefSim) -> np.ndarray:
+        return prep.order
+
+
+register_backend(ReferenceBackend())

@@ -1,0 +1,267 @@
+"""RolloutEngine — the one window-granular rollout/replay engine.
+
+Before this layer ``core/hsdag.py`` carried three near-duplicate engine
+paths (``_make_jitted`` / ``_make_batched`` / ``_make_multi``): the same
+sample-score-replay closures, triplicated for the scalar, B-chain and
+(G, B)-chain cases, with the reward source hardcoded in each.  The engine
+collapses them:
+
+* :meth:`rollout_window` / :meth:`window_grads` — the jitted (G, B)-chain
+  window rollout and its differentiable Eq.-14 ``lax.scan`` replay.  The
+  single-graph batched search runs the same code at G=1 (proven bitwise
+  equal to the former dedicated path by the PR-2 equivalence suite), and
+  rewards come from the :class:`~.pipeline.RewardPipeline` — fused in-jit
+  for the ``scan`` backend, deferred to window scoring otherwise.
+* :meth:`rollout_step` / :meth:`window_grads_scalar` — the PR-1 scalar
+  reference loop (one unbatched chain, Python-unrolled replay), kept
+  verbatim as the ground-truth implementation the batched engines are
+  pinned against (and the path ``place()`` decodes through).
+
+Masks (``node_mask``/``edge_mask``) thread the padded multi-graph contract
+exactly as before: dropped at trace time when the batch needs no padding, so
+G=1 on an unpadded batch is the unmasked computation.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .pipeline import RewardPipeline
+
+__all__ = ["RolloutEngine", "split_multi_keys"]
+
+
+def split_multi_keys(rngs: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-chain key split over a (G, B, 2) key batch."""
+    both = jax.vmap(jax.vmap(jax.random.split))(rngs)    # (G, B, 2, 2)
+    return both[:, :, 0], both[:, :, 1]
+
+
+class RolloutEngine:
+    """Builds and caches the jitted rollout/replay functions for one
+    (graph batch, config, reward pipeline) triple.  See module docstring.
+
+    ``step_fn`` is the Alg.-1 iteration (``HSDAG._step``-shaped)::
+
+        step_fn(params, z, x0, adj, edges, rng, *, first, train,
+                greedy=False, node_mask=None, edge_mask=None) -> StepOutput
+    """
+
+    def __init__(self, step_fn, cfg, *, x0, adj, edges,
+                 node_mask=None, edge_mask=None,
+                 pipeline: Optional[RewardPipeline] = None):
+        self._step = step_fn
+        self._cfg = cfg
+        self._x0 = jnp.asarray(x0)                   # (G, V, d)
+        self._adj = jnp.asarray(adj)                 # (G, V, V)
+        self._edges = jnp.asarray(edges)             # (G, E, 2)
+        self._use_masks = node_mask is not None
+        self._nmask = jnp.asarray(node_mask) if self._use_masks else None
+        self._emask = jnp.asarray(edge_mask) if self._use_masks else None
+        self._pipeline = pipeline
+        self._fused = pipeline is not None and pipeline.fused
+        self._sim = (jax.tree.map(jnp.asarray, pipeline.sim_tree)
+                     if self._fused else None)
+        self._window_fns = None
+        self._scalar_fns = None
+
+    # ----------------------------------------------------- (G, B) window path
+    def _build_window_fns(self):
+        cfg = self._cfg
+        step = self._step
+        x0, adj, edges = self._x0, self._adj, self._edges
+        use_masks, nmask, emask = self._use_masks, self._nmask, self._emask
+        fused, sim, pipeline = self._fused, self._sim, self._pipeline
+
+        def _chain_sample(params, xg, ag, eg, nmg, emg, simg, z, key,
+                          first: bool):
+            out = step(params, z, xg, ag, eg, key, first=first, train=True,
+                       node_mask=nmg, edge_mask=emg)
+            fine = out.policy.fine_placement
+            if simg is not None:
+                reward, latency = pipeline.step_score(simg, fine)
+            else:
+                reward = latency = jnp.float32(0.0)
+            return (fine, out.parse.num_groups, out.z_next, reward, latency)
+
+        def _vsample(params, z, keys, first: bool):
+            """z (G, B, V, d), keys (G, B, 2) → per-(g, b) samples."""
+
+            def per_graph(xg, ag, eg, nmg, emg, simg, z_b, k_b):
+                return jax.vmap(lambda z1, k1: _chain_sample(
+                    params, xg, ag, eg, nmg, emg, simg, z1, k1, first)
+                )(z_b, k_b)
+
+            # Masks and the sim pytree are optional per-graph operands;
+            # branch at trace time so absent ones never enter the vmap.
+            if use_masks and fused:
+                return jax.vmap(per_graph)(x0, adj, edges, nmask, emask,
+                                           sim, z, keys)
+            if use_masks:
+                return jax.vmap(
+                    lambda xg, ag, eg, nmg, emg, z_b, k_b: per_graph(
+                        xg, ag, eg, nmg, emg, None, z_b, k_b)
+                )(x0, adj, edges, nmask, emask, z, keys)
+            if fused:
+                return jax.vmap(
+                    lambda xg, ag, eg, simg, z_b, k_b: per_graph(
+                        xg, ag, eg, None, None, simg, z_b, k_b)
+                )(x0, adj, edges, sim, z, keys)
+            return jax.vmap(
+                lambda xg, ag, eg, z_b, k_b: per_graph(
+                    xg, ag, eg, None, None, None, z_b, k_b)
+            )(x0, adj, edges, z, keys)
+
+        def _rollout_window(params, z, rngs, num_steps: int,
+                            start_first: bool):
+            """→ (z_final, rngs_final, keys (T,G,B,2), fine (T,G,B,V),
+                  ngroups (T,G,B), rewards (T,G,B), latencies (T,G,B))."""
+
+            def body(carry, _):
+                z_c, rngs_c = carry
+                rngs_c, keys = split_multi_keys(rngs_c)
+                fine, ngroups, z_next, rew, lat = _vsample(
+                    params, z_c, keys, first=False)
+                return (z_next, rngs_c), (keys, fine, ngroups, rew, lat)
+
+            if start_first:
+                rngs, keys0 = split_multi_keys(rngs)
+                fine0, ng0, z, rew0, lat0 = _vsample(params, z, keys0,
+                                                     first=True)
+                (z, rngs), tail = jax.lax.scan(body, (z, rngs), None,
+                                               length=num_steps - 1)
+                head = (keys0, fine0, ng0, rew0, lat0)
+                outs = tuple(jnp.concatenate([h[None], t], axis=0)
+                             for h, t in zip(head, tail))
+            else:
+                (z, rngs), outs = jax.lax.scan(body, (z, rngs), None,
+                                               length=num_steps)
+            return (z, rngs) + outs
+
+        def _window_loss(params, z0, keys, weights, num_steps: int,
+                         start_first: bool):
+            """Differentiable lax.scan replay (Eq. 14) averaged over every
+            (g, b) chain.  keys (T,G,B,2), weights (T,G,B)."""
+
+            def _chain_loss(params_, xg, ag, eg, nmg, emg, z1, k1, w1,
+                            first: bool):
+                out = step(params_, z1, xg, ag, eg, k1, first=first,
+                           train=True, node_mask=nmg, edge_mask=emg)
+                loss = -out.policy.logp * w1
+                loss = loss - cfg.entropy_coef * out.policy.entropy
+                return out.z_next, loss
+
+            def _vloss(z_c, k_t, w_t, first: bool):
+                def per_graph(xg, ag, eg, nmg, emg, z_b, k_b, w_b):
+                    return jax.vmap(
+                        lambda z1, k1, w1: _chain_loss(
+                            params, xg, ag, eg, nmg, emg, z1, k1, w1, first)
+                    )(z_b, k_b, w_b)
+
+                if use_masks:
+                    return jax.vmap(per_graph)(x0, adj, edges, nmask, emask,
+                                               z_c, k_t, w_t)
+                return jax.vmap(
+                    lambda xg, ag, eg, z_b, k_b, w_b: per_graph(
+                        xg, ag, eg, None, None, z_b, k_b, w_b)
+                )(x0, adj, edges, z_c, k_t, w_t)
+
+            total = jnp.float32(0.0)
+            z = z0
+            if start_first:
+                z, l0 = _vloss(z, keys[0], weights[0], first=True)
+                total = total + jnp.sum(l0)
+                keys, weights = keys[1:], weights[1:]
+
+            def body(carry, xs):
+                z_c, tot = carry
+                k_t, w_t = xs
+                z_c, l_t = _vloss(z_c, k_t, w_t, first=False)
+                return (z_c, tot + jnp.sum(l_t)), None
+
+            (z, total), _ = jax.lax.scan(body, (z, total), (keys, weights))
+            nchains = z0.shape[0] * z0.shape[1]
+            return total / nchains
+
+        rollout_window = jax.jit(_rollout_window,
+                                 static_argnames=("num_steps", "start_first"))
+        grad_fn = jax.jit(jax.grad(_window_loss),
+                          static_argnames=("num_steps", "start_first"))
+        return rollout_window, grad_fn
+
+    @property
+    def _window(self):
+        if self._window_fns is None:
+            self._window_fns = self._build_window_fns()
+        return self._window_fns
+
+    def rollout_window(self, params, z, rngs, *, num_steps: int,
+                       start_first: bool):
+        return self._window[0](params, z, rngs, num_steps=num_steps,
+                               start_first=start_first)
+
+    def window_grads(self, params, z0, keys, weights, *, num_steps: int,
+                     start_first: bool):
+        return self._window[1](params, z0, keys, weights,
+                               num_steps=num_steps, start_first=start_first)
+
+    # ------------------------------------------------- scalar reference path
+    def _build_scalar_fns(self):
+        import numpy as np
+        cfg = self._cfg
+        step = self._step
+        # The scalar engine is single-graph by construction: graph slot 0.
+        x0, adj, edges = self._x0[0], self._adj[0], self._edges[0]
+        if self._use_masks:
+            # Masks are concrete at build time — trim pad slots (e.g. the
+            # phantom edge row batch_graph_arrays pads an edge-free graph
+            # to) so the scalar path sees exactly the unpadded arrays.
+            nm = np.asarray(self._nmask[0])
+            em = np.asarray(self._emask[0])
+            x0 = jnp.asarray(np.asarray(x0)[nm])
+            adj = jnp.asarray(np.asarray(adj)[np.ix_(nm, nm)])
+            edges = jnp.asarray(np.asarray(edges)[em])
+
+        def _rollout_step(params, z, rng, first: bool, greedy: bool = False):
+            out = step(params, z, x0, adj, edges, rng,
+                       first=first, train=not greedy, greedy=greedy)
+            return (out.policy.fine_placement, out.policy.coarse_placement,
+                    out.parse.num_groups, out.z_next)
+
+        def _window_loss(params, z0, rngs, weights, num_steps: int,
+                         start_first: bool):
+            """Python-unrolled replay of a buffer window (Eq. 14) — the
+            reference gradient the scanned replay is pinned against."""
+            z = z0
+            loss = jnp.float32(0.0)
+            for i in range(num_steps):
+                first = start_first and i == 0
+                out = step(params, z, x0, adj, edges, rngs[i],
+                           first=first, train=True)
+                loss = loss - out.policy.logp * weights[i]
+                loss = loss - cfg.entropy_coef * out.policy.entropy
+                z = out.z_next
+            return loss
+
+        rollout_step = jax.jit(_rollout_step,
+                               static_argnames=("first", "greedy"))
+        grad_fn = jax.jit(jax.grad(_window_loss),
+                          static_argnames=("num_steps", "start_first"))
+        return rollout_step, grad_fn
+
+    @property
+    def _scalar(self):
+        if self._scalar_fns is None:
+            self._scalar_fns = self._build_scalar_fns()
+        return self._scalar_fns
+
+    def rollout_step(self, params, z, rng, *, first: bool,
+                     greedy: bool = False):
+        return self._scalar[0](params, z, rng, first=first, greedy=greedy)
+
+    def window_grads_scalar(self, params, z0, rngs, weights, *,
+                            num_steps: int, start_first: bool):
+        return self._scalar[1](params, z0, rngs, weights,
+                               num_steps=num_steps, start_first=start_first)

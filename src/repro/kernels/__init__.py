@@ -4,12 +4,17 @@
   rmsnorm         — fused one-pass RMSNorm
   gcn_spmm        — fused normalized-adjacency aggregation (HSDAG Eq. 6)
   ssd_scan        — Mamba-2 cross-chunk state recurrence
+  levelsim        — level-parallel DAG-makespan kernel (`level` sim backend)
 
-Each has a jit'd wrapper in ops.py and a pure-jnp oracle in ref.py;
-validation runs the TPU kernel bodies under interpret=True on CPU.
+Each has a jit'd wrapper in ops.py (levelsim's lives in core/sim/level.py,
+next to its result assembly) and a pure oracle — ref.py for the neural
+kernels, the core/costmodel list-scheduler for levelsim; validation runs the
+TPU kernel bodies under interpret=True on CPU.
 """
+from .levelsim import LevelArrays, build_level_arrays, level_makespan
 from .ops import (flash_attention_op, gcn_aggregate_op, rmsnorm_op,
                   ssd_scan_op)
 
 __all__ = ["flash_attention_op", "gcn_aggregate_op", "rmsnorm_op",
-           "ssd_scan_op"]
+           "ssd_scan_op", "LevelArrays", "build_level_arrays",
+           "level_makespan"]

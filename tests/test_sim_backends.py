@@ -1,0 +1,326 @@
+"""Simulation-engine layer: backend registry, parity, and the level kernel.
+
+The parity contract: device queues make the list schedule order-sensitive
+(level-major vs heap-Kahn retire order shifts Inception's makespan by ~20%),
+so the retire order is part of each backend's cost model and *all backends
+agree (≤1e-5 relative latency) on a common order* — the reference scheduler
+takes the order explicitly (``simulate(..., order=)``), the scan kernel runs
+it via ``sim_arrays(schedule="level")``, and the level Pallas kernel retires
+it natively.  On the default heap-Kahn order, scan vs reference parity is
+pinned by tests/test_costmodel_batch.py (unchanged — bit-for-bit PR-1/2).
+"""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import (HSDAG, HSDAGConfig, FeatureConfig, backend_names,
+                        extract_features, get_backend, paper_platform,
+                        simulate, simulate_batch, tpu_stage_platform)
+from repro.core.costmodel import pad_sim_arrays, sim_arrays, simulate_jax
+from repro.core.sim import RewardPipeline
+from repro.graphs import PAPER_BENCHMARKS
+
+from conftest import given, make_diamond, random_dag, settings, st
+
+RTOL = 1e-5
+
+
+# ------------------------------------------------------------------ registry
+def test_registry_has_the_three_backends():
+    assert {"reference", "scan", "level"} <= set(backend_names())
+
+
+def test_get_backend_unknown_raises_with_names():
+    with pytest.raises(ValueError) as e:
+        get_backend("bogus")
+    for name in backend_names():
+        assert name in str(e.value)
+
+
+def test_config_validates_engine_against_registry():
+    HSDAGConfig(engine="level")               # registered backend: fine
+    HSDAGConfig(engine="scalar")              # loop selector: fine
+    with pytest.raises(ValueError) as e:
+        HSDAGConfig(engine="bogus")
+    for name in backend_names():
+        assert name in str(e.value)
+
+
+# --------------------------------------------------- three-backend agreement
+def _assert_backends_agree(g, placements, plat):
+    """All three backends score the same placements on the *level* schedule
+    (the common order) to ≤1e-5 relative latency/reward."""
+    placements = np.atleast_2d(np.asarray(placements))
+    level = get_backend("level")
+    prep = level.prepare(g, plat)
+    order = level.schedule_order(prep)
+    res_level = level.simulate_batch(prep, placements)
+    # reference, replaying the same retire order
+    ref = get_backend("reference")
+    res_ref = ref.simulate_batch(ref.prepare(g, plat, order=order),
+                                 placements)
+    # scan kernel on the level-schedule arrays
+    sa = sim_arrays(g, plat, schedule="level")
+    np.testing.assert_array_equal(np.asarray(sa.order, np.int64), order)
+    res_scan = np.asarray(
+        [float(simulate_jax(sa, p.astype(np.int32)).latency)
+         for p in placements])
+    np.testing.assert_allclose(res_level.latency, res_ref.latency, rtol=RTOL)
+    np.testing.assert_allclose(res_scan, res_ref.latency, rtol=RTOL)
+    np.testing.assert_allclose(res_level.reward, res_ref.reward, rtol=RTOL)
+    np.testing.assert_allclose(res_level.transfer_time, res_ref.transfer_time,
+                               rtol=1e-4, atol=1e-12)
+    np.testing.assert_allclose(res_level.per_device_busy,
+                               res_ref.per_device_busy, rtol=1e-4)
+    assert np.array_equal(res_level.oom, res_ref.oom)
+
+
+@pytest.mark.parametrize("name", sorted(PAPER_BENCHMARKS))
+def test_backends_agree_on_paper_graphs(name):
+    """Acceptance: the level Pallas backend matches the reference scheduler
+    to ≤1e-5 relative latency on every Table-2 graph (interpret=True), and
+    the scan kernel agrees on the same schedule."""
+    g = PAPER_BENCHMARKS[name]()
+    rng = np.random.default_rng(0)
+    placements = rng.integers(0, 2, size=(3, g.num_nodes))
+    _assert_backends_agree(g, placements, paper_platform())
+
+
+def test_backends_agree_on_diamond_and_random_dags():
+    rng = np.random.default_rng(7)
+    plat = paper_platform()
+    _assert_backends_agree(make_diamond(), rng.integers(0, 2, (8, 7)), plat)
+    for n in (5, 17, 40):
+        g = random_dag(rng, n, p=0.2)
+        _assert_backends_agree(g, rng.integers(0, 2, (6, n)), plat)
+
+
+def test_backends_agree_multi_device():
+    rng = np.random.default_rng(3)
+    g = random_dag(rng, 30, p=0.15)
+    _assert_backends_agree(g, rng.integers(0, 4, (6, 30)),
+                           tpu_stage_platform(num_stages=4))
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(3, 20), st.integers(0, 500))
+def test_property_backends_agree_random_dags(n, seed):
+    rng = np.random.default_rng(seed)
+    g = random_dag(rng, n, p=0.25)
+    plat = paper_platform() if seed % 2 == 0 else tpu_stage_platform(2)
+    _assert_backends_agree(g, rng.integers(0, 2, (3, n)), plat)
+
+
+# --------------------------------------------------------- padded level sims
+@pytest.mark.parametrize("extra", [3, 160])
+def test_level_backend_padding_is_inert(extra):
+    """Padded SimArrays (incl. V_max ≫ V) leave the level kernel's makespan
+    bitwise unchanged — pad slots never enter the level tables."""
+    from repro.core.sim.level import _level_batch_fn
+    from repro.kernels.levelsim import build_level_arrays
+    plat = paper_platform()
+    g = make_diamond()
+    rng = np.random.default_rng(extra)
+    placements = rng.integers(0, 2, (4, g.num_nodes)).astype(np.int32)
+    sa = sim_arrays(g, plat, schedule="level")
+    res = _level_batch_fn()(sa, build_level_arrays(sa), placements,
+                            interpret=True)
+    sap = pad_sim_arrays(sa, g.num_nodes + extra)
+    padded = np.zeros((4, sap.num_nodes), np.int32)
+    padded[:, :g.num_nodes] = placements
+    resp = _level_batch_fn()(sap, build_level_arrays(sap), padded,
+                             interpret=True)
+    np.testing.assert_array_equal(np.asarray(res.latency),
+                                  np.asarray(resp.latency))
+    np.testing.assert_array_equal(np.asarray(res.transfer_time),
+                                  np.asarray(resp.transfer_time))
+
+
+def test_level_backend_multi_matches_per_graph():
+    """prepare_batch pads every graph to V_max; scoring a (G, B, V_max)
+    block equals scoring each graph unpadded."""
+    rng = np.random.default_rng(4)
+    graphs = [make_diamond(), random_dag(rng, 23, p=0.2),
+              random_dag(rng, 11, p=0.3)]
+    plat = paper_platform()
+    level = get_backend("level")
+    preps = level.prepare_batch(graphs, plat, v_max=30)
+    B = 3
+    placements = np.zeros((len(graphs), B, 30), np.int64)
+    for i, g in enumerate(graphs):
+        placements[i, :, :g.num_nodes] = rng.integers(0, 2, (B, g.num_nodes))
+    res = level.simulate_multi(preps, placements)
+    assert res.latency.shape == (3, B)
+    for i, g in enumerate(graphs):
+        solo = level.simulate_batch(level.prepare(g, plat),
+                                    placements[i, :, :g.num_nodes])
+        np.testing.assert_array_equal(res.latency[i], solo.latency)
+
+
+def test_level_backend_rejects_bad_devices():
+    g = make_diamond()
+    level = get_backend("level")
+    prep = level.prepare(g, paper_platform())
+    with pytest.raises(ValueError):
+        level.simulate_batch(prep, np.full((2, g.num_nodes), 7))
+    with pytest.raises(ValueError):
+        level.simulate_batch(prep, np.zeros((2, g.num_nodes + 1), int))
+
+
+# ------------------------------------------------ simulate_batch(sim=) reuse
+def test_simulate_batch_accepts_prebuilt_sim_arrays(diamond):
+    plat = paper_platform()
+    sa = sim_arrays(diamond, plat)
+    p = np.random.default_rng(0).integers(0, 2, (4, diamond.num_nodes))
+    a = simulate_batch(diamond, p, plat)
+    b = simulate_batch(diamond, p, plat, sim=sa)
+    np.testing.assert_array_equal(a.latency, b.latency)
+    other = random_dag(np.random.default_rng(1), 9, p=0.3)
+    with pytest.raises(ValueError):
+        simulate_batch(other, np.zeros((1, 9), int), plat, sim=sa)
+    # a different graph with the SAME node count must be rejected too —
+    # equal shapes would otherwise silently score the wrong graph
+    same_size = random_dag(np.random.default_rng(2), diamond.num_nodes,
+                           p=0.3)
+    sim_arrays(same_size, plat)        # its own cache entry exists
+    with pytest.raises(ValueError, match="different graph"):
+        simulate_batch(same_size, p, plat, sim=sa)
+    # a sim built for a different platform must be rejected, not mis-scored
+    with pytest.raises(ValueError, match="different platform"):
+        simulate_batch(diamond, p, tpu_stage_platform(2), sim=sa)
+
+
+# ----------------------------------------------------- engine-driven search
+def _cfg(**kw):
+    base = dict(num_devices=2, hidden_channel=32, max_episodes=3,
+                update_timestep=5)
+    base.update(kw)
+    return HSDAGConfig(**base)
+
+
+def test_search_engine_level_end_to_end(diamond):
+    """engine="level": rewards come from the Pallas kernel; the reported
+    best replays on the reference scheduler under the level-major order."""
+    arrays = extract_features(diamond, FeatureConfig(d_pos=8))
+    plat = paper_platform()
+    cfg = _cfg(batch_chains=4, engine="level")
+    res = HSDAG(cfg).search(diamond, arrays, platform=plat,
+                            rng=jax.random.PRNGKey(0))
+    assert np.isfinite(res.best_latency)
+    level = get_backend("level")
+    order = level.schedule_order(level.prepare(diamond, plat))
+    ref = simulate(diamond, res.best_placement, plat, order=order)
+    np.testing.assert_allclose(res.best_latency, ref.latency, rtol=RTOL)
+
+
+def test_search_engine_reference_matches_host_reward_fn(diamond):
+    """engine="reference" is the host scheduler behind the pipeline — its
+    trajectory is bit-for-bit a reward_fn wrapping simulate()."""
+    arrays = extract_features(diamond, FeatureConfig(d_pos=8))
+    plat = paper_platform()
+
+    def reward_fn(p):
+        r = simulate(diamond, p, plat)
+        return r.reward, r.latency
+
+    ra = HSDAG(_cfg(batch_chains=2)).search(
+        diamond, arrays, reward_fn, rng=jax.random.PRNGKey(0),
+        engine="batched")
+    rb = HSDAG(_cfg(batch_chains=2, engine="reference")).search(
+        diamond, arrays, platform=plat, rng=jax.random.PRNGKey(0))
+    assert [h["best_latency"] for h in ra.history] == \
+        [h["best_latency"] for h in rb.history]
+    np.testing.assert_array_equal(ra.best_placement, rb.best_placement)
+
+
+def test_search_rejects_backend_engine_plus_reward_fn(diamond):
+    arrays = extract_features(diamond, FeatureConfig(d_pos=8))
+    with pytest.raises(ValueError):
+        HSDAG(_cfg(batch_chains=2)).search(
+            diamond, arrays, lambda p: (1.0, 1.0), engine="level")
+
+
+def test_search_and_place_on_edge_free_graph():
+    """An edge-free graph pads a masked phantom edge slot in the G=1 batch;
+    both the scalar and the batched engine must keep it out of the GPN."""
+    from repro.core import CompGraph
+    g = CompGraph("loose")
+    for i in range(4):
+        g.add_op(f"n{i}", "MatMul", output_shape=(1, 8),
+                 flops=1e6, bytes_out=64)
+    arrays = extract_features(g, FeatureConfig(d_pos=8))
+    assert arrays.edges.shape[0] == 0
+    plat = paper_platform()
+    agent = HSDAG(_cfg(batch_chains=2, max_episodes=1, update_timestep=2))
+    res = agent.search(g, arrays, platform=plat, rng=jax.random.PRNGKey(0))
+    assert np.isfinite(res.best_latency)
+    p = agent.place(arrays)               # scalar path
+    assert p.shape == (4,) and set(np.unique(p)) <= {0, 1}
+
+
+def test_train_multi_rejects_scalar_engine():
+    from repro.core import MultiGraphTrainer
+    tr = MultiGraphTrainer(_cfg(engine="scalar"))
+    with pytest.raises(ValueError, match="no scalar loop"):
+        tr.train([make_diamond()], platform=paper_platform(),
+                 rng=jax.random.PRNGKey(0))
+
+
+def test_train_multi_level_backend():
+    """Cross-graph training with window-scored Pallas rewards."""
+    rng = np.random.default_rng(9)
+    graphs = [make_diamond(), random_dag(rng, 9, p=0.3)]
+    plat = paper_platform()
+    from repro.core import MultiGraphTrainer
+    tr = MultiGraphTrainer(_cfg(batch_chains=2, max_episodes=2,
+                                update_timestep=3, engine="level"))
+    res = tr.train(graphs, platform=plat, rng=jax.random.PRNGKey(0))
+    assert np.isfinite(res.best_latencies).all()
+    level = get_backend("level")
+    for g, p, lat in zip(graphs, res.best_placements, res.best_latencies):
+        order = level.schedule_order(level.prepare(g, plat))
+        np.testing.assert_allclose(
+            simulate(g, p, plat, order=order).latency, lat, rtol=RTOL)
+
+
+# ------------------------------------------------------- checkpoint metadata
+def test_checkpoint_records_engine(tmp_path):
+    from repro.checkpoint import policy_manifest
+    from repro.core import MultiGraphTrainer
+    rng = np.random.default_rng(10)
+    graphs = [make_diamond()]
+    tr = MultiGraphTrainer(_cfg(batch_chains=2, max_episodes=1,
+                                update_timestep=3, engine="scan"))
+    tr.train(graphs, platform=paper_platform(), rng=jax.random.PRNGKey(0))
+    tr.save_policy(str(tmp_path / "ckpt"), step=1)
+    man = policy_manifest(str(tmp_path / "ckpt"))
+    assert man["engine"] == "scan"
+    assert man["config"]["batch_chains"] == 2
+    # and the round-trip still works through the engine validation
+    tr2 = MultiGraphTrainer(tr.cfg)
+    arrays0 = extract_features(graphs[0], tr.feature_config)
+    tr2.init(jax.random.PRNGKey(1), arrays0)
+    assert tr2.load_policy(str(tmp_path / "ckpt")) == 1
+
+
+# ------------------------------------------------------------- reward pipeline
+def test_reward_pipeline_window_scoring_matches_backends(diamond):
+    rng = np.random.default_rng(2)
+    plat = paper_platform()
+    T, B = 3, 2
+    fines = rng.integers(0, 2, (T, B, diamond.num_nodes))
+    # host reward_fn pipeline == reference backend pipeline (same scheduler)
+    def reward_fn(p):
+        r = simulate(diamond, p, plat)
+        return r.reward, r.latency
+    r_host, l_host = RewardPipeline.from_reward_fn(
+        reward_fn).score_window(fines)
+    r_ref, l_ref = RewardPipeline.from_platform(
+        diamond, plat, "reference").score_window(fines)
+    np.testing.assert_allclose(r_host, r_ref, rtol=1e-12)
+    np.testing.assert_allclose(l_host, l_ref, rtol=1e-12)
+    # scan pipeline agrees to kernel tolerance
+    r_scan, l_scan = RewardPipeline.from_platform(
+        diamond, plat, "scan").score_window(fines)
+    np.testing.assert_allclose(l_scan, l_ref, rtol=RTOL)
