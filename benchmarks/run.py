@@ -18,6 +18,7 @@ import table4_downstream
 import table5_complexity
 import table6_throughput
 import table7_generalization
+import table8_corpus
 
 
 def _roofline_rows() -> None:
@@ -46,6 +47,7 @@ def main() -> None:
     table5_complexity.main()
     table6_throughput.main()
     table7_generalization.main()
+    table8_corpus.main()
     _roofline_rows()
 
 

@@ -1,0 +1,115 @@
+"""Table 8 (repo-local): corpus curriculum training + warm-start budgets.
+
+Three measurements on the new workload subsystem:
+
+* ``corpus_train_throughput`` — placements/s of the curriculum loop over a
+  mixed ≥12-graph corpus (benchmarks + traced LM layers + synthetic
+  families), with the bucket partition in ``derived``.
+* ``corpus_zero_shot_{g}`` — greedy decode of a *held-out family* graph
+  (``branch_join`` synthetics, never in the corpus) by the corpus policy,
+  vs its CPU-only baseline.
+* ``corpus_finetune_budget_{g}`` — the fine-tune-vs-from-scratch
+  episode-budget comparison the ROADMAP asked for: train on the held-out
+  graph from scratch for ``EPISODES`` episodes → target = its best latency;
+  then warm-start from the saved corpus policy and count the episodes
+  needed to reach that target.  ``derived`` reports both budgets and the
+  final latencies.
+
+Env knobs: ``REPRO_BENCH_EPISODES`` / ``REPRO_BENCH_TIMESTEP`` /
+``REPRO_BENCH_CHAINS`` (common.py), ``REPRO_BENCH_CORPUS`` (override the
+corpus spec).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+
+import jax
+import numpy as np
+
+from repro.core import HSDAGConfig, paper_platform, simulate
+from repro.core.baselines import cpu_only
+from repro.core.train import CurriculumTrainer
+from repro.graphs import build_corpus
+
+from common import EPISODES, UPDATE_TIMESTEP, emit
+
+CHAINS = int(os.environ.get("REPRO_BENCH_CHAINS", "8"))
+CORPUS = os.environ.get(
+    "REPRO_BENCH_CORPUS",
+    "benchmark:names=inception_v3+resnet50;"
+    "traced:archs=qwen1.5-0.5b+phi3-mini-3.8b;"
+    "lm:archs=qwen1.5-0.5b+mamba2-130m:seq_len=1024;"
+    # layered + series_parallel only: branch_join is the HELD-OUT family
+    "synthetic:family=layered+series_parallel:count=6:size=40:seed=0")
+HELD_OUT = "synthetic:family=branch_join:count=2:size=40:seed=123"
+
+
+def _cfg(episodes=None) -> HSDAGConfig:
+    return HSDAGConfig(num_devices=2, max_episodes=episodes or EPISODES,
+                       update_timestep=UPDATE_TIMESTEP,
+                       batch_chains=CHAINS)
+
+
+def _episodes_to_reach(history, target: float):
+    for h in history:
+        if h["best_latency"] <= target:
+            return h["episode"] + 1
+    return None
+
+
+def main() -> None:
+    plat = paper_platform()
+    corpus = build_corpus(CORPUS)
+    held = build_corpus(HELD_OUT)
+
+    # ---- corpus curriculum training ----
+    trainer = CurriculumTrainer(_cfg(), max_buckets=3, graphs_per_episode=4)
+    res = trainer.train_corpus(corpus, platform=plat,
+                               rng=jax.random.PRNGKey(0))
+    walls = [h["wall_s"] for h in res.history[len(res.buckets):]] or \
+        [h["wall_s"] for h in res.history]
+    rate = (UPDATE_TIMESTEP * CHAINS * trainer.graphs_per_episode
+            * len(walls) / sum(walls))
+    emit("corpus_train_throughput", 1e6 / rate,
+         f"evals_per_s={rate:.1f};graphs={len(corpus)};"
+         f"buckets={'/'.join(str(len(b)) for b in res.buckets)};"
+         f"shapes={len(trainer.engine.shape_keys_seen)}")
+
+    policy_dir = os.path.join(tempfile.mkdtemp(prefix="table8_"), "policy")
+    trainer.save_policy(policy_dir)
+
+    # ---- held-out family: zero-shot + fine-tune-vs-scratch budgets ----
+    for g in held:
+        cpu = simulate(g, cpu_only(g), plat).latency
+        _, lat = trainer.evaluate_zero_shot(g, platform=plat)
+        emit(f"corpus_zero_shot_{g.name}", lat * 1e6,
+             f"vs_cpu={100*(cpu-lat)/cpu:.1f}%;family=branch_join;"
+             f"corpus_graphs={len(corpus)}")
+
+        scratch = CurriculumTrainer(_cfg(), max_buckets=1,
+                                    graphs_per_episode=1)
+        rs = scratch.train_corpus([g], platform=plat,
+                                  rng=jax.random.PRNGKey(1))
+        target = float(rs.best_latencies[0])
+
+        warm = CurriculumTrainer(_cfg(), max_buckets=1,
+                                 graphs_per_episode=1)
+        warm.warm_start(policy_dir)
+        rw = warm.train_corpus([g], platform=plat,
+                               rng=jax.random.PRNGKey(1))
+        warm_eps = _episodes_to_reach(rw.history, target)
+        emit(f"corpus_finetune_budget_{g.name}",
+             float(rw.best_latencies[0]) * 1e6,
+             f"scratch_best_us={target*1e6:.1f};"
+             f"scratch_episodes={rs.episodes_run};"
+             f"warm_episodes_to_scratch_best="
+             f"{warm_eps if warm_eps is not None else 'not_reached'};"
+             f"warm_best_us={float(rw.best_latencies[0])*1e6:.1f}")
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    print("name,us_per_call,derived")
+    main()

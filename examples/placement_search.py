@@ -12,6 +12,22 @@ over Inception-V3 + ResNet-50 in a single jitted (G, B) batched loop, then
 zero-shot transfer of that policy to the held-out BERT graph:
 
     PYTHONPATH=src python examples/placement_search.py --multi-graph
+
+``--corpus <spec>`` trains over a *workload corpus* instead — any mix the
+workload registry can build (benchmarks, LM layer graphs from configs/,
+trace_to_graph'd layers, seedable synthetic families), size-bucketed and
+curriculum-sampled so the corpus never has to fit one device batch:
+
+    PYTHONPATH=src python examples/placement_search.py \\
+        --corpus "benchmark;synthetic:family=mixed:count=9:size=30:seed=0" \\
+        --checkpoint ckpt/corpus
+
+``--warm-start <ckpt>`` fine-tunes from a previously saved corpus policy
+(the saved feature layout is validated against the new graphs first):
+
+    PYTHONPATH=src python examples/placement_search.py \\
+        --corpus "synthetic:family=branch_join:count=2" \\
+        --warm-start ckpt/corpus
 """
 import argparse
 
@@ -19,12 +35,49 @@ import jax
 import numpy as np
 
 from repro.core import (HSDAG, HSDAGConfig, MultiGraphTrainer,
-                        extract_features, FeatureConfig,
+                        CurriculumTrainer, extract_features, FeatureConfig,
                         paper_platform, simulate)
 from repro.core.baselines import cpu_only, gpu_only
 from repro.core.planner import plan_stages
 from repro.configs import get
-from repro.graphs import bert_base, inception_v3, resnet50
+from repro.graphs import bert_base, build_corpus, inception_v3, resnet50
+
+
+def run_corpus(args, platform) -> None:
+    """Curriculum training over a workload corpus (+ optional warm start)."""
+    corpus = build_corpus(args.corpus)
+    print(f"corpus: {len(corpus)} graphs, "
+          f"{min(g.num_nodes for g in corpus)}-"
+          f"{max(g.num_nodes for g in corpus)} nodes")
+    trainer = CurriculumTrainer(
+        HSDAGConfig(num_devices=2, max_episodes=args.episodes,
+                    update_timestep=10, batch_chains=args.chains,
+                    engine=args.engine),
+        max_buckets=args.max_buckets,
+        graphs_per_episode=args.graphs_per_episode,
+        sampler_strategy=args.sampler)
+    if args.warm_start:
+        trainer.warm_start(args.warm_start)
+        print(f"warm-starting from {args.warm_start} (saved feature layout "
+              f"will be validated against the corpus before restoring)")
+    res = trainer.train_corpus(
+        corpus, platform=platform, rng=jax.random.PRNGKey(0),
+        verbose=True,
+        checkpoint_dir=(args.checkpoint or None),
+        checkpoint_every=max(1, args.episodes // 4))
+    print(f"\ncorpus training: {res.num_evaluations} placements at "
+          f"{res.evals_per_sec:.1f}/s over {len(res.buckets)} size buckets "
+          f"{[len(b) for b in res.buckets]}")
+    for g, best, greedy in zip(corpus, res.best_latencies,
+                               res.greedy_latencies):
+        cpu = simulate(g, cpu_only(g), platform).latency
+        sampled = f"{best*1e3:7.3f} ms" if np.isfinite(best) else "  (unsampled)"
+        print(f"  {g.name[:28]:28s} CPU-only {cpu*1e3:7.3f} ms → "
+              f"best {sampled} | greedy {greedy*1e3:7.3f} ms")
+    if args.checkpoint:
+        trainer.save_policy(args.checkpoint + "_policy")
+        print(f"run state in {args.checkpoint}, shared policy saved to "
+              f"{args.checkpoint}_policy (use --warm-start to fine-tune)")
 
 
 def run_multi_graph(args, platform) -> None:
@@ -72,11 +125,31 @@ def main():
     ap.add_argument("--multi-graph", action="store_true",
                     help="train ONE policy jointly over Inception+ResNet "
                          "and transfer zero-shot to held-out BERT")
+    ap.add_argument("--corpus", default="",
+                    help="workload-corpus spec, e.g. 'benchmark;synthetic:"
+                         "family=mixed:count=9:size=30:seed=0' — curriculum-"
+                         "train ONE policy over the whole corpus")
+    ap.add_argument("--warm-start", default="",
+                    help="with --corpus: fine-tune from a saved policy "
+                         "checkpoint instead of training from scratch")
+    ap.add_argument("--max-buckets", type=int, default=4,
+                    help="with --corpus: bound on size buckets (jit "
+                         "recompiles stay O(#buckets))")
+    ap.add_argument("--graphs-per-episode", type=int, default=4,
+                    help="with --corpus: graphs subsampled per episode")
+    ap.add_argument("--sampler", default="stratified",
+                    choices=("uniform", "stratified", "plateau"),
+                    help="with --corpus: curriculum sampling strategy")
     ap.add_argument("--checkpoint", default="",
-                    help="with --multi-graph: directory to save the shared "
-                         "policy checkpoint")
+                    help="with --multi-graph/--corpus: directory to save "
+                         "the shared policy (and corpus run state)")
     args = ap.parse_args()
 
+    if args.corpus:
+        run_corpus(args, paper_platform())
+        return
+    if args.warm_start:
+        ap.error("--warm-start requires --corpus")
     if args.multi_graph:
         run_multi_graph(args, paper_platform())
         return

@@ -1,5 +1,5 @@
-from .manager import (CheckpointManager, policy_manifest, restore_policy,
-                      save_policy)
+from .manager import (CheckpointManager, policy_feature_config,
+                      policy_manifest, restore_policy, save_policy)
 
 __all__ = ["CheckpointManager", "save_policy", "restore_policy",
-           "policy_manifest"]
+           "policy_manifest", "policy_feature_config"]

@@ -34,7 +34,25 @@ import jax.numpy as jnp
 import numpy as np
 
 __all__ = ["CheckpointManager", "save_policy", "restore_policy",
-           "policy_manifest"]
+           "policy_manifest", "policy_feature_config"]
+
+
+def _jsonable(obj):
+    """Manifest sanitizer: numpy scalars/arrays → plain Python.
+
+    Corpus-run manifests carry sampler RNG state, per-graph bests and
+    bucket partitions assembled from numpy — ``json.dump`` would otherwise
+    crash on the first ``np.int64`` deep inside.
+    """
+    if isinstance(obj, dict):
+        return {str(k): _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return _jsonable(obj.tolist())
+    if isinstance(obj, np.generic):
+        return obj.item()
+    return obj
 
 
 def _keystr_simple(p) -> str:
@@ -115,7 +133,8 @@ class CheckpointManager:
         os.makedirs(tmp, exist_ok=True)
         np.savez(os.path.join(tmp, "state.npz"), **flat)
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump({"step": step, "time": time.time(), **meta}, f)
+            json.dump(_jsonable({"step": step, "time": time.time(), **meta}),
+                      f)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)
@@ -248,8 +267,19 @@ def policy_manifest(directory: str, step: Optional[int] = None) -> Dict:
         mgr.close()
 
 
+def policy_feature_config(directory: str, step: Optional[int] = None):
+    """The feature layout a ``save_policy`` checkpoint was trained with
+    (``None`` when the save recorded none) — readable *without* a parameter
+    tree, so warm-start paths can featurize and validate new graphs before
+    deciding to restore.
+    """
+    return _feature_config_from_meta(
+        policy_manifest(directory, step).get("feature_config"))
+
+
 def restore_policy(directory: str, params_like: Any,
-                   step: Optional[int] = None):
+                   step: Optional[int] = None, *,
+                   graphs: Optional[Any] = None):
     """→ (params, feature_config, step, manifest) from a ``save_policy``
     checkpoint.
 
@@ -258,6 +288,13 @@ def restore_policy(directory: str, params_like: Any,
     the full manifest dict (training config, reward engine, ...), already
     loaded — callers should read it from here rather than re-opening the
     directory via :func:`policy_manifest`.
+
+    ``graphs`` — the graphs the restored policy is about to run on.  When
+    given, the saved feature vocabularies are validated against them
+    (:func:`repro.core.features.check_feature_compat`): an op type missing
+    from the saved ``op_vocab`` raises — naming the mismatched types —
+    instead of silently encoding all-zero / mis-aligned one-hot columns
+    that would corrupt fine-tuning.
     """
     mgr = CheckpointManager(directory)
     try:
@@ -265,9 +302,17 @@ def restore_policy(directory: str, params_like: Any,
             step = mgr.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {directory!r}")
-        params = mgr.restore(step, params_like)
         manifest = mgr.manifest(step)
+        feature_config = _feature_config_from_meta(
+            manifest.get("feature_config"))
+        if graphs is not None:
+            from ..core.features import check_feature_compat
+            if feature_config is None:
+                raise ValueError(
+                    f"checkpoint {directory!r} records no feature_config; "
+                    f"cannot validate it against the given graphs")
+            check_feature_compat(feature_config, graphs)
+        params = mgr.restore(step, params_like)
     finally:
         mgr.close()
-    return params, _feature_config_from_meta(
-        manifest.get("feature_config")), step, manifest
+    return params, feature_config, step, manifest

@@ -1,32 +1,41 @@
 """HSDAG core — the paper's contribution as a composable JAX module."""
 from .graph import CompGraph, OpNode, topological_order, colocate_chains
 from .features import (FeatureConfig, GraphArrays, GraphArraysBatch,
-                       batch_graph_arrays, extract_features,
+                       batch_graph_arrays, batch_graph_arrays_bucketed,
+                       check_feature_compat, extract_features,
                        fractal_dimension, positional_encoding,
                        shared_feature_config)
 from .costmodel import (DeviceSpec, Platform, SimResult, simulate,
                         SimArrays, sim_arrays, simulate_jax, simulate_batch,
                         BatchSimResult, SimArraysBatch, pad_sim_arrays,
                         sim_arrays_batch, simulate_multi,
+                        plan_buckets, sim_arrays_bucketed,
                         paper_platform, tpu_stage_platform,
                         critical_path)
-from .sim import (RewardPipeline, RolloutEngine, SimulatorBackend,
+from .sim import (DynamicRolloutEngine, GraphOperands, RewardPipeline,
+                  RolloutEngine, SimulatorBackend,
                   backend_names, get_backend, register_backend)
 from .hsdag import (HSDAG, HSDAGConfig, SearchResult,
                     MultiGraphTrainer, MultiSearchResult)
+from .train.curriculum import CorpusTrainResult, CurriculumTrainer
+from .train.sampler import CurriculumSampler
 
 __all__ = [
     "SimulatorBackend", "register_backend", "get_backend", "backend_names",
-    "RewardPipeline", "RolloutEngine",
+    "RewardPipeline", "RolloutEngine", "DynamicRolloutEngine",
+    "GraphOperands",
     "CompGraph", "OpNode", "topological_order", "colocate_chains",
     "FeatureConfig", "GraphArrays", "GraphArraysBatch",
-    "batch_graph_arrays", "extract_features",
+    "batch_graph_arrays", "batch_graph_arrays_bucketed",
+    "check_feature_compat", "extract_features",
     "fractal_dimension", "positional_encoding", "shared_feature_config",
     "DeviceSpec", "Platform", "SimResult", "simulate",
     "SimArrays", "sim_arrays", "simulate_jax", "simulate_batch",
     "BatchSimResult", "SimArraysBatch", "pad_sim_arrays",
     "sim_arrays_batch", "simulate_multi",
+    "plan_buckets", "sim_arrays_bucketed",
     "paper_platform", "tpu_stage_platform", "critical_path",
     "HSDAG", "HSDAGConfig", "SearchResult",
     "MultiGraphTrainer", "MultiSearchResult",
+    "CurriculumTrainer", "CorpusTrainResult", "CurriculumSampler",
 ]

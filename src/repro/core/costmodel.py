@@ -30,6 +30,7 @@ __all__ = [
     "SimArrays", "sim_arrays", "simulate_jax", "simulate_batch",
     "BatchSimResult",
     "SimArraysBatch", "pad_sim_arrays", "sim_arrays_batch", "simulate_multi",
+    "plan_buckets", "sim_arrays_bucketed",
 ]
 
 
@@ -639,8 +640,15 @@ def pad_sim_arrays(sa: SimArrays, v_max: int,
 
 def sim_arrays_batch(graphs: Sequence[CompGraph], platform: Platform, *,
                      v_max: Optional[int] = None,
+                     p_max: Optional[int] = None,
                      schedule: str = "topo") -> SimArraysBatch:
-    """Stack ``graphs`` into one padded (G, V_max) batch for ``platform``."""
+    """Stack ``graphs`` into one padded (G, V_max) batch for ``platform``.
+
+    ``v_max``/``p_max`` pin the node/predecessor axes beyond the batch
+    maximum — the bucketed trainer fixes them per size bucket so every
+    episode's batch traces to the same jit shapes regardless of which
+    graphs were sampled.
+    """
     if not graphs:
         raise ValueError("sim_arrays_batch needs at least one graph")
     if any(g.num_nodes == 0 for g in graphs):
@@ -652,6 +660,10 @@ def sim_arrays_batch(graphs: Sequence[CompGraph], platform: Platform, *,
             raise ValueError(f"v_max={v_max} < largest graph ({vm} nodes)")
         vm = v_max
     pm = max(sa.preds.shape[1] for sa in sas)
+    if p_max is not None:
+        if p_max < pm:
+            raise ValueError(f"p_max={p_max} < largest in-degree ({pm})")
+        pm = p_max
     padded = [pad_sim_arrays(sa, vm, pm) for sa in sas]
     stacked = SimArrays(*[np.stack([getattr(sa, f) for sa in padded])
                           for f in SimArrays._fields])
@@ -707,6 +719,76 @@ def simulate_multi(batch: SimArraysBatch, placements) -> BatchSimResult:
     if squeeze:
         fields = [a[:, 0] for a in fields]
     return BatchSimResult(*fields)
+
+
+# --------------------------------------------------------------------------
+# Size-bucketed batching: bound pad waste AND jit recompiles for corpora.
+#
+# One global (G, V_max) pad is fine for three similar graphs; over a corpus
+# whose sizes span 14..1009 nodes it wastes ~V_max work per small graph and
+# couples every graph's shape to the largest.  Bucketing partitions the
+# corpus into ≤ max_buckets size-contiguous groups, each padded only to its
+# own maximum — jit recompiles stay O(#buckets) (shapes are per-bucket) and
+# the padding contract keeps every bucket's makespans bitwise equal to the
+# globally-padded ones (pad slots are inert data ops).
+# --------------------------------------------------------------------------
+
+
+def plan_buckets(sizes: Sequence[int], max_buckets: int) -> List[List[int]]:
+    """Partition graph indices into ≤ ``max_buckets`` size-contiguous buckets
+    minimizing total pad waste (Σ bucket_max − size; exact DP over the sorted
+    sizes).  Deterministic: ties keep input order; buckets are returned
+    smallest-sizes first.
+    """
+    if max_buckets < 1:
+        raise ValueError(f"max_buckets must be >= 1, got {max_buckets}")
+    n = len(sizes)
+    if n == 0:
+        return []
+    order = sorted(range(n), key=lambda i: (sizes[i], i))
+    s = [int(sizes[i]) for i in order]
+    k = min(max_buckets, n)
+    # cost[i][j]: waste of one bucket spanning sorted slots i..j (pad to s[j])
+    prefix = np.concatenate([[0], np.cumsum(s)])
+    def cost(i, j):
+        return s[j] * (j - i + 1) - (prefix[j + 1] - prefix[i])
+    INF = float("inf")
+    dp = [[INF] * (k + 1) for _ in range(n + 1)]   # dp[j][b]: first j slots
+    cut = [[0] * (k + 1) for _ in range(n + 1)]
+    dp[0][0] = 0.0
+    for j in range(1, n + 1):
+        for b in range(1, k + 1):
+            for i in range(b - 1, j):
+                c = dp[i][b - 1] + cost(i, j - 1)
+                if c < dp[j][b]:
+                    dp[j][b] = c
+                    cut[j][b] = i
+    best_b = min(range(1, k + 1), key=lambda b: (dp[n][b], b))
+    bounds = []
+    j, b = n, best_b
+    while b > 0:
+        i = cut[j][b]
+        bounds.append((i, j))
+        j, b = i, b - 1
+    return [[order[t] for t in range(i, j)] for i, j in reversed(bounds)]
+
+
+def sim_arrays_bucketed(graphs: Sequence[CompGraph], platform: Platform, *,
+                        max_buckets: int, schedule: str = "topo",
+                        buckets: Optional[List[List[int]]] = None
+                        ) -> Tuple[List[List[int]], List[SimArraysBatch]]:
+    """→ (buckets, batches): the corpus split into ≤ ``max_buckets`` padded
+    batches (one :class:`SimArraysBatch` per bucket, padded to the *bucket*
+    maximum, not the corpus maximum).  ``buckets`` overrides the
+    :func:`plan_buckets` partition (any index partition is valid — the
+    regression suite exercises arbitrary splits).
+    """
+    if buckets is None:
+        buckets = plan_buckets([g.num_nodes for g in graphs], max_buckets)
+    batches = [sim_arrays_batch([graphs[i] for i in idx], platform,
+                                schedule=schedule)
+               for idx in buckets]
+    return buckets, batches
 
 
 def critical_path(g: CompGraph, platform: Platform) -> float:

@@ -31,6 +31,8 @@ __all__ = [
     "GraphArraysBatch",
     "shared_feature_config",
     "batch_graph_arrays",
+    "batch_graph_arrays_bucketed",
+    "check_feature_compat",
 ]
 
 
@@ -206,8 +208,14 @@ def shared_feature_config(graphs: Sequence[CompGraph],
 
 
 def batch_graph_arrays(arrays: Sequence[GraphArrays], *,
-                       v_max: Optional[int] = None) -> GraphArraysBatch:
-    """Pad and stack per-graph arrays for the vmapped multi-graph policy."""
+                       v_max: Optional[int] = None,
+                       e_max: Optional[int] = None) -> GraphArraysBatch:
+    """Pad and stack per-graph arrays for the vmapped multi-graph policy.
+
+    ``v_max``/``e_max`` pin the node/edge axes beyond the batch maximum —
+    the bucketed trainer fixes them per size bucket so every episode's
+    subsample traces to the same jit shapes.
+    """
     if not arrays:
         raise ValueError("batch_graph_arrays needs at least one graph")
     widths = {a.x.shape[1] for a in arrays}
@@ -221,6 +229,10 @@ def batch_graph_arrays(arrays: Sequence[GraphArrays], *,
             raise ValueError(f"v_max={v_max} < largest graph ({vm} nodes)")
         vm = v_max
     em = max(1, max(a.edges.shape[0] for a in arrays))
+    if e_max is not None:
+        if e_max < em:
+            raise ValueError(f"e_max={e_max} < largest edge count ({em})")
+        em = max(1, e_max)
     G, d = len(arrays), arrays[0].x.shape[1]
     x = np.zeros((G, vm, d), np.float32)
     adj = np.zeros((G, vm, vm), np.float32)
@@ -238,6 +250,56 @@ def batch_graph_arrays(arrays: Sequence[GraphArrays], *,
         x=x, adj=adj, edges=edges, node_mask=node_mask, edge_mask=edge_mask,
         num_nodes=np.asarray([a.num_nodes for a in arrays], np.int32),
         num_edges=np.asarray([a.edges.shape[0] for a in arrays], np.int32))
+
+
+def batch_graph_arrays_bucketed(arrays: Sequence[GraphArrays], *,
+                                max_buckets: int,
+                                buckets: Optional[Sequence[Sequence[int]]]
+                                = None):
+    """→ (buckets, batches): encoder-side twin of
+    :func:`repro.core.costmodel.sim_arrays_bucketed` — the per-graph arrays
+    split into ≤ ``max_buckets`` size-contiguous batches, each padded only
+    to its own bucket maximum.
+    """
+    from .costmodel import plan_buckets
+    if buckets is None:
+        buckets = plan_buckets([a.num_nodes for a in arrays], max_buckets)
+    batches = [batch_graph_arrays([arrays[i] for i in idx])
+               for idx in buckets]
+    return [list(idx) for idx in buckets], batches
+
+
+def check_feature_compat(cfg: FeatureConfig,
+                         graphs: Sequence[CompGraph]) -> None:
+    """Validate that ``cfg``'s saved vocabularies cover ``graphs``.
+
+    A warm-started policy is only meaningful if the new graphs' one-hot
+    columns line up with the layout it was trained on; an op type absent
+    from the saved ``op_vocab`` would be encoded all-zero (and a locally
+    re-derived vocab would silently permute columns), corrupting
+    fine-tuning.  Raises ``ValueError`` naming every mismatched op type.
+    """
+    if cfg.op_vocab is None:
+        raise ValueError(
+            "feature config has no op_vocab — it was not saved from a "
+            "(shared-vocabulary) training run and cannot be validated "
+            "against new graphs")
+    known = set(cfg.op_vocab)
+    missing: Dict[str, List[str]] = {}
+    for g in graphs:
+        unknown = sorted(set(g.op_types()) - known)
+        if unknown:
+            missing[g.name] = unknown
+    if missing:
+        detail = "; ".join(f"{name}: {ops}" for name, ops in
+                           sorted(missing.items()))
+        raise ValueError(
+            f"checkpoint feature vocabulary does not cover the new graphs — "
+            f"op types absent from the saved op_vocab would get all-zero "
+            f"one-hot columns and silently corrupt fine-tuning. Unknown op "
+            f"types by graph: {detail}. Re-train with a corpus spanning "
+            f"these op types, or extract features with a fresh "
+            f"shared_feature_config() and train from scratch.")
 
 
 def extract_features(g: CompGraph,

@@ -28,6 +28,10 @@ pooling gates.  All rollout machinery lives in ``core/sim/rollout.py`` —
 ONE parameterized (G, B)-chain engine drives ``search``, the batched search
 and ``train_multi``; ``engine="scalar"`` keeps the original
 one-placement-at-a-time reference loop (used by the B=1 equivalence tests).
+The episode loop itself (rollout → score → track → update) lives in
+``core/train/loop.py``, shared with the corpus
+:class:`~repro.core.train.CurriculumTrainer`; ``train_multi`` is a thin
+wrapper over it.
 """
 from __future__ import annotations
 
@@ -50,6 +54,7 @@ from .graph import CompGraph
 from .policy import PolicyOutput, policy_apply, policy_init
 from .reinforce import RolloutBuffer, RunningBaseline, step_weights
 from .sim import RewardPipeline, RolloutEngine, backend_names, get_backend
+from .train.loop import BestTracker, EpisodeRunner, WindowStream
 
 __all__ = ["HSDAGConfig", "HSDAG", "SearchResult",
            "MultiGraphTrainer", "MultiSearchResult"]
@@ -182,6 +187,12 @@ class HSDAG:
         self.params = params
         self._opt_state = self._opt.init(params)
         return params
+
+    def apply_grads(self, grads: Dict) -> None:
+        """One optimizer step on the shared tree (the Eq.-14 update)."""
+        updates, self._opt_state = self._opt.update(
+            grads, self._opt_state, self.params)
+        self.params = apply_updates(self.params, updates)
 
     # ------------------------------------------------------------- one round
     def _step(self, params: Dict, z: jnp.ndarray, x0: jnp.ndarray,
@@ -352,9 +363,7 @@ class HSDAG:
                 grads = engine.window_grads_scalar(
                     self.params, z0_window, rngs, jnp.asarray(weights),
                     num_steps=len(buffer), start_first=first_of_window)
-                updates, self._opt_state = self._opt.update(
-                    grads, self._opt_state, self.params)
-                self.params = apply_updates(self.params, updates)
+                self.apply_grads(grads)
             buffer.clear()
             # next window starts from the current state
             z0_window = z
@@ -446,9 +455,7 @@ class HSDAG:
                 grads = engine.window_grads(
                     self.params, z0_window, keys, weights_tgb,
                     num_steps=tsteps, start_first=first_of_window)
-                updates, self._opt_state = self._opt.update(
-                    grads, self._opt_state, self.params)
-                self.params = apply_updates(self.params, updates)
+                self.apply_grads(grads)
             z0_window = z
             first_of_window = False
             history.append({
@@ -551,86 +558,22 @@ class HSDAG:
                     if cfg.use_baseline and reward_norm != "pergraph"
                     else None)
 
+        # The episode loop itself lives in ``core/train/loop.py`` now — ONE
+        # runner shared with the corpus trainer.  The stream's PRNG layout
+        # (graph 0 / chain 0 = the single-graph batched stream) keeps G=1
+        # with reward_norm="none" bit-for-bit the single-graph engine.
         num_nodes = [int(n) for n in gb.num_nodes]
-        best_latencies = np.full(G, np.inf)
-        best_placements = [np.zeros(n, dtype=np.int64) for n in num_nodes]
-        chain_best = np.full((G, nchains), np.inf)
+        tracker = BestTracker(num_nodes, nchains)
+        runner = EpisodeRunner(self, engine, pipeline=pipeline,
+                               tracker=tracker, reward_norm=reward_norm,
+                               baseline=baseline)
+        stream = WindowStream.fresh(rng, gb.x, nchains)
         history: List[dict] = []
-
-        # Graph 0 / chain 0 carries the exact single-graph batched PRNG
-        # stream (and graph 0's chain row is exactly ``_search_batched``'s),
-        # so G=1 with reward_norm="none" reproduces that engine bit for bit.
-        def _graph_base(g: int):
-            return rng if g == 0 else jax.random.fold_in(rng, nchains + g)
-
-        chain_rngs = jnp.stack([
-            jnp.stack([_graph_base(g)] +
-                      [jax.random.fold_in(_graph_base(g), b)
-                       for b in range(1, nchains)])
-            for g in range(G)])                       # (G, B, 2)
-        x0 = jnp.asarray(gb.x)
-        z = jnp.broadcast_to(x0[:, None], (G, nchains) + x0.shape[1:])
-        z0_window = z
-        first_of_window = True
         tsteps = cfg.update_timestep
 
         for episode in range(cfg.max_episodes):
-            t_ep = time.perf_counter()
-            (z, chain_rngs, keys, fines, ngroups, rewards,
-             latencies) = engine.rollout_window(
-                self.params, z0_window, chain_rngs,
-                num_steps=tsteps, start_first=first_of_window)
-            fines_np = np.asarray(fines)                        # (T, G, B, V)
-            if pipeline.fused:
-                rewards = np.asarray(rewards, dtype=np.float64)  # (T, G, B)
-                latencies = np.asarray(latencies, dtype=np.float64)
-            else:
-                rewards, latencies = pipeline.score_window(fines_np)
-
-            # Bookkeeping in (t, g, b) order — reduces to the single-graph
-            # engine's (t, b) order at G=1 (EMA baseline order and strict-<
-            # best tie-breaks matter for reproducibility).
-            for t in range(tsteps):
-                for g in range(G):
-                    for b in range(nchains):
-                        if baseline is not None:
-                            baseline.update(rewards[t, g, b])
-                        if latencies[t, g, b] < best_latencies[g]:
-                            best_latencies[g] = float(latencies[t, g, b])
-                            best_placements[g] = (
-                                fines_np[t, g, b, :num_nodes[g]]
-                                .astype(np.int64))
-            chain_best = np.minimum(chain_best, latencies.min(axis=0))
-
-            # ---- shared-policy update over the (G, B, T) window ----
-            r_for_w = rewards
-            if reward_norm == "pergraph":
-                mean_g = rewards.mean(axis=(0, 2), keepdims=True)
-                std_g = rewards.std(axis=(0, 2), keepdims=True)
-                r_for_w = (rewards - mean_g) / (std_g + 1e-8)
-            weights_gbt = step_weights(
-                np.transpose(r_for_w, (1, 2, 0)), cfg.gamma,
-                reward_to_go=cfg.reward_to_go,
-                baseline=(baseline.value if baseline is not None else None),
-                normalize=cfg.normalize_weights)
-            weights_tgb = jnp.asarray(np.transpose(weights_gbt, (2, 0, 1)))
-            for _ in range(max(1, cfg.k_epochs)):
-                grads = engine.window_grads(
-                    self.params, z0_window, keys, weights_tgb,
-                    num_steps=tsteps, start_first=first_of_window)
-                updates, self._opt_state = self._opt.update(
-                    grads, self._opt_state, self.params)
-                self.params = apply_updates(self.params, updates)
-            z0_window = z
-            first_of_window = False
-            history.append({
-                "episode": episode,
-                "mean_reward": float(np.mean(rewards)),
-                "best_latency": float(best_latencies.min()),
-                "per_graph_best": [float(l) for l in best_latencies],
-                "mean_groups": float(np.mean(np.asarray(ngroups))),
-                "wall_s": time.perf_counter() - t_ep,
-            })
+            stats = runner.run_episode(stream)
+            history.append({"episode": episode, **stats})
             if verbose:
                 h = history[-1]
                 per_g = "/".join(f"{l*1e3:.2f}" for l in h["per_graph_best"])
@@ -649,9 +592,9 @@ class HSDAG:
         wall = time.perf_counter() - t_start
         n_evals = cfg.max_episodes * tsteps * G * nchains
         return MultiSearchResult(
-            best_placements, best_latencies, greedy_placements,
-            greedy_latencies, history, self.params, wall, n_evals,
-            n_evals / max(wall, 1e-9), chain_best)
+            tracker.best_placements, tracker.best_latencies,
+            greedy_placements, greedy_latencies, history, self.params, wall,
+            n_evals, n_evals / max(wall, 1e-9), tracker.chain_best)
 
     # ------------------------------------------------------------- inference
     def place(self, arrays: GraphArrays, rng=None,

@@ -57,13 +57,15 @@ from .base import (SimulatorBackend, backend_names, get_backend,
 from .level import LevelBackend, LevelSim
 from .pipeline import RewardPipeline
 from .reference import RefSim, ReferenceBackend
-from .rollout import RolloutEngine, split_multi_keys
+from .rollout import (DynamicRolloutEngine, GraphOperands, RolloutEngine,
+                      split_multi_keys)
 from .scan import ScanBackend, ScanSim
 
 __all__ = [
     "SimulatorBackend", "register_backend", "get_backend", "backend_names",
     "ReferenceBackend", "RefSim", "ScanBackend", "ScanSim",
     "LevelBackend", "LevelSim",
-    "RewardPipeline", "RolloutEngine", "split_multi_keys",
+    "RewardPipeline", "RolloutEngine", "DynamicRolloutEngine",
+    "GraphOperands", "split_multi_keys",
     "stack_batch_results", "single_from_batch",
 ]

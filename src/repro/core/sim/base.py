@@ -64,8 +64,15 @@ class SimulatorBackend:
         raise NotImplementedError
 
     def prepare_batch(self, graphs: Sequence, platform, *,
-                      v_max: Optional[int] = None) -> Any:
-        """Handle for a padded multi-graph batch (pad slots must be inert)."""
+                      v_max: Optional[int] = None,
+                      p_max: Optional[int] = None) -> Any:
+        """Handle for a padded multi-graph batch (pad slots must be inert).
+
+        ``v_max``/``p_max`` pin the node/predecessor axes beyond the batch
+        maximum so different graph subsets share one jit shape (the
+        bucketed corpus trainer's recompile bound); backends whose scoring
+        never traces on the predecessor axis may ignore ``p_max``.
+        """
         raise NotImplementedError
 
     # --------------------------------------------------------------- scoring

@@ -113,13 +113,16 @@ class LevelBackend(SimulatorBackend):
         return prep
 
     def prepare_batch(self, graphs: Sequence, platform, *,
-                      v_max: Optional[int] = None) -> List[LevelSim]:
+                      v_max: Optional[int] = None,
+                      p_max: Optional[int] = None) -> List[LevelSim]:
         """Per-graph handles padded to a common (V_max, P_max) shape.
 
         The kernel batches internally per graph, so a multi-graph batch is a
         list of padded handles rather than one stacked pytree; pad slots are
         data ops and drop out of the level tables entirely, keeping the
         padded makespan bitwise the unpadded one (incl. V_max ≫ V).
+        ``p_max`` pins the predecessor axis (the kernel traces on it, so a
+        corpus trainer must fix it per bucket or every subset retraces).
         """
         if not graphs:
             raise ValueError("prepare_batch needs at least one graph")
@@ -130,6 +133,10 @@ class LevelBackend(SimulatorBackend):
                 raise ValueError(f"v_max={v_max} < largest graph ({vm})")
             vm = v_max
         pm = max(sa.preds.shape[1] for sa in sas)
+        if p_max is not None:
+            if p_max < pm:
+                raise ValueError(f"p_max={p_max} < largest in-degree ({pm})")
+            pm = p_max
         out = []
         for g, sa in zip(graphs, sas):
             sap = pad_sim_arrays(sa, vm, pm)

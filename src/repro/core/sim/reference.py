@@ -40,7 +40,9 @@ class ReferenceBackend(SimulatorBackend):
         return RefSim(graph, platform, np.asarray(order, np.int64))
 
     def prepare_batch(self, graphs: Sequence, platform, *,
-                      v_max: Optional[int] = None):
+                      v_max: Optional[int] = None,
+                      p_max: Optional[int] = None):
+        # p_max is a jit-shape pin; host scoring never traces, so ignore it.
         preps = [self.prepare(g, platform) for g in graphs]
         if v_max is not None and graphs:
             need = max(g.num_nodes for g in graphs)

@@ -23,14 +23,15 @@ G=1 on an unpadded batch is the unmasked computation.
 """
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from .pipeline import RewardPipeline
 
-__all__ = ["RolloutEngine", "split_multi_keys"]
+__all__ = ["RolloutEngine", "DynamicRolloutEngine", "GraphOperands",
+           "split_multi_keys"]
 
 
 def split_multi_keys(rngs: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -265,3 +266,190 @@ class RolloutEngine:
                             num_steps: int, start_first: bool):
         return self._scalar[1](params, z0, rngs, weights,
                                num_steps=num_steps, start_first=start_first)
+
+
+class GraphOperands(NamedTuple):
+    """The per-episode graph batch a :class:`DynamicRolloutEngine` consumes.
+
+    Every field is an array with a leading (G,) axis (``sim`` is a pytree of
+    such arrays, or ``None`` for non-fused backends).  The engine's jitted
+    functions take the whole tuple as a *traced operand*, so jax's jit cache
+    keys on its shapes: a corpus bucketed into K shape classes compiles each
+    function at most K times no matter how many graph subsets stream
+    through.
+    """
+
+    x0: jnp.ndarray          # (G, V, d)
+    adj: jnp.ndarray         # (G, V, V)
+    edges: jnp.ndarray       # (G, E, 2)
+    node_mask: jnp.ndarray   # (G, V) bool
+    edge_mask: jnp.ndarray   # (G, E) bool
+    sim: object = None       # SimArrays pytree with (G, ...) axes, or None
+
+    def shape_key(self) -> Tuple:
+        """Shape/dtype signature — what the jit cache keys on."""
+        return tuple((tuple(a.shape), str(a.dtype))
+                     for a in jax.tree.leaves(self))
+
+
+class DynamicRolloutEngine:
+    """The (G, B) window engine with graph data as jit *operands*.
+
+    :class:`RolloutEngine` closes over one fixed graph batch — right for
+    ``train_multi``, where the same G graphs ride every episode, but a
+    corpus trainer resamples its subset per episode, and closure constants
+    would mean one recompile per subset.  This engine takes a
+    :class:`GraphOperands` argument per call instead: compilations are
+    cached by *shape*, so recompiles are bounded by the number of size
+    buckets, not the number of subsets (``shape_keys_seen`` records the
+    distinct shapes for the CI bound check).
+
+    Masks always ride along (corpus batches are padded by construction;
+    the masked computation on an unpadded batch equals the unmasked one),
+    and the fused reward hook scores against the operand ``sim`` tree.
+    """
+
+    def __init__(self, step_fn, cfg, *, backend=None):
+        self._step = step_fn
+        self._cfg = cfg
+        self._backend = backend
+        self._fused = backend is not None and backend.jit_fused
+        self._fns = None
+        self.shape_keys_seen = set()
+
+    # ------------------------------------------------------------- builders
+    def _build(self):
+        cfg = self._cfg
+        step = self._step
+        fused, backend = self._fused, self._backend
+
+        def _chain_sample(params, xg, ag, eg, nmg, emg, simg, z, key,
+                          first: bool):
+            out = step(params, z, xg, ag, eg, key, first=first, train=True,
+                       node_mask=nmg, edge_mask=emg)
+            fine = out.policy.fine_placement
+            if simg is not None:
+                reward, latency = backend.score(simg, fine)
+            else:
+                reward = latency = jnp.float32(0.0)
+            return (fine, out.parse.num_groups, out.z_next, reward, latency)
+
+        def _vsample(ops, params, z, keys, first: bool):
+            def per_graph(xg, ag, eg, nmg, emg, simg, z_b, k_b):
+                return jax.vmap(lambda z1, k1: _chain_sample(
+                    params, xg, ag, eg, nmg, emg, simg, z1, k1, first)
+                )(z_b, k_b)
+
+            if fused:
+                return jax.vmap(per_graph)(ops.x0, ops.adj, ops.edges,
+                                           ops.node_mask, ops.edge_mask,
+                                           ops.sim, z, keys)
+            return jax.vmap(
+                lambda xg, ag, eg, nmg, emg, z_b, k_b: per_graph(
+                    xg, ag, eg, nmg, emg, None, z_b, k_b)
+            )(ops.x0, ops.adj, ops.edges, ops.node_mask, ops.edge_mask,
+              z, keys)
+
+        def _rollout_window(ops, params, z, rngs, num_steps: int,
+                            start_first: bool):
+            def body(carry, _):
+                z_c, rngs_c = carry
+                rngs_c, keys = split_multi_keys(rngs_c)
+                fine, ngroups, z_next, rew, lat = _vsample(
+                    ops, params, z_c, keys, first=False)
+                return (z_next, rngs_c), (keys, fine, ngroups, rew, lat)
+
+            if start_first:
+                rngs, keys0 = split_multi_keys(rngs)
+                fine0, ng0, z, rew0, lat0 = _vsample(ops, params, z, keys0,
+                                                     first=True)
+                (z, rngs), tail = jax.lax.scan(body, (z, rngs), None,
+                                               length=num_steps - 1)
+                head = (keys0, fine0, ng0, rew0, lat0)
+                outs = tuple(jnp.concatenate([h[None], t], axis=0)
+                             for h, t in zip(head, tail))
+            else:
+                (z, rngs), outs = jax.lax.scan(body, (z, rngs), None,
+                                               length=num_steps)
+            return (z, rngs) + outs
+
+        def _window_loss(ops, params, z0, keys, weights, num_steps: int,
+                         start_first: bool):
+            def _chain_loss(params_, xg, ag, eg, nmg, emg, z1, k1, w1,
+                            first: bool):
+                out = step(params_, z1, xg, ag, eg, k1, first=first,
+                           train=True, node_mask=nmg, edge_mask=emg)
+                loss = -out.policy.logp * w1
+                loss = loss - cfg.entropy_coef * out.policy.entropy
+                return out.z_next, loss
+
+            def _vloss(z_c, k_t, w_t, first: bool):
+                def per_graph(xg, ag, eg, nmg, emg, z_b, k_b, w_b):
+                    return jax.vmap(
+                        lambda z1, k1, w1: _chain_loss(
+                            params, xg, ag, eg, nmg, emg, z1, k1, w1, first)
+                    )(z_b, k_b, w_b)
+
+                return jax.vmap(per_graph)(ops.x0, ops.adj, ops.edges,
+                                           ops.node_mask, ops.edge_mask,
+                                           z_c, k_t, w_t)
+
+            total = jnp.float32(0.0)
+            z = z0
+            if start_first:
+                z, l0 = _vloss(z, keys[0], weights[0], first=True)
+                total = total + jnp.sum(l0)
+                keys, weights = keys[1:], weights[1:]
+
+            def body(carry, xs):
+                z_c, tot = carry
+                k_t, w_t = xs
+                z_c, l_t = _vloss(z_c, k_t, w_t, first=False)
+                return (z_c, tot + jnp.sum(l_t)), None
+
+            (z, total), _ = jax.lax.scan(body, (z, total), (keys, weights))
+            nchains = z0.shape[0] * z0.shape[1]
+            return total / nchains
+
+        def _greedy(ops, params, keys):
+            """One greedy decode per graph slot → (G, V) placements."""
+            def per_graph(xg, ag, eg, nmg, emg, k):
+                out = step(params, xg, xg, ag, eg, k,
+                           first=True, train=False, greedy=True,
+                           node_mask=nmg, edge_mask=emg)
+                return out.policy.fine_placement, out.parse.num_groups
+
+            return jax.vmap(per_graph)(ops.x0, ops.adj, ops.edges,
+                                       ops.node_mask, ops.edge_mask, keys)
+
+        return (jax.jit(_rollout_window,
+                        static_argnames=("num_steps", "start_first")),
+                jax.jit(jax.grad(_window_loss, argnums=1),
+                        static_argnames=("num_steps", "start_first")),
+                jax.jit(_greedy))
+
+    @property
+    def _built(self):
+        if self._fns is None:
+            self._fns = self._build()
+        return self._fns
+
+    def _note(self, ops: GraphOperands) -> None:
+        self.shape_keys_seen.add(ops.shape_key())
+
+    # ----------------------------------------------------------- public API
+    def rollout_window(self, ops: GraphOperands, params, z, rngs, *,
+                       num_steps: int, start_first: bool):
+        self._note(ops)
+        return self._built[0](ops, params, z, rngs, num_steps=num_steps,
+                              start_first=start_first)
+
+    def window_grads(self, ops: GraphOperands, params, z0, keys, weights, *,
+                     num_steps: int, start_first: bool):
+        self._note(ops)
+        return self._built[1](ops, params, z0, keys, weights,
+                              num_steps=num_steps, start_first=start_first)
+
+    def greedy_decode(self, ops: GraphOperands, params, keys):
+        self._note(ops)
+        return self._built[2](ops, params, keys)

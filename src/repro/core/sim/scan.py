@@ -38,8 +38,9 @@ class ScanBackend(SimulatorBackend):
                        sim_arrays(graph, platform, schedule=schedule))
 
     def prepare_batch(self, graphs: Sequence, platform, *,
-                      v_max: Optional[int] = None) -> SimArraysBatch:
-        return sim_arrays_batch(graphs, platform, v_max=v_max)
+                      v_max: Optional[int] = None,
+                      p_max: Optional[int] = None) -> SimArraysBatch:
+        return sim_arrays_batch(graphs, platform, v_max=v_max, p_max=p_max)
 
     # ------------------------------------------------------------ jit hooks
     @staticmethod

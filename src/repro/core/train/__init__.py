@@ -1,0 +1,33 @@
+"""Training layer — the episode loop, curriculum sampling and corpus trainer.
+
+``hsdag.py`` owns the *model* (encode → parse → place) and the search
+drivers; the training loop that PR 2 grew inside ``train_multi`` lives here
+now, as reusable parts:
+
+* :mod:`.loop` — :class:`EpisodeRunner` / :class:`WindowStream` /
+  :class:`BestTracker`: one REINFORCE window episode (rollout → score →
+  bookkeeping → Eq.-14 update), shared verbatim by ``train_multi`` (static
+  graph batch, bit-for-bit the PR-2/PR-3 engine) and the corpus trainer
+  (per-episode resampled batches through the dynamic engine).
+* :mod:`.sampler` — :class:`CurriculumSampler`: picks (bucket, graph
+  subset) per episode — uniform / size-stratified / plateau-resample —
+  with JSON-serializable state for deterministic resume.
+* :mod:`.curriculum` — :class:`CurriculumTrainer`: one policy over a
+  workload corpus larger than device memory, size-bucketed so jit
+  recompiles stay O(#buckets), warm-startable from a saved policy.
+"""
+from .loop import BestTracker, EpisodeRunner, WindowStream, make_chain_rngs
+from .sampler import CurriculumSampler
+
+__all__ = ["EpisodeRunner", "WindowStream", "BestTracker",
+           "make_chain_rngs", "CurriculumSampler",
+           "CurriculumTrainer", "CorpusTrainResult"]
+
+
+def __getattr__(name):
+    # curriculum.py imports hsdag (which imports .loop) — resolve lazily so
+    # ``repro.core.hsdag`` can import this package during its own import.
+    if name in ("CurriculumTrainer", "CorpusTrainResult"):
+        from . import curriculum
+        return getattr(curriculum, name)
+    raise AttributeError(name)

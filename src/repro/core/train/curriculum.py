@@ -1,0 +1,375 @@
+"""CurriculumTrainer — ONE policy over a workload corpus of dozens of DAGs.
+
+``train_multi`` rides a single globally-padded (G, V_max) batch inside one
+jit: every graph in every episode, shapes coupled to the largest graph.
+That stops working at corpus scale — dozens of heterogeneous graphs do not
+fit one device batch, and global padding wastes V_max work per small graph.
+This trainer closes the two ROADMAP items that were gated on it:
+
+* **Curriculum/sampling over graph sets larger than device memory** — a
+  :class:`~repro.core.train.sampler.CurriculumSampler` draws
+  ``graphs_per_episode`` graphs per episode from one size bucket
+  (``plan_buckets`` bounds the bucket count), and a
+  :class:`~repro.core.sim.DynamicRolloutEngine` takes the sampled batch as
+  a jit *operand* — so only the sampled subset is ever device-resident and
+  jit recompiles are bounded by #buckets, not by #subsets.
+* **Fine-tune-from-checkpoint** — :meth:`warm_start` restores a saved
+  corpus policy (feature layout validated against the new graphs — see
+  :func:`~repro.core.features.check_feature_compat`) and training continues
+  from it; ``benchmarks/table8_corpus.py`` reports the episode-budget win
+  over from-scratch.
+
+Interrupted runs resume deterministically: checkpoints carry the corpus
+fingerprint (refusing a mismatched graph set), the sampler's full RNG and
+plateau state, the cumulative best tracker, and the optimizer state; every
+episode's PRNG keys derive from ``fold_in(rng, episode)``, so a resumed run
+replays the exact episode stream the uninterrupted run would have produced.
+"""
+from __future__ import annotations
+
+import time
+from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..costmodel import (Platform, plan_buckets, sim_arrays,
+                         sim_arrays_batch, simulate)
+from ..features import (check_feature_compat, batch_graph_arrays,
+                        extract_features, shared_feature_config)
+from ..graph import CompGraph
+from ..hsdag import _LOOP_ENGINES, HSDAGConfig, MultiGraphTrainer
+from ..sim import (DynamicRolloutEngine, GraphOperands, RewardPipeline,
+                   get_backend)
+from ..reinforce import RunningBaseline
+from .loop import BestTracker, EpisodeRunner, WindowStream
+from .sampler import CurriculumSampler
+
+__all__ = ["CurriculumTrainer", "CorpusTrainResult"]
+
+
+class BucketShape(NamedTuple):
+    """The fixed jit shape of one size bucket."""
+
+    v_max: int       # node slots
+    p_max: int       # predecessor slots (sim side)
+    e_max: int       # edge slots (encoder side)
+
+
+def _operands(ga, sim_tree) -> GraphOperands:
+    """One padded GraphArraysBatch (+ optional sim pytree) → jit operands."""
+    return GraphOperands(
+        x0=jnp.asarray(ga.x), adj=jnp.asarray(ga.adj),
+        edges=jnp.asarray(ga.edges),
+        node_mask=jnp.asarray(ga.node_mask),
+        edge_mask=jnp.asarray(ga.edge_mask), sim=sim_tree)
+
+
+class CorpusTrainResult(NamedTuple):
+    """Outcome of one curriculum run over a corpus of N graphs."""
+
+    best_latencies: np.ndarray           # (N,) seconds (inf if never sampled)
+    best_placements: List[np.ndarray]    # per graph: best sampled placement
+    greedy_latencies: np.ndarray         # (N,) greedy decode after training
+    greedy_placements: List[np.ndarray]
+    history: List[dict]                  # per-episode stats (+bucket, graphs)
+    params: Dict
+    wall_time_s: float
+    num_evaluations: int
+    evals_per_sec: float
+    buckets: List[List[int]]             # the size partition used
+    episodes_run: int
+
+
+class CurriculumTrainer(MultiGraphTrainer):
+    """See module docstring.  Example::
+
+        corpus = build_corpus("benchmark;synthetic:family=mixed:count=9")
+        trainer = CurriculumTrainer(HSDAGConfig(batch_chains=8),
+                                    max_buckets=3, graphs_per_episode=4)
+        res = trainer.train_corpus(corpus, platform=paper_platform(),
+                                   checkpoint_dir="ckpt/corpus",
+                                   checkpoint_every=10)
+        trainer.save_policy("ckpt/corpus_policy")     # for warm starts
+
+        ft = CurriculumTrainer(trainer.cfg)
+        ft.warm_start("ckpt/corpus_policy")
+        ft.train_corpus([held_out_graph], platform=paper_platform())
+    """
+
+    def __init__(self, cfg: HSDAGConfig = HSDAGConfig(), *,
+                 reward_norm: str = "pergraph", max_buckets: int = 4,
+                 graphs_per_episode: int = 4,
+                 sampler_strategy: str = "stratified",
+                 plateau_patience: int = 5):
+        super().__init__(cfg, reward_norm=reward_norm)
+        if cfg.engine == "scalar":
+            raise ValueError(
+                "the corpus trainer has no scalar loop; use engine='auto' "
+                "or a simulator backend name")
+        if max_buckets < 1:
+            raise ValueError("max_buckets must be >= 1")
+        self.max_buckets = int(max_buckets)
+        self.graphs_per_episode = int(graphs_per_episode)
+        self.sampler_strategy = sampler_strategy
+        self.plateau_patience = int(plateau_patience)
+        self._warm_start: Optional[Tuple[str, Optional[int]]] = None
+
+    # ------------------------------------------------------------ warm start
+    def warm_start(self, directory: str, step: Optional[int] = None) -> None:
+        """Fine-tune from a ``save_policy`` checkpoint.
+
+        The restore happens inside :meth:`train_corpus`, where the new
+        graphs are known: the saved feature layout is validated against
+        them first (mismatched op vocabularies raise, naming the op types,
+        instead of silently mis-aligning one-hot columns).
+        """
+        from ...checkpoint import policy_feature_config
+        if policy_feature_config(directory, step) is None:
+            raise ValueError(
+                f"checkpoint {directory!r} carries no feature_config — it "
+                f"cannot anchor a warm start (the new graphs could not be "
+                f"featurized in the saved layout)")
+        self._warm_start = (directory, step)
+
+    # -------------------------------------------------------------- training
+    def train_corpus(self, graphs: Sequence[CompGraph], *,
+                     platform: Platform, rng=None,
+                     episodes: Optional[int] = None, verbose: bool = False,
+                     checkpoint_dir: Optional[str] = None,
+                     checkpoint_every: int = 0,
+                     resume: bool = False) -> CorpusTrainResult:
+        """Train the shared policy over ``graphs`` (the corpus).
+
+        ``episodes`` overrides ``cfg.max_episodes``.  With
+        ``checkpoint_dir``, state is saved every ``checkpoint_every``
+        episodes (and at the end); ``resume=True`` continues an interrupted
+        run from the latest checkpoint after validating that the corpus
+        fingerprint matches.
+        """
+        from ...checkpoint import CheckpointManager, restore_policy
+        from ...graphs import corpus_fingerprint
+
+        cfg = self.cfg
+        graphs = list(graphs)
+        if not graphs:
+            raise ValueError("train_corpus needs at least one graph")
+        if cfg.num_devices > platform.num_devices:
+            raise ValueError(
+                f"cfg.num_devices={cfg.num_devices} exceeds the platform's "
+                f"{platform.num_devices} devices")
+        backend = get_backend(cfg.engine if cfg.engine not in _LOOP_ENGINES
+                              else "scan")
+        N = len(graphs)
+        nchains = max(1, cfg.batch_chains)
+        g_sub = min(self.graphs_per_episode, N)
+        max_eps = episodes if episodes is not None else cfg.max_episodes
+        fingerprint = corpus_fingerprint(graphs)
+        t_start = time.perf_counter()
+
+        # ---- feature layout: saved (warm start) or derived (fresh) ----
+        if self._warm_start is not None:
+            from ...checkpoint import policy_feature_config
+            directory, wstep = self._warm_start
+            fc = policy_feature_config(directory, wstep)
+            # vocab compatibility is enforced by restore_policy(graphs=)
+            # below — fail fast here too, before features/params are built
+            check_feature_compat(fc, graphs)
+            self.feature_config = fc
+        elif self.feature_config is not None:
+            fc = self.feature_config
+            check_feature_compat(fc, graphs)
+        else:
+            fc = self.feature_config = shared_feature_config(graphs)
+        arrays = [extract_features(g, fc) for g in graphs]
+
+        rng = rng if rng is not None else jax.random.PRNGKey(cfg.seed)
+        if self.params is None:
+            rng, k_init = jax.random.split(rng)
+            self.init(k_init, arrays[0])
+        if self._warm_start is not None:
+            self.params, _, _, _ = restore_policy(directory, self.params,
+                                                  step=wstep, graphs=graphs)
+            self._opt_state = self._opt.init(self.params)
+            self._warm_start = None
+
+        # ---- size buckets: fixed jit shapes per bucket ----
+        buckets = plan_buckets([g.num_nodes for g in graphs],
+                               self.max_buckets)
+        schedule = "level" if getattr(backend, "name", "") == "level" \
+            else "topo"
+        shapes: List[BucketShape] = []
+        for members in buckets:
+            sas = [sim_arrays(graphs[i], platform, schedule=schedule)
+                   for i in members]
+            shapes.append(BucketShape(
+                v_max=max(sa.num_nodes for sa in sas),
+                p_max=max(sa.preds.shape[1] for sa in sas),
+                e_max=max(1, max(arrays[i].edges.shape[0]
+                                 for i in members))))
+
+        sampler = CurriculumSampler(
+            buckets, graphs_per_episode=g_sub,
+            strategy=self.sampler_strategy, seed=cfg.seed,
+            plateau_patience=self.plateau_patience)
+        # Exposed for introspection: ``engine.shape_keys_seen`` is how the
+        # recompile bound (O(#buckets)) is asserted in CI.
+        engine = self.engine = DynamicRolloutEngine(self._step, cfg,
+                                                    backend=backend)
+        tracker = BestTracker([g.num_nodes for g in graphs], nchains)
+        baseline = (RunningBaseline()
+                    if cfg.use_baseline and self.reward_norm != "pergraph"
+                    else None)
+        runner = EpisodeRunner(self, engine, pipeline=None, tracker=tracker,
+                               reward_norm=self.reward_norm,
+                               baseline=baseline)
+
+        # ---- resume from an interrupted run ----
+        mgr = (CheckpointManager(checkpoint_dir, keep=3)
+               if checkpoint_dir else None)
+        start_ep = 0
+        if resume:
+            if mgr is None:
+                raise ValueError("resume=True requires checkpoint_dir")
+            last = mgr.latest_step()
+            if last is not None:
+                man = mgr.manifest(last)
+                if man.get("corpus_fingerprint") != fingerprint:
+                    raise ValueError(
+                        "checkpoint was written for a different corpus "
+                        "(fingerprint mismatch) — resuming would mis-map "
+                        "sampler state and per-graph bests")
+                state = mgr.restore(last, {"params": self.params,
+                                           "opt": self._opt_state})
+                self.params = state["params"]
+                self._opt_state = state["opt"]
+                sampler.load_state_dict(man["sampler"])
+                tracker.load_state_arrays(
+                    {k: np.asarray(v) for k, v in man["tracker"].items()})
+                if baseline is not None:
+                    # the EMA feeds step_weights — without it a resumed run
+                    # would diverge from the uninterrupted one
+                    saved = man.get("baseline")
+                    if saved is None:
+                        raise ValueError(
+                            "checkpoint carries no EMA-baseline state but "
+                            "this config uses use_baseline — it was saved "
+                            "by a run with a different reward setup")
+                    baseline.value = saved["value"]
+                    baseline.beta = saved["beta"]
+                start_ep = int(man["episode"]) + 1
+
+        history: List[dict] = []
+        for episode in range(start_ep, max_eps):
+            bi, ids = sampler.sample()
+            ops, pipeline = self._episode_batch(
+                graphs, arrays, ids, shapes[bi], platform, backend)
+            stream = WindowStream.fresh(
+                jax.random.fold_in(rng, episode), ops.x0, nchains,
+                graph_ids=ids, operands=ops)
+            stats = runner.run_episode(stream, pipeline=pipeline)
+            sampler.observe(ids, tracker.best_latencies)
+            history.append({"episode": episode, "bucket": bi,
+                            "graphs": [graphs[i].name for i in ids],
+                            **stats})
+            if verbose:
+                h = history[-1]
+                sampled = "/".join(f"{tracker.best_latencies[i]*1e3:.2f}"
+                                   for i in ids)
+                print(f"ep {episode:3d} bucket {bi} reward "
+                      f"{h['mean_reward']:.4g} sampled-best[ms] {sampled} "
+                      f"groups {h['mean_groups']:.1f}")
+            if mgr is not None and checkpoint_every \
+                    and (episode + 1) % checkpoint_every == 0:
+                self._save_state(mgr, episode, tracker, sampler, fingerprint,
+                                 baseline)
+        if mgr is not None:
+            if max_eps > start_ep:
+                self._save_state(mgr, max_eps - 1, tracker, sampler,
+                                 fingerprint, baseline)
+            mgr.close()
+
+        greedy_placements, greedy_latencies = self._greedy_corpus(
+            graphs, arrays, buckets, shapes, engine, platform, g_sub)
+
+        wall = time.perf_counter() - t_start
+        n_evals = max(0, max_eps - start_ep) * cfg.update_timestep \
+            * g_sub * nchains
+        return CorpusTrainResult(
+            tracker.best_latencies, tracker.best_placements,
+            greedy_latencies, greedy_placements, history, self.params,
+            wall, n_evals, n_evals / max(wall, 1e-9), buckets,
+            max(0, max_eps - start_ep))
+
+    # ------------------------------------------------------------ internals
+    def _episode_batch(self, graphs, arrays, ids: Sequence[int],
+                       shape: BucketShape, platform: Platform, backend
+                       ) -> Tuple[GraphOperands, RewardPipeline]:
+        """Assemble one sampled subset into the bucket's fixed jit shape."""
+        sub = [graphs[i] for i in ids]
+        ga = batch_graph_arrays([arrays[i] for i in ids],
+                                v_max=shape.v_max, e_max=shape.e_max)
+        if backend.jit_fused:
+            sb = sim_arrays_batch(sub, platform, v_max=shape.v_max,
+                                  p_max=shape.p_max)
+            sim_tree = jax.tree.map(jnp.asarray, sb.arrays)
+            prep = sb
+        else:
+            sim_tree = None
+            prep = backend.prepare_batch(sub, platform, v_max=shape.v_max,
+                                         p_max=shape.p_max)
+        pipeline = RewardPipeline(backend=backend, multi_prep=prep,
+                                  num_nodes=[g.num_nodes for g in sub])
+        return _operands(ga, sim_tree), pipeline
+
+    def _greedy_corpus(self, graphs, arrays, buckets, shapes, engine,
+                       platform, g_sub: int):
+        """Greedy-decode every corpus graph through the dynamic engine.
+
+        Chunked to the training batch width per bucket, so the decode adds
+        at most one more compile per bucket (not one per graph).
+        """
+        N = len(graphs)
+        placements: List[Optional[np.ndarray]] = [None] * N
+        latencies = np.empty(N)
+        base = jax.random.PRNGKey(0)
+        keys = jnp.stack([jax.random.fold_in(base, j) for j in range(g_sub)])
+        for members, shape in zip(buckets, shapes):
+            for lo in range(0, len(members), g_sub):
+                chunk = members[lo:lo + g_sub]
+                padded = list(chunk) + [chunk[0]] * (g_sub - len(chunk))
+                ga = batch_graph_arrays([arrays[i] for i in padded],
+                                        v_max=shape.v_max,
+                                        e_max=shape.e_max)
+                fines, _ = engine.greedy_decode(_operands(ga, None),
+                                                self.params, keys)
+                fines = np.asarray(fines)
+                for k, gid in enumerate(chunk):
+                    p = fines[k, :graphs[gid].num_nodes].astype(np.int64)
+                    placements[gid] = p
+                    latencies[gid] = simulate(graphs[gid], p,
+                                              platform).latency
+        return placements, latencies
+
+    def _save_state(self, mgr, episode: int, tracker: BestTracker,
+                    sampler: CurriculumSampler, fingerprint: str,
+                    baseline=None) -> None:
+        from ...checkpoint.manager import _feature_config_to_meta
+        t = tracker.state_arrays()
+        meta = {
+            "episode": int(episode),
+            "corpus_fingerprint": fingerprint,
+            "sampler": sampler.state_dict(),
+            "tracker": {"latencies": t["latencies"].tolist(),
+                        "placements": t["placements"].tolist(),
+                        "chain_best": t["chain_best"].tolist()},
+            "engine": self.cfg.engine,
+            "feature_config": _feature_config_to_meta(self.feature_config),
+        }
+        if baseline is not None:
+            meta["baseline"] = {"value": baseline.value,
+                                "beta": baseline.beta}
+        mgr.save(episode, {"params": self.params, "opt": self._opt_state},
+                 meta)
+        mgr.wait()

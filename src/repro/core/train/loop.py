@@ -1,0 +1,202 @@
+"""The window-granular REINFORCE episode loop, extracted from ``hsdag.py``.
+
+One episode = one ``update_timestep`` rollout window over a (G, B) chain
+batch, scored by a :class:`~repro.core.sim.RewardPipeline`, tracked by a
+:class:`BestTracker`, and applied to the shared parameter tree as an exact
+Eq.-14 replay gradient.  ``HSDAG.train_multi`` drives one
+:class:`EpisodeRunner` over a fixed graph batch (bit-for-bit the loop it
+carried before the extraction — the PR-2/PR-3 equivalence suites pin this);
+the corpus trainer drives the same runner over per-episode resampled
+batches through the dynamic engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..reinforce import step_weights
+
+__all__ = ["make_chain_rngs", "WindowStream", "BestTracker",
+           "EpisodeRunner"]
+
+
+def make_chain_rngs(rng, num_graphs: int, num_chains: int) -> jnp.ndarray:
+    """The (G, B, 2) PRNG key batch for a chain grid.
+
+    Graph 0 / chain 0 carries the exact single-graph batched stream (and
+    graph 0's chain row is exactly ``_search_batched``'s), so G=1 with
+    ``reward_norm="none"`` reproduces that engine bit for bit.
+    """
+    def _graph_base(g: int):
+        return rng if g == 0 else jax.random.fold_in(rng, num_chains + g)
+
+    return jnp.stack([
+        jnp.stack([_graph_base(g)] +
+                  [jax.random.fold_in(_graph_base(g), b)
+                   for b in range(1, num_chains)])
+        for g in range(num_graphs)])
+
+
+@dataclasses.dataclass
+class WindowStream:
+    """Mutable rollout-stream state one runner episode advances.
+
+    ``operands`` is ``None`` for the static engine (graph batch baked into
+    the jit) and a ``GraphOperands`` for the dynamic engine (per-episode
+    corpus subsets).  ``graph_ids`` maps batch slots to corpus indices for
+    the tracker — ``range(G)`` when the batch IS the corpus.
+    """
+
+    z: jnp.ndarray               # (G, B, V, d) — window-start state
+    chain_rngs: jnp.ndarray      # (G, B, 2)
+    first: bool                  # next window starts with the transform step
+    graph_ids: Sequence[int]
+    operands: object = None      # Optional[GraphOperands]
+
+    @classmethod
+    def fresh(cls, rng, x0, num_chains: int,
+              graph_ids: Optional[Sequence[int]] = None,
+              operands=None) -> "WindowStream":
+        x0 = jnp.asarray(x0)                                   # (G, V, d)
+        G = x0.shape[0]
+        z = jnp.broadcast_to(x0[:, None], (G, num_chains) + x0.shape[1:])
+        return cls(z=z, chain_rngs=make_chain_rngs(rng, G, num_chains),
+                   first=True,
+                   graph_ids=list(graph_ids) if graph_ids is not None
+                   else list(range(G)),
+                   operands=operands)
+
+
+class BestTracker:
+    """Cumulative per-corpus-graph bests in the engine's (t, g, b) order.
+
+    The iteration order matters for reproducibility: the EMA baseline
+    update interleaves with the strict-< best tie-break exactly as the
+    PR-1 scalar engine established (and reduces to it at G=1, B=1).
+    """
+
+    def __init__(self, num_nodes: Sequence[int], num_chains: int):
+        self.num_nodes = [int(n) for n in num_nodes]
+        n = len(self.num_nodes)
+        self.best_latencies = np.full(n, np.inf)
+        self.best_placements: List[np.ndarray] = [
+            np.zeros(nn, dtype=np.int64) for nn in self.num_nodes]
+        self.chain_best = np.full((n, num_chains), np.inf)
+
+    def update(self, fines_np: np.ndarray, rewards: np.ndarray,
+               latencies: np.ndarray, graph_ids: Sequence[int],
+               baseline=None) -> None:
+        T, G, B = latencies.shape
+        for t in range(T):
+            for g in range(G):
+                gid = graph_ids[g]
+                for b in range(B):
+                    if baseline is not None:
+                        baseline.update(rewards[t, g, b])
+                    if latencies[t, g, b] < self.best_latencies[gid]:
+                        self.best_latencies[gid] = float(latencies[t, g, b])
+                        self.best_placements[gid] = (
+                            fines_np[t, g, b, :self.num_nodes[gid]]
+                            .astype(np.int64))
+        lat_min = latencies.min(axis=0)                          # (G, B)
+        for g in range(G):
+            gid = graph_ids[g]
+            self.chain_best[gid] = np.minimum(self.chain_best[gid],
+                                              lat_min[g])
+
+    def state_arrays(self) -> Dict[str, np.ndarray]:
+        """Dense view for checkpointing (placements padded to the max V)."""
+        vm = max(self.num_nodes) if self.num_nodes else 0
+        plc = np.zeros((len(self.num_nodes), vm), np.int64)
+        for i, p in enumerate(self.best_placements):
+            plc[i, :p.shape[0]] = p
+        return {"latencies": self.best_latencies.copy(),
+                "placements": plc, "chain_best": self.chain_best.copy()}
+
+    def load_state_arrays(self, state: Dict[str, np.ndarray]) -> None:
+        self.best_latencies = np.asarray(state["latencies"]).copy()
+        plc = np.asarray(state["placements"])
+        self.best_placements = [plc[i, :n].astype(np.int64).copy()
+                                for i, n in enumerate(self.num_nodes)]
+        self.chain_best = np.asarray(state["chain_best"]).copy()
+
+
+class EpisodeRunner:
+    """Runs one episode: rollout window → score → track → Eq.-14 update.
+
+    ``agent`` supplies ``cfg``, ``params`` and ``apply_grads`` (the
+    optimizer step) — :class:`~repro.core.hsdag.HSDAG` or anything shaped
+    like it.  ``engine`` is a static :class:`~repro.core.sim.RolloutEngine`
+    (stream ``operands`` must be ``None``) or a
+    :class:`~repro.core.sim.DynamicRolloutEngine` (operands required).
+    """
+
+    def __init__(self, agent, engine, *, pipeline, tracker: BestTracker,
+                 reward_norm: str = "none", baseline=None):
+        self.agent = agent
+        self.engine = engine
+        self.pipeline = pipeline
+        self.tracker = tracker
+        self.reward_norm = reward_norm
+        self.baseline = baseline
+
+    def run_episode(self, stream: WindowStream, *, pipeline=None) -> Dict:
+        agent = self.agent
+        cfg = agent.cfg
+        pipeline = pipeline if pipeline is not None else self.pipeline
+        tsteps = cfg.update_timestep
+        t_ep = time.perf_counter()
+
+        dynamic = stream.operands is not None
+        ops = (stream.operands,) if dynamic else ()
+        (z, chain_rngs, keys, fines, ngroups, rewards,
+         latencies) = self.engine.rollout_window(
+            *ops, agent.params, stream.z, stream.chain_rngs,
+            num_steps=tsteps, start_first=stream.first)
+        fines_np = np.asarray(fines)                         # (T, G, B, V)
+        if pipeline.fused:
+            rewards = np.asarray(rewards, dtype=np.float64)  # (T, G, B)
+            latencies = np.asarray(latencies, dtype=np.float64)
+        else:
+            rewards, latencies = pipeline.score_window(fines_np)
+
+        self.tracker.update(fines_np, rewards, latencies, stream.graph_ids,
+                            self.baseline)
+
+        # ---- shared-policy update over the (G, B, T) window ----
+        r_for_w = rewards
+        if self.reward_norm == "pergraph":
+            mean_g = rewards.mean(axis=(0, 2), keepdims=True)
+            std_g = rewards.std(axis=(0, 2), keepdims=True)
+            r_for_w = (rewards - mean_g) / (std_g + 1e-8)
+        weights_gbt = step_weights(
+            np.transpose(r_for_w, (1, 2, 0)), cfg.gamma,
+            reward_to_go=cfg.reward_to_go,
+            baseline=(self.baseline.value if self.baseline is not None
+                      else None),
+            normalize=cfg.normalize_weights)
+        weights_tgb = jnp.asarray(np.transpose(weights_gbt, (2, 0, 1)))
+        for _ in range(max(1, cfg.k_epochs)):
+            grads = self.engine.window_grads(
+                *ops, agent.params, stream.z, keys, weights_tgb,
+                num_steps=tsteps, start_first=stream.first)
+            agent.apply_grads(grads)
+
+        # next window resumes from the post-rollout state
+        stream.z = z
+        stream.chain_rngs = chain_rngs
+        stream.first = False
+
+        per_graph_best = [float(l) for l in self.tracker.best_latencies]
+        return {
+            "mean_reward": float(np.mean(rewards)),
+            "best_latency": float(self.tracker.best_latencies.min()),
+            "per_graph_best": per_graph_best,
+            "mean_groups": float(np.mean(np.asarray(ngroups))),
+            "wall_s": time.perf_counter() - t_ep,
+        }

@@ -1,8 +1,14 @@
-"""Benchmark computation graphs (paper §3.1) + JAX-native graph construction."""
+"""Benchmark computation graphs (paper §3.1) + JAX-native graph construction
++ the workload-corpus subsystem (provider registry, synthetic families)."""
 from .inception import inception_v3
 from .resnet import resnet50
 from .bert import bert_base
 from .jaxpr_trace import trace_to_graph
+from .synthetic import (SYNTHETIC_FAMILIES, branch_join_dag, layered_dag,
+                        series_parallel_dag)
+from .workloads import (CorpusSpec, WorkloadProvider, build_corpus,
+                        corpus_fingerprint, get_workload, parse_corpus_spec,
+                        register_workload, workload_names)
 
 PAPER_BENCHMARKS = {
     "inception_v3": inception_v3,
@@ -11,4 +17,9 @@ PAPER_BENCHMARKS = {
 }
 
 __all__ = ["inception_v3", "resnet50", "bert_base", "trace_to_graph",
-           "PAPER_BENCHMARKS"]
+           "PAPER_BENCHMARKS",
+           "layered_dag", "series_parallel_dag", "branch_join_dag",
+           "SYNTHETIC_FAMILIES",
+           "WorkloadProvider", "register_workload", "get_workload",
+           "workload_names", "CorpusSpec", "parse_corpus_spec",
+           "build_corpus", "corpus_fingerprint"]

@@ -1,0 +1,329 @@
+"""Workload-corpus subsystem: pluggable graph sources behind one registry.
+
+The PR-3 playbook applied to *workloads*: simulator backends became
+pluggable in ``core/sim``; this module does the same for the graphs the
+policy trains on.  A :class:`WorkloadProvider` turns a parameter dict into a
+list of :class:`~repro.core.graph.CompGraph`; providers register under a
+name; :func:`build_corpus` assembles a heterogeneous corpus from a spec —
+either a :class:`CorpusSpec` or its string form::
+
+    benchmark                                    # the three Table-2 graphs
+    benchmark:names=bert_base                    # a subset
+    lm:archs=qwen1.5-0.5b+phi3-mini-3.8b         # layer graphs from configs/
+    traced:archs=qwen1.5-0.5b                    # trace_to_graph'd LM layers
+    synthetic:family=layered:count=4:size=40     # seedable DAG families
+
+Entries are ``;``-separated, provider parameters ``:``-separated
+``key=value`` pairs (``+`` separates list values)::
+
+    build_corpus("benchmark;synthetic:family=mixed:count=9:size=30:seed=0")
+
+:func:`corpus_fingerprint` content-hashes a corpus (topology, costs, op
+types) — checkpoint manifests record it so an interrupted corpus run can
+refuse to resume against a different graph set.
+
+Registering a provider mirrors ``core/sim``::
+
+    class MyWorkloads(WorkloadProvider):
+        name = "mine"
+        def build(self, **params): return [...]
+    register_workload(MyWorkloads())
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from ..core.graph import CompGraph
+from .bert import bert_base
+from .inception import inception_v3
+from .resnet import resnet50
+from .synthetic import SYNTHETIC_FAMILIES
+from .jaxpr_trace import trace_to_graph
+
+__all__ = [
+    "WorkloadProvider", "register_workload", "get_workload",
+    "workload_names", "CorpusSpec", "parse_corpus_spec", "build_corpus",
+    "corpus_fingerprint",
+]
+
+
+class WorkloadProvider:
+    """Interface every graph source implements (see module docstring)."""
+
+    name: str = "?"
+
+    def build(self, **params) -> List[CompGraph]:
+        """Materialize this provider's graphs for one spec entry."""
+        raise NotImplementedError
+
+
+_REGISTRY: Dict[str, WorkloadProvider] = {}
+
+
+def register_workload(provider: WorkloadProvider) -> WorkloadProvider:
+    """Register ``provider`` under ``provider.name`` (latest wins)."""
+    _REGISTRY[provider.name] = provider
+    return provider
+
+
+def get_workload(name: str) -> WorkloadProvider:
+    if name not in _REGISTRY:
+        raise ValueError(
+            f"unknown workload provider {name!r}; registered providers: "
+            f"{workload_names()}")
+    return _REGISTRY[name]
+
+
+def workload_names() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+# --------------------------------------------------------------- providers
+class BenchmarkWorkloads(WorkloadProvider):
+    """The paper's Table-2 graphs (``names=`` subset, default all three)."""
+
+    name = "benchmark"
+    _BUILDERS = {"inception_v3": inception_v3, "resnet50": resnet50,
+                 "bert_base": bert_base}
+
+    def build(self, names: Union[str, Sequence[str]] = "all",
+              **params) -> List[CompGraph]:
+        _reject_unknown(self.name, params)
+        if names == "all":
+            names = sorted(self._BUILDERS)
+        elif isinstance(names, str):
+            names = [names]
+        unknown = [n for n in names if n not in self._BUILDERS]
+        if unknown:
+            raise ValueError(f"unknown benchmark graphs {unknown}; "
+                             f"available: {sorted(self._BUILDERS)}")
+        return [self._BUILDERS[n]() for n in names]
+
+
+class LMLayerWorkloads(WorkloadProvider):
+    """Layer-granularity LM graphs from the ``configs/`` model registry.
+
+    One graph per (arch, kind): the production planner's analytic layer
+    graph (``core.planner.layer_graph``) of the registered architecture —
+    80-160-node chains whose flops/bytes come from the real ModelConfig,
+    i.e. the workloads the TPU-pod planner actually places.
+    """
+
+    name = "lm"
+
+    def build(self, archs: Union[str, Sequence[str]] = "all",
+              kinds: Union[str, Sequence[str]] = "train",
+              seq_len: int = 4096, batch: int = 8,
+              **params) -> List[CompGraph]:
+        _reject_unknown(self.name, params)
+        from ..configs import all_archs, get
+        from ..core.planner import layer_graph
+        if archs == "all":
+            archs = list(all_archs())
+        elif isinstance(archs, str):
+            archs = [archs]
+        if isinstance(kinds, str):
+            kinds = [kinds]
+        out = []
+        for a in archs:
+            cfg = get(a).config
+            for kind in kinds:
+                out.append(layer_graph(cfg, int(seq_len), int(batch), kind))
+        return out
+
+
+class TracedLayerWorkloads(WorkloadProvider):
+    """``trace_to_graph``-derived transformer-layer graphs.
+
+    Traces a single attention+FFN layer written in plain ``jax.numpy`` at
+    each registered arch's *smoke* dimensions — jaxpr-primitive op types
+    (``dot_general``, ``exp``, ``reduce_sum``, ...) rather than the
+    OpenVINO-style builders', which is exactly the vocabulary heterogeneity
+    a corpus-trained policy must absorb.
+    """
+
+    name = "traced"
+
+    def build(self, archs: Union[str, Sequence[str]] = "all",
+              seq_len: int = 32, **params) -> List[CompGraph]:
+        _reject_unknown(self.name, params)
+        from ..configs import all_archs, get
+        if archs == "all":
+            archs = list(all_archs())
+        elif isinstance(archs, str):
+            archs = [archs]
+        return [self._trace_layer(get(a).smoke_config, int(seq_len))
+                for a in archs]
+
+    @staticmethod
+    def _trace_layer(cfg, seq: int) -> CompGraph:
+        import jax
+        import jax.numpy as jnp
+        d = cfg.d_model
+        h = max(1, cfg.n_heads)
+        hd = cfg.head_dim_
+        f = cfg.d_ff
+
+        def layer(x, wq, wk, wv, wo, w1, w2):
+            q = (x @ wq).reshape(seq, h, hd)
+            k = (x @ wk).reshape(seq, h, hd)
+            v = (x @ wv).reshape(seq, h, hd)
+            s = jnp.einsum("qhd,khd->hqk", q, k) / np.sqrt(hd)
+            a = jax.nn.softmax(s, axis=-1)
+            o = jnp.einsum("hqk,khd->qhd", a, v).reshape(seq, h * hd)
+            x = x + o @ wo
+            hidden = jax.nn.gelu(x @ w1)
+            return x + hidden @ w2
+
+        args = (np.zeros((seq, d), np.float32),
+                np.zeros((d, h * hd), np.float32),
+                np.zeros((d, h * hd), np.float32),
+                np.zeros((d, h * hd), np.float32),
+                np.zeros((h * hd, d), np.float32),
+                np.zeros((d, f), np.float32),
+                np.zeros((f, d), np.float32))
+        return trace_to_graph(layer, *args, name=f"{cfg.name}/traced_layer")
+
+
+class SyntheticWorkloads(WorkloadProvider):
+    """Seedable synthetic families (``graphs/synthetic.py``).
+
+    ``family`` — ``layered`` | ``series_parallel`` | ``branch_join`` |
+    ``mixed`` (cycles all three); ``count`` graphs of roughly ``size`` nodes
+    (jittered ±50% per graph so a corpus spans sizes), seeded from ``seed``.
+    """
+
+    name = "synthetic"
+
+    def build(self, family: Union[str, Sequence[str]] = "mixed",
+              count: int = 4, size: int = 32,
+              seed: int = 0, **params) -> List[CompGraph]:
+        _reject_unknown(self.name, params)
+        count, size, seed = int(count), int(size), int(seed)
+        if family == "mixed":
+            fams = sorted(SYNTHETIC_FAMILIES)
+        else:
+            fams = [family] if isinstance(family, str) else list(family)
+            unknown = [f for f in fams if f not in SYNTHETIC_FAMILIES]
+            if unknown:
+                raise ValueError(
+                    f"unknown synthetic families {unknown}; available: "
+                    f"{sorted(SYNTHETIC_FAMILIES)} or 'mixed'")
+        out = []
+        for i in range(count):
+            fam = fams[i % len(fams)]
+            rng = np.random.default_rng((seed, i))
+            n = max(4, int(size * float(rng.uniform(0.5, 1.5))))
+            gseed = int(rng.integers(0, 2**31))
+            if fam == "layered":
+                width = max(1, int(rng.integers(2, 6)))
+                g = SYNTHETIC_FAMILIES[fam](
+                    num_layers=max(1, n // (width + 1)), width=width,
+                    seed=gseed)
+            elif fam == "series_parallel":
+                g = SYNTHETIC_FAMILIES[fam](target_nodes=n, seed=gseed)
+            else:
+                branches = max(2, int(rng.integers(2, 6)))
+                depth = max(1, int(rng.integers(1, 4)))
+                g = SYNTHETIC_FAMILIES[fam](
+                    num_blocks=max(1, n // (branches * depth + 1)),
+                    branches=branches, depth=depth, seed=gseed)
+            g.name = f"{g.name}#{i}"
+            out.append(g)
+        return out
+
+
+def _reject_unknown(provider: str, params: Dict) -> None:
+    if params:
+        raise ValueError(f"workload provider {provider!r} got unknown "
+                         f"parameters {sorted(params)}")
+
+
+register_workload(BenchmarkWorkloads())
+register_workload(LMLayerWorkloads())
+register_workload(TracedLayerWorkloads())
+register_workload(SyntheticWorkloads())
+
+
+# ------------------------------------------------------------- corpus spec
+@dataclasses.dataclass(frozen=True)
+class CorpusSpec:
+    """An ordered list of (provider name, params) entries."""
+
+    entries: Tuple[Tuple[str, Tuple[Tuple[str, object], ...]], ...]
+
+    def __str__(self) -> str:
+        parts = []
+        for name, params in self.entries:
+            toks = [name] + [
+                f"{k}={'+'.join(map(str, v)) if isinstance(v, (list, tuple)) else v}"
+                for k, v in params]
+            parts.append(":".join(toks))
+        return ";".join(parts)
+
+
+def parse_corpus_spec(spec: str) -> CorpusSpec:
+    """Parse the ``provider:key=val:key=val;provider:...`` string form."""
+    entries = []
+    for part in str(spec).split(";"):
+        part = part.strip()
+        if not part:
+            continue
+        toks = part.split(":")
+        name = toks[0].strip()
+        get_workload(name)           # fail fast on unknown providers
+        params = []
+        for tok in toks[1:]:
+            if "=" not in tok:
+                raise ValueError(
+                    f"malformed corpus spec token {tok!r} in {part!r} "
+                    f"(expected key=value)")
+            k, v = tok.split("=", 1)
+            vv: object = [s for s in v.split("+")] if "+" in v else v
+            params.append((k.strip(), vv))
+        entries.append((name, tuple(params)))
+    if not entries:
+        raise ValueError(f"empty corpus spec {spec!r}")
+    return CorpusSpec(tuple(entries))
+
+
+def build_corpus(spec: Union[str, CorpusSpec]) -> List[CompGraph]:
+    """Materialize every entry of ``spec`` into one graph list.
+
+    Graph names are uniquified (``/2``, ``/3`` suffixes) so per-graph
+    reporting stays unambiguous when entries overlap.
+    """
+    if isinstance(spec, str):
+        spec = parse_corpus_spec(spec)
+    graphs: List[CompGraph] = []
+    seen: Dict[str, int] = {}
+    for name, params in spec.entries:
+        for g in get_workload(name).build(**dict(params)):
+            n = seen.get(g.name, 0) + 1
+            seen[g.name] = n
+            if n > 1:
+                g.name = f"{g.name}/{n}"
+            graphs.append(g)
+    return graphs
+
+
+def corpus_fingerprint(graphs: Sequence[CompGraph]) -> str:
+    """Order-sensitive content hash of a corpus (topology, costs, op types).
+
+    Checkpoint manifests record it; resume refuses a mismatched corpus
+    (same-length graph lists with different contents would otherwise
+    silently mis-map sampler state and per-graph bests).
+    """
+    h = hashlib.sha256()
+    for g in graphs:
+        h.update(g.name.encode())
+        h.update(np.int64(g.num_nodes).tobytes())
+        h.update(np.ascontiguousarray(g.edges).tobytes())
+        h.update(np.ascontiguousarray(g.flops()).tobytes())
+        h.update(np.ascontiguousarray(g.bytes_out()).tobytes())
+        h.update("|".join(g.op_types()).encode())
+    return h.hexdigest()

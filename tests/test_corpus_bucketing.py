@@ -1,0 +1,183 @@
+"""Size-bucketed batching: any bucket partition is reward-invariant.
+
+The contract: pad slots are inert, so splitting a corpus into ANY partition
+of per-bucket padded batches reproduces the single-bucket (global-padding)
+``simulate_multi`` latencies/rewards **bitwise** — including the degenerate
+1-bucket case, which IS today's global padding.  ``plan_buckets`` only
+chooses *which* partition (bounded count, minimal pad waste); correctness
+never depends on its choice.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (FeatureConfig, batch_graph_arrays,
+                        batch_graph_arrays_bucketed, check_feature_compat,
+                        extract_features, paper_platform, plan_buckets,
+                        shared_feature_config, sim_arrays_batch,
+                        sim_arrays_bucketed, simulate_multi,
+                        tpu_stage_platform)
+
+from conftest import given, make_diamond, random_dag, settings, st
+
+
+def _corpus(rng, sizes):
+    return [random_dag(rng, n, p=0.25) for n in sizes]
+
+
+def _global_latencies(graphs, placements, plat):
+    """Reference: every graph in ONE globally-padded batch."""
+    batch = sim_arrays_batch(graphs, plat)
+    vm = batch.max_nodes
+    padded = np.zeros((len(graphs), placements[0].shape[0], vm), np.int64)
+    for i, p in enumerate(placements):
+        padded[i, :, :p.shape[1]] = p
+    res = simulate_multi(batch, padded)
+    return res.latency, res.reward
+
+
+def _assert_partition_bitwise(graphs, placements, plat, buckets):
+    lat_ref, rew_ref = _global_latencies(graphs, placements, plat)
+    _, batches = sim_arrays_bucketed(graphs, plat, max_buckets=len(buckets),
+                                     buckets=buckets)
+    for idx, batch in zip(buckets, batches):
+        padded = np.zeros((len(idx), placements[0].shape[0],
+                           batch.max_nodes), np.int64)
+        for k, i in enumerate(idx):
+            padded[k, :, :placements[i].shape[1]] = placements[i]
+        res = simulate_multi(batch, padded)
+        for k, i in enumerate(idx):
+            np.testing.assert_array_equal(
+                res.latency[k], lat_ref[i],
+                err_msg=f"bucketing changed graph {i}'s makespan bitwise")
+            np.testing.assert_array_equal(res.reward[k], rew_ref[i])
+
+
+# ------------------------------------------------------------- plan_buckets
+def test_plan_buckets_is_partition_and_bounded():
+    sizes = [7, 30, 9, 120, 45, 8, 62, 7]
+    for k in (1, 2, 3, 8, 20):
+        buckets = plan_buckets(sizes, k)
+        assert 1 <= len(buckets) <= min(k, len(sizes))
+        flat = sorted(i for b in buckets for i in b)
+        assert flat == list(range(len(sizes)))          # exact partition
+        # size-contiguous: bucket ranges do not interleave
+        ranges = sorted((min(sizes[i] for i in b), max(sizes[i] for i in b))
+                        for b in buckets)
+        for (lo1, hi1), (lo2, hi2) in zip(ranges, ranges[1:]):
+            assert hi1 <= lo2
+
+
+def test_plan_buckets_reduces_waste_vs_global():
+    sizes = [10, 11, 12, 500, 510]
+    one = plan_buckets(sizes, 1)
+    two = plan_buckets(sizes, 2)
+
+    def waste(buckets):
+        return sum(max(sizes[i] for i in b) - sizes[i]
+                   for b in buckets for i in b)
+
+    assert len(one) == 1 and waste(one) > waste(two)
+    assert waste(two) < 30        # small graphs no longer pad to 510
+
+
+def test_plan_buckets_validation_and_edges():
+    with pytest.raises(ValueError):
+        plan_buckets([3, 4], 0)
+    assert plan_buckets([], 3) == []
+    assert plan_buckets([5], 3) == [[0]]
+    # deterministic for tied sizes
+    assert plan_buckets([4, 4, 4], 2) == plan_buckets([4, 4, 4], 2)
+
+
+# ------------------------------------------------- bitwise reward invariance
+def test_one_bucket_degenerate_is_global_padding():
+    rng = np.random.default_rng(0)
+    graphs = [make_diamond()] + _corpus(rng, [19, 11])
+    placements = [rng.integers(0, 2, (4, g.num_nodes)) for g in graphs]
+    _assert_partition_bitwise(graphs, placements, paper_platform(),
+                              [[0, 1, 2]])
+
+
+def test_planned_buckets_bitwise():
+    rng = np.random.default_rng(1)
+    graphs = _corpus(rng, [6, 40, 9, 33, 14, 8])
+    placements = [rng.integers(0, 2, (3, g.num_nodes)) for g in graphs]
+    for k in (1, 2, 3, 6):
+        buckets = plan_buckets([g.num_nodes for g in graphs], k)
+        _assert_partition_bitwise(graphs, placements, paper_platform(),
+                                  buckets)
+
+
+def test_arbitrary_partition_bitwise_tpu_platform():
+    """Correctness must not depend on plan_buckets' choice: scrambled,
+    size-discontiguous partitions are equally exact."""
+    rng = np.random.default_rng(2)
+    graphs = _corpus(rng, [5, 25, 12, 18])
+    placements = [rng.integers(0, 4, (3, g.num_nodes)) for g in graphs]
+    for buckets in ([[0, 1], [2, 3]], [[3, 0], [1], [2]], [[2, 1, 0, 3]]):
+        _assert_partition_bitwise(graphs, placements, tpu_stage_platform(4),
+                                  buckets)
+
+
+# ------------------------------------------------------ encoder-side buckets
+def test_batch_graph_arrays_bucketed_shapes():
+    rng = np.random.default_rng(3)
+    graphs = _corpus(rng, [5, 30, 8, 26])
+    fc = shared_feature_config(graphs, FeatureConfig(d_pos=8))
+    arrays = [extract_features(g, fc) for g in graphs]
+    buckets, batches = batch_graph_arrays_bucketed(arrays, max_buckets=2)
+    assert sorted(i for b in buckets for i in b) == [0, 1, 2, 3]
+    for idx, gb in zip(buckets, batches):
+        assert gb.max_nodes == max(arrays[i].num_nodes for i in idx)
+        for k, i in enumerate(idx):
+            n = arrays[i].num_nodes
+            np.testing.assert_array_equal(gb.x[k, :n], arrays[i].x)
+            assert gb.node_mask[k, :n].all()
+            assert not gb.node_mask[k, n:].any()
+
+
+def test_batch_graph_arrays_fixed_axes():
+    """v_max/e_max pin the jit shapes beyond the batch maximum."""
+    rng = np.random.default_rng(4)
+    g = random_dag(rng, 9, p=0.3)
+    a = extract_features(g, FeatureConfig(d_pos=8))
+    gb = batch_graph_arrays([a], v_max=20, e_max=50)
+    assert gb.x.shape[1] == 20 and gb.edges.shape[1] == 50
+    with pytest.raises(ValueError):
+        batch_graph_arrays([a], e_max=g.num_edges - 1)
+    with pytest.raises(ValueError):
+        sim_arrays_batch([g], paper_platform(), p_max=0)
+
+
+# ------------------------------------------------------ feature-vocab compat
+def test_check_feature_compat():
+    rng = np.random.default_rng(5)
+    graphs = _corpus(rng, [8, 12])
+    fc = shared_feature_config(graphs)
+    check_feature_compat(fc, graphs)            # covered → no raise
+    weird = make_diamond()
+    weird.nodes[2].op_type = "ExoticOp99"
+    with pytest.raises(ValueError, match="ExoticOp99"):
+        check_feature_compat(fc, [weird])
+    with pytest.raises(ValueError, match="no op_vocab"):
+        check_feature_compat(FeatureConfig(), graphs)
+
+
+# ------------------------------------------------------- property (optional)
+@settings(max_examples=15, deadline=None)
+@given(st.integers(2, 7), st.integers(0, 500), st.data())
+def test_property_random_size_splits_bitwise(n_graphs, seed, data):
+    """Hypothesis: for random corpora and random bucket partitions, every
+    bucket's latencies equal the globally-padded ones bitwise."""
+    rng = np.random.default_rng(seed)
+    sizes = [int(rng.integers(3, 28)) for _ in range(n_graphs)]
+    graphs = _corpus(rng, sizes)
+    placements = [rng.integers(0, 2, (2, g.num_nodes)) for g in graphs]
+    # random partition of graph indices into 1..n buckets
+    labels = data.draw(st.lists(st.integers(0, n_graphs - 1),
+                                min_size=n_graphs, max_size=n_graphs))
+    buckets = {}
+    for i, lab in enumerate(labels):
+        buckets.setdefault(lab, []).append(i)
+    _assert_partition_bitwise(graphs, placements, paper_platform(),
+                              list(buckets.values()))

@@ -1,0 +1,129 @@
+"""Workload-corpus subsystem: providers, spec parsing, fingerprints."""
+import numpy as np
+import pytest
+
+from repro.graphs import (CorpusSpec, PAPER_BENCHMARKS, branch_join_dag,
+                          build_corpus, corpus_fingerprint, get_workload,
+                          layered_dag, parse_corpus_spec, register_workload,
+                          series_parallel_dag, workload_names)
+from repro.graphs.workloads import WorkloadProvider
+
+
+# ---------------------------------------------------------------- registry
+def test_registry_names_and_unknown():
+    names = workload_names()
+    for expected in ("benchmark", "lm", "traced", "synthetic"):
+        assert expected in names
+    with pytest.raises(ValueError, match="unknown workload provider"):
+        get_workload("bogus")
+
+
+def test_register_custom_provider():
+    class OneDiamond(WorkloadProvider):
+        name = "test_diamond"
+
+        def build(self, **params):
+            from conftest import make_diamond
+            return [make_diamond()]
+
+    register_workload(OneDiamond())
+    gs = build_corpus("test_diamond")
+    assert len(gs) == 1 and gs[0].num_nodes == 7
+
+
+# --------------------------------------------------------------- providers
+def test_benchmark_provider_subset_and_unknown():
+    gs = get_workload("benchmark").build(names="bert_base")
+    assert len(gs) == 1 and gs[0].name == "bert_base"
+    all_three = get_workload("benchmark").build()
+    assert {g.name for g in all_three} == set(PAPER_BENCHMARKS)
+    with pytest.raises(ValueError, match="unknown benchmark"):
+        get_workload("benchmark").build(names="vgg")
+
+
+def test_provider_rejects_unknown_params():
+    with pytest.raises(ValueError, match="unknown parameters"):
+        get_workload("synthetic").build(bogus_knob=3)
+
+
+def test_synthetic_families_seeded_deterministic():
+    for fam, build in (("layered", lambda s: layered_dag(6, 3, seed=s)),
+                       ("series_parallel",
+                        lambda s: series_parallel_dag(20, seed=s)),
+                       ("branch_join",
+                        lambda s: branch_join_dag(2, 3, 2, seed=s))):
+        a, b = build(5), build(5)
+        assert a.num_nodes == b.num_nodes, fam
+        np.testing.assert_array_equal(a.edges, b.edges)
+        assert a.op_types() == b.op_types()
+        np.testing.assert_array_equal(a.flops(), b.flops())
+        c = build(6)
+        assert corpus_fingerprint([a]) != corpus_fingerprint([c]), \
+            f"{fam}: different seeds produced identical graphs"
+        a.validate_acyclic()
+
+
+def test_synthetic_provider_mixed_spans_families():
+    gs = get_workload("synthetic").build(family="mixed", count=6, size=20,
+                                         seed=3)
+    assert len(gs) == 6
+    prefixes = {g.name.split("_")[0] for g in gs}
+    assert {"bj", "layered", "sp"} <= prefixes
+
+
+def test_lm_provider_layer_graphs():
+    gs = get_workload("lm").build(archs="qwen1.5-0.5b", kinds="train",
+                                  seq_len=512, batch=4)
+    assert len(gs) == 1
+    g = gs[0]
+    assert g.num_nodes > 10 and "Attention" in g.op_types()
+    g.validate_acyclic()
+
+
+def test_traced_provider_jaxpr_layer():
+    gs = get_workload("traced").build(archs="qwen1.5-0.5b", seq_len=16)
+    assert len(gs) == 1
+    g = gs[0]
+    assert "dot_general" in g.op_types()
+    assert g.num_nodes > 10
+    g.validate_acyclic()
+
+
+# ------------------------------------------------------------- corpus spec
+def test_parse_corpus_spec_roundtrip():
+    spec = parse_corpus_spec(
+        "benchmark:names=bert_base;synthetic:family=layered:count=2:seed=1")
+    assert isinstance(spec, CorpusSpec)
+    assert spec.entries[0][0] == "benchmark"
+    assert dict(spec.entries[1][1])["count"] == "2"
+    # string form parses back to the same spec
+    assert parse_corpus_spec(str(spec)) == spec
+
+
+def test_parse_corpus_spec_errors():
+    with pytest.raises(ValueError, match="unknown workload provider"):
+        parse_corpus_spec("nope:foo=1")
+    with pytest.raises(ValueError, match="malformed"):
+        parse_corpus_spec("benchmark:oops")
+    with pytest.raises(ValueError, match="empty corpus spec"):
+        parse_corpus_spec(";;")
+
+
+def test_build_corpus_list_values_and_unique_names():
+    gs = build_corpus("benchmark:names=bert_base;benchmark:names=bert_base")
+    assert [g.name for g in gs] == ["bert_base", "bert_base/2"]
+    gs = build_corpus("synthetic:family=layered+series_parallel:count=2")
+    assert len(gs) == 2        # '+' splits into a list → family cycles
+
+
+def test_corpus_fingerprint_sensitivity():
+    a = build_corpus("synthetic:family=layered:count=2:size=16:seed=0")
+    b = build_corpus("synthetic:family=layered:count=2:size=16:seed=0")
+    assert corpus_fingerprint(a) == corpus_fingerprint(b)
+    c = build_corpus("synthetic:family=layered:count=2:size=16:seed=1")
+    assert corpus_fingerprint(a) != corpus_fingerprint(c)
+    # order-sensitive (sampler state maps by index)
+    assert corpus_fingerprint(a) != corpus_fingerprint(a[::-1])
+    # cost edits change it too
+    a[0].nodes[1].flops += 1.0
+    assert corpus_fingerprint(a) != corpus_fingerprint(b)

@@ -1,0 +1,252 @@
+"""Curriculum trainer + sampler: corpus runs, recompile bounds, resume.
+
+The CI ``corpus`` smoke job runs this module on every PR so the
+sampler/bucketing path is exercised continuously, not just tier-1.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import restore_policy, save_policy
+from repro.core import (CompGraph, HSDAGConfig, extract_features,
+                        paper_platform, shared_feature_config, simulate)
+from repro.core.train import CurriculumSampler, CurriculumTrainer
+from repro.graphs import build_corpus, corpus_fingerprint
+
+from conftest import random_dag
+
+PLAT = paper_platform()
+
+
+def _cfg(**kw):
+    base = dict(num_devices=2, hidden_channel=32, max_episodes=4,
+                update_timestep=3, batch_chains=2)
+    base.update(kw)
+    return HSDAGConfig(**base)
+
+
+def _small_corpus(count=8, size=18, seed=0):
+    return build_corpus(f"synthetic:family=mixed:count={count}:size={size}"
+                        f":seed={seed}")
+
+
+# ----------------------------------------------------------------- sampler
+def test_sampler_stratified_cycles_buckets():
+    s = CurriculumSampler([[0, 1], [2], [3, 4]], graphs_per_episode=2,
+                          strategy="stratified", seed=0)
+    assert [s.sample()[0] for _ in range(6)] == [0, 1, 2, 0, 1, 2]
+
+
+def test_sampler_membership_and_replacement():
+    s = CurriculumSampler([[0, 1, 2, 3], [4]], graphs_per_episode=3,
+                          strategy="uniform", seed=1)
+    for _ in range(20):
+        bi, ids = s.sample()
+        assert set(ids) <= set(s.buckets[bi])
+        assert len(ids) == 3
+        if bi == 0:
+            assert len(set(ids)) == 3      # big enough → no replacement
+
+
+def test_sampler_plateau_boosts_stale_graphs():
+    s = CurriculumSampler([[0, 1]], graphs_per_episode=1,
+                          strategy="plateau", seed=2, plateau_patience=2,
+                          plateau_boost=50.0)
+    # graph 0 keeps improving, graph 1 is stuck
+    best = np.asarray([1.0, 1.0])
+    for ep in range(6):
+        s.observe([0, 1], best)
+        best = best * np.asarray([0.9, 1.0])
+    draws = [s.sample()[1][0] for _ in range(60)]
+    assert draws.count(1) > draws.count(0)     # stale graph dominates
+
+
+def test_sampler_state_roundtrip_continues_identically():
+    def fresh():
+        return CurriculumSampler([[0, 1, 2], [3, 4]], graphs_per_episode=2,
+                                 strategy="uniform", seed=5)
+
+    a = fresh()
+    for _ in range(4):
+        a.sample()
+    state = a.state_dict()
+    import json
+    state = json.loads(json.dumps(state))     # must survive JSON transport
+    b = fresh()
+    b.load_state_dict(state)
+    assert [a.sample() for _ in range(6)] == [b.sample() for _ in range(6)]
+
+
+def test_sampler_validation():
+    with pytest.raises(ValueError, match="strategy"):
+        CurriculumSampler([[0]], strategy="bogus")
+    with pytest.raises(ValueError):
+        CurriculumSampler([[0]], graphs_per_episode=0)
+    with pytest.raises(ValueError):
+        CurriculumSampler([[0], []])
+    s = CurriculumSampler([[0], [1]], seed=0)
+    other = CurriculumSampler([[0, 1]], seed=0)
+    with pytest.raises(ValueError, match="bucket partition"):
+        s.load_state_dict(other.state_dict())
+
+
+# ---------------------------------------------------------- corpus training
+def test_curriculum_mixed_corpus_smoke():
+    """Acceptance-shaped (scaled down for CI): a ≥12-graph mixed corpus —
+    benchmark + traced LM layer + synthetic — trains with jit recompiles
+    bounded by #buckets, and every graph greedy-decodes to a placement that
+    replays exactly on the host simulator."""
+    corpus = build_corpus(
+        "benchmark:names=resnet50;traced:archs=qwen1.5-0.5b:seq_len=16;"
+        "synthetic:family=mixed:count=10:size=20:seed=4")
+    assert len(corpus) >= 12
+    tr = CurriculumTrainer(_cfg(max_episodes=5), max_buckets=3,
+                           graphs_per_episode=3)
+    res = tr.train_corpus(corpus, platform=PLAT, rng=jax.random.PRNGKey(0))
+    assert 1 <= len(res.buckets) <= 3
+    assert res.episodes_run == 5
+    # recompile bound: one shape per bucket for the train ops, plus at most
+    # one decode shape per bucket (greedy ops carry no sim tree)
+    assert len(tr.engine.shape_keys_seen) <= 2 * len(res.buckets)
+    # every graph (sampled or not) got a greedy decode that replays exactly
+    assert np.isfinite(res.greedy_latencies).all()
+    for g, p, lat in zip(corpus, res.greedy_placements,
+                         res.greedy_latencies):
+        assert p.shape == (g.num_nodes,)
+        np.testing.assert_allclose(simulate(g, p, PLAT).latency, lat,
+                                   rtol=1e-5)
+    # sampled graphs' bests replay too
+    for i, (g, lat) in enumerate(zip(corpus, res.best_latencies)):
+        if np.isfinite(lat):
+            np.testing.assert_allclose(
+                simulate(g, res.best_placements[i], PLAT).latency, lat,
+                rtol=1e-5)
+
+
+def test_curriculum_resume_bitwise(tmp_path):
+    """3 episodes + checkpoint + 3 resumed episodes ≡ 6 straight episodes:
+    same final params (bitwise) and same cumulative bests."""
+    corpus = _small_corpus(6, 14, seed=9)
+    cfg = _cfg(max_episodes=6)
+    kw = dict(max_buckets=2, graphs_per_episode=2)
+
+    tr1 = CurriculumTrainer(cfg, **kw)
+    r1 = tr1.train_corpus(corpus, platform=PLAT, rng=jax.random.PRNGKey(7))
+
+    d = str(tmp_path / "ckpt")
+    tr2 = CurriculumTrainer(cfg, **kw)
+    tr2.train_corpus(corpus, platform=PLAT, rng=jax.random.PRNGKey(7),
+                     episodes=3, checkpoint_dir=d, checkpoint_every=1)
+    tr3 = CurriculumTrainer(cfg, **kw)
+    r3 = tr3.train_corpus(corpus, platform=PLAT, rng=jax.random.PRNGKey(7),
+                          checkpoint_dir=d, resume=True)
+    assert r3.episodes_run == 3
+    assert [h["episode"] for h in r3.history] == [3, 4, 5]
+    for a, b in zip(jax.tree.leaves(r1.params), jax.tree.leaves(r3.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(r1.best_latencies, r3.best_latencies)
+
+
+def test_curriculum_resume_bitwise_with_ema_baseline(tmp_path):
+    """The EMA baseline feeds step_weights, so its state must ride in the
+    checkpoint too (regression: a resumed use_baseline run used to restart
+    the EMA from scratch and silently diverge)."""
+    corpus = _small_corpus(4, 12, seed=11)
+    cfg = _cfg(max_episodes=4, use_baseline=True, normalize_weights=True)
+    kw = dict(max_buckets=2, graphs_per_episode=2, reward_norm="none")
+
+    tr1 = CurriculumTrainer(cfg, **kw)
+    r1 = tr1.train_corpus(corpus, platform=PLAT, rng=jax.random.PRNGKey(3))
+
+    d = str(tmp_path / "ckpt")
+    tr2 = CurriculumTrainer(cfg, **kw)
+    tr2.train_corpus(corpus, platform=PLAT, rng=jax.random.PRNGKey(3),
+                     episodes=2, checkpoint_dir=d, checkpoint_every=1)
+    tr3 = CurriculumTrainer(cfg, **kw)
+    r3 = tr3.train_corpus(corpus, platform=PLAT, rng=jax.random.PRNGKey(3),
+                          checkpoint_dir=d, resume=True)
+    for a, b in zip(jax.tree.leaves(r1.params), jax.tree.leaves(r3.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_curriculum_resume_rejects_other_corpus(tmp_path):
+    corpus = _small_corpus(4, 12, seed=1)
+    d = str(tmp_path / "ckpt")
+    tr = CurriculumTrainer(_cfg(), max_buckets=2, graphs_per_episode=2)
+    tr.train_corpus(corpus, platform=PLAT, episodes=1, checkpoint_dir=d,
+                    checkpoint_every=1)
+    other = _small_corpus(4, 12, seed=2)
+    tr2 = CurriculumTrainer(_cfg(), max_buckets=2, graphs_per_episode=2)
+    with pytest.raises(ValueError, match="fingerprint"):
+        tr2.train_corpus(other, platform=PLAT, checkpoint_dir=d,
+                         resume=True)
+    assert corpus_fingerprint(corpus) != corpus_fingerprint(other)
+
+
+# ------------------------------------------------------------- warm start
+def _trained_policy_dir(tmp_path, corpus):
+    tr = CurriculumTrainer(_cfg(max_episodes=2), max_buckets=2,
+                           graphs_per_episode=2)
+    tr.train_corpus(corpus, platform=PLAT, rng=jax.random.PRNGKey(0))
+    d = str(tmp_path / "policy")
+    tr.save_policy(d)
+    return d, tr
+
+
+def test_warm_start_restores_and_fine_tunes(tmp_path):
+    corpus = _small_corpus(5, 16, seed=3)
+    d, tr = _trained_policy_dir(tmp_path, corpus)
+    held = _small_corpus(1, 16, seed=77)
+    ft = CurriculumTrainer(_cfg(max_episodes=2), max_buckets=1,
+                           graphs_per_episode=1)
+    ft.warm_start(d)
+    res = ft.train_corpus(held, platform=PLAT, rng=jax.random.PRNGKey(1))
+    assert np.isfinite(res.best_latencies).all()
+    # the restored feature layout (not a fresh one) was used
+    assert ft.feature_config == tr.feature_config
+
+
+def test_warm_start_vocab_mismatch_names_op_types(tmp_path):
+    corpus = _small_corpus(4, 14, seed=5)
+    d, _ = _trained_policy_dir(tmp_path, corpus)
+    g = CompGraph("exotic")
+    g.add_op("a", "FancyFused", [], (1, 8), flops=100, bytes_out=32)
+    g.add_op("b", "MatMul", ["a"], (1, 8), flops=100, bytes_out=32)
+    ft = CurriculumTrainer(_cfg(), max_buckets=1, graphs_per_episode=1)
+    ft.warm_start(d)
+    with pytest.raises(ValueError) as exc:
+        ft.train_corpus([g], platform=PLAT, episodes=1)
+    assert "FancyFused" in str(exc.value)
+    assert "exotic" in str(exc.value)
+
+
+def test_restore_policy_validates_graphs(tmp_path):
+    """The checkpoint-layer hook: restore_policy(graphs=...) rejects graphs
+    outside the saved vocabulary by name."""
+    rng = np.random.default_rng(0)
+    graphs = [random_dag(rng, 8, p=0.3), random_dag(rng, 12, p=0.2)]
+    fc = shared_feature_config(graphs)
+    arrays = extract_features(graphs[0], fc)
+    from repro.core import MultiGraphTrainer
+    tr = MultiGraphTrainer(_cfg(max_episodes=1))
+    tr.train_multi(graphs, platform=PLAT, rng=jax.random.PRNGKey(0),
+                   feature_cfg=fc,
+                   arrays=[extract_features(g, fc) for g in graphs])
+    d = str(tmp_path / "p")
+    tr.save_policy(d)
+    params, fc2, _, _ = restore_policy(d, tr.params, graphs=graphs)
+    assert fc2 == fc
+    weird = CompGraph("w")
+    weird.add_op("n", "NotInVocab", [], (1, 2), flops=1, bytes_out=8)
+    with pytest.raises(ValueError, match="NotInVocab"):
+        restore_policy(d, tr.params, graphs=[weird])
+
+
+def test_warm_start_requires_feature_config(tmp_path):
+    d = str(tmp_path / "bare")
+    save_policy(d, {"w": np.zeros(3, np.float32)})      # no feature layout
+    ft = CurriculumTrainer(_cfg())
+    with pytest.raises(ValueError, match="feature_config"):
+        ft.warm_start(d)
