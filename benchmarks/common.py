@@ -7,6 +7,7 @@ episodes; the table structure is identical).
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 import time
 from typing import Callable, Dict, Tuple
@@ -14,6 +15,7 @@ from typing import Callable, Dict, Tuple
 import jax
 import numpy as np
 
+from repro.api import PlacementSession, PlacementSpec
 from repro.core import (HSDAG, HSDAGConfig, extract_features, FeatureConfig,
                         paper_platform, simulate)
 from repro.core.baselines import (BaselineConfig, PlacetoBaseline,
@@ -43,26 +45,33 @@ def run_hsdag(graph, arrays=None, feature_cfg: FeatureConfig = None,
               episodes: int = None, seed: int = 0,
               platform=None, batch_chains: int = 1,
               num_devices: int = 2) -> Tuple[np.ndarray, float, float]:
-    """→ (placement, latency_s, wall_s).
+    """→ (placement, latency_s, wall_s), through the v1 facade.
 
+    One search-mode :class:`PlacementSpec` per table row (in-process graph
+    objects ride the ``fit(graphs=/arrays=)`` escape hatch — the facade is
+    equivalence-pinned against the direct ``HSDAG.search`` path).
     ``batch_chains > 1`` switches to the batched multi-chain engine with the
     fused in-jit cost model (rewards computed device-side by ``simulate_jax``
     — no host round-trip per rollout step).
     """
     fc = feature_cfg or FeatureConfig(d_pos=16)
     arrays = arrays if arrays is not None else extract_features(graph, fc)
-    agent = HSDAG(HSDAGConfig(
-        num_devices=num_devices, max_episodes=episodes or EPISODES,
-        update_timestep=UPDATE_TIMESTEP, use_baseline=True,
-        normalize_weights=True, seed=seed, batch_chains=batch_chains))
+    feature = {k: v for k, v in dataclasses.asdict(fc).items()
+               if not k.endswith("_vocab")}
+    session = PlacementSession(PlacementSpec(
+        workload="", mode="search", feature=feature,
+        config=HSDAGConfig(
+            num_devices=num_devices, max_episodes=episodes or EPISODES,
+            update_timestep=UPDATE_TIMESTEP, use_baseline=True,
+            normalize_weights=True, seed=seed, batch_chains=batch_chains)))
     if batch_chains > 1:
-        res = agent.search(graph, arrays,
-                           platform=platform or paper_platform(),
-                           rng=jax.random.PRNGKey(seed))
+        res = session.fit(graphs=[graph], arrays=[arrays],
+                          platform=platform or paper_platform(),
+                          rng=jax.random.PRNGKey(seed))
     else:
         reward_fn, _ = reward_fn_for(graph, platform)
-        res = agent.search(graph, arrays, reward_fn,
-                           rng=jax.random.PRNGKey(seed))
+        res = session.fit(graphs=[graph], arrays=[arrays],
+                          reward_fn=reward_fn, rng=jax.random.PRNGKey(seed))
     return res.best_placement, res.best_latency, res.wall_time_s
 
 

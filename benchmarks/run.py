@@ -19,6 +19,7 @@ import table5_complexity
 import table6_throughput
 import table7_generalization
 import table8_corpus
+import table9_serving
 
 
 def _roofline_rows() -> None:
@@ -48,6 +49,7 @@ def main() -> None:
     table6_throughput.main()
     table7_generalization.main()
     table8_corpus.main()
+    table9_serving.main()
     _roofline_rows()
 
 

@@ -1,0 +1,98 @@
+"""Table 9 (repo-local): PlacementService cold vs warm serving latency.
+
+The serving hot path claim: a long-lived :class:`repro.api.PlacementService`
+bounds recompiles by *distinct bucket shapes* (request sizes round up to
+``size_granularity`` multiples before hitting the jit cache), so a stream
+of mixed-shape ``place()`` requests pays compilation once per bucket and
+then serves from the warm path (prepared-array LRU + cached executable).
+
+Rows:
+
+* ``serving_place_cold`` — mean latency of the first request of each
+  bucket shape (pays trace + compile); ``derived`` reports the recompile
+  count (``shape_keys_seen``) and the bucket shapes.
+* ``serving_place_warm`` — mean latency of every later request (cache
+  hits), with the cold/warm speedup and LRU hit counts.
+* ``serving_place_batched`` — per-request latency when the whole stream is
+  handed to ``place_many`` (per-bucket batched decodes).
+
+Env knobs: ``REPRO_BENCH_SERVE_REQUESTS`` (stream length, default 24),
+``REPRO_BENCH_EPISODES`` (training budget of the tiny warm policy).
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.api import PlacementService, PlacementSession, PlacementSpec
+from repro.core import HSDAGConfig
+from repro.graphs import build_corpus
+
+from common import EPISODES, UPDATE_TIMESTEP, emit
+
+REQUESTS = int(os.environ.get("REPRO_BENCH_SERVE_REQUESTS", "24"))
+
+# Train on one synthetic mix, serve a *different* mixed-size request stream
+# (sizes span ~3 buckets at granularity 16).
+TRAIN_WORKLOAD = "synthetic:family=mixed:count=6:size=24:seed=0"
+SERVE_WORKLOAD = ("synthetic:family=layered:count=3:size=12:seed=7;"
+                  "synthetic:family=layered:count=3:size=28:seed=8;"
+                  "synthetic:family=series_parallel:count=3:size=44:seed=9")
+
+
+def main() -> None:
+    spec = PlacementSpec(
+        workload=TRAIN_WORKLOAD, mode="corpus",
+        config=HSDAGConfig(num_devices=2, hidden_channel=32,
+                           max_episodes=min(EPISODES, 4),
+                           update_timestep=UPDATE_TIMESTEP, batch_chains=4),
+        max_buckets=2, graphs_per_episode=2)
+    session = PlacementSession(spec)
+    session.fit(rng=jax.random.PRNGKey(0))
+
+    service = PlacementService(session, batch_slots=2, size_granularity=16)
+    # The serve stream's op vocabulary must be covered by the trained
+    # layout — synthetic families share one op set, so it is.
+    pool = build_corpus(SERVE_WORKLOAD)
+    stream = [pool[i % len(pool)] for i in range(REQUESTS)]
+
+    cold_walls, warm_walls = [], []
+    shapes_before = 0
+    for g in stream:
+        t0 = time.perf_counter()
+        service.place(g)
+        wall = time.perf_counter() - t0
+        shapes_now = len(service.shape_keys_seen)
+        (cold_walls if shapes_now > shapes_before else warm_walls).append(wall)
+        shapes_before = shapes_now
+
+    recompiles = len(service.shape_keys_seen)
+    cold = float(np.mean(cold_walls))
+    warm = float(np.mean(warm_walls)) if warm_walls else float("nan")
+    buckets = sorted({service._bucket_shape(service._prepared(g))
+                      for g in pool})
+    emit("serving_place_cold", cold * 1e6,
+         f"recompiles={recompiles};bucket_shapes={len(buckets)};"
+         f"buckets={'/'.join(f'{v}v{e}e' for v, e in buckets)}")
+    emit("serving_place_warm", warm * 1e6,
+         f"speedup_vs_cold={cold/warm:.1f}x;requests={REQUESTS};"
+         f"cache_hits={service.cache_hits};"
+         f"cache_misses={service.cache_misses}")
+
+    t0 = time.perf_counter()
+    service.place_many(stream)
+    batched = (time.perf_counter() - t0) / len(stream)
+    emit("serving_place_batched", batched * 1e6,
+         f"batch_slots={service.batch_slots};"
+         f"vs_warm={warm/batched:.1f}x;"
+         f"recompiles_total={len(service.shape_keys_seen)}")
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    print("name,us_per_call,derived")
+    main()

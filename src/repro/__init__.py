@@ -4,9 +4,53 @@
      Computation Graphs" (HSDAG, NeurIPS 2024)
 
 plus the multi-pod training/serving substrate it plugs into.
-Subpackages: core (paper algorithm), graphs (benchmark computation graphs),
-models (LM substrate), kernels (Pallas), optim, data, checkpoint,
-distributed, configs, launch.
+Subpackages: api (stable v1 surface), core (paper algorithm), graphs
+(benchmark computation graphs + workload corpus registry), models (LM
+substrate), kernels (Pallas), optim, data, checkpoint, distributed,
+configs, launch.
+
+The v1 public surface re-exports here (lazily, so ``import repro`` stays
+cheap until the API is touched)::
+
+    from repro import PlacementSpec, PlacementSession, PlacementService
 """
 
 __version__ = "1.0.0"
+
+# name → defining module of the stable v1 surface (PEP 562 lazy re-export:
+# touching one of these imports jax; plain `import repro` does not).
+_V1_SURFACE = {
+    "PlacementSpec": "api",
+    "PlacementSession": "api",
+    "PlacementService": "api",
+    "register_platform": "api",
+    "platform_names": "api",
+    "build_platform": "api",
+    "SPEC_VERSION": "api",
+    "HSDAGConfig": "core",
+    "FeatureConfig": "core",
+    "paper_platform": "core",
+    "tpu_stage_platform": "core",
+    "simulate": "core",
+    "build_corpus": "graphs",
+    "parse_corpus_spec": "graphs",
+    "corpus_fingerprint": "graphs",
+    "register_workload": "graphs",
+    "workload_names": "graphs",
+}
+
+__all__ = ["__version__"] + sorted(_V1_SURFACE)
+
+
+def __getattr__(name):
+    if name in _V1_SURFACE:
+        import importlib
+        module = importlib.import_module(f".{_V1_SURFACE[name]}", __name__)
+        value = getattr(module, name)
+        globals()[name] = value       # cache: next access skips the import
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

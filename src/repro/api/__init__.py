@@ -1,0 +1,34 @@
+"""repro.api — the stable v1 public API.
+
+One declarative document (:class:`PlacementSpec`), one session object
+(:class:`PlacementSession`) and one warm server (:class:`PlacementService`)
+in front of the engine/workload/trainer registries::
+
+    from repro.api import PlacementSpec, PlacementSession, PlacementService
+    from repro.core import HSDAGConfig
+
+    spec = PlacementSpec(
+        workload="benchmark;synthetic:family=mixed:count=9:size=30:seed=0",
+        mode="corpus", config=HSDAGConfig(batch_chains=8))
+    session = PlacementSession(spec)
+    session.fit()                        # dispatches to the right trainer
+    session.save("ckpt/policy")          # params + features + spec + hash
+
+    service = PlacementService("ckpt/policy")
+    placement = service.place(new_graph)  # warm: cached arrays, no retrace
+
+The facade is equivalence-pinned: ``fit`` reproduces ``HSDAG.search`` /
+``MultiGraphTrainer.train`` / ``CurriculumTrainer.train_corpus``
+bit-for-bit (``tests/test_api.py``), so everything the PR-1..4 suites
+guarantee about the engines holds through this surface.  See docs/API.md.
+"""
+from .service import PlacementService
+from .session import PlacementSession
+from .spec import (MODES, SPEC_VERSION, PlacementSpec, build_platform,
+                   platform_names, register_platform)
+
+__all__ = [
+    "PlacementSpec", "PlacementSession", "PlacementService",
+    "SPEC_VERSION", "MODES",
+    "register_platform", "platform_names", "build_platform",
+]

@@ -1,0 +1,165 @@
+"""PlacementService — a long-lived, warm placement server.
+
+A fitted :class:`~repro.api.PlacementSession` can ``place()`` any graph,
+but each call re-extracts features, re-pads, and re-traces a jit for that
+graph's exact shape — fine for a notebook, wrong for a serving hot path.
+The service keeps everything warm:
+
+* **Prepared-array LRU** — per-graph :class:`~repro.core.GraphArrays`
+  keyed by content fingerprint; a repeat request for the same graph skips
+  feature extraction entirely (``cache_hits``/``cache_misses`` count it).
+* **Bucket-shaped compile cache** — request shapes are rounded up to
+  ``size_granularity`` multiples (nodes and edges) and decoded through a
+  :class:`~repro.core.DynamicRolloutEngine`, whose jit cache keys on the
+  padded operand shapes.  Recompiles are therefore bounded by the number
+  of *distinct bucket shapes* in the request stream, not the number of
+  distinct graphs (``shape_keys_seen`` exposes the bound, as in the PR-4
+  curriculum trainer).
+* **Batched decode** — :meth:`place_many` packs concurrent requests into
+  fixed ``(batch_slots,)``-wide greedy decodes (one device call per chunk,
+  short chunks padded with repeats), so a burst of same-bucket requests
+  costs one compiled call, not N.
+
+Padding is free correctness-wise: pad slots are masked throughout the
+encoder/GPN/policy (the PR-2 contract), so a bucket-padded greedy decode is
+bitwise the unpadded one — pinned in ``tests/test_api.py``.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.costmodel import simulate
+from ..core.features import GraphArrays, batch_graph_arrays
+from ..core.graph import CompGraph
+from ..core.sim.rollout import DynamicRolloutEngine, GraphOperands
+from ..graphs.workloads import corpus_fingerprint
+from .session import PlacementSession
+
+__all__ = ["PlacementService"]
+
+
+def _round_up(n: int, granularity: int) -> int:
+    return max(granularity, ((int(n) + granularity - 1) // granularity)
+               * granularity)
+
+
+class PlacementService:
+    """See module docstring.  Example::
+
+        service = PlacementService("ckpt/corpus_policy")   # or a session
+        placement = service.place(graph)                   # warm after 1st
+        placements = service.place_many(burst_of_graphs)   # batched decode
+        service.stats()   # hits/misses/recompile bound
+    """
+
+    def __init__(self, session: Union[PlacementSession, str], *,
+                 cache_size: int = 64, batch_slots: int = 4,
+                 size_granularity: int = 16):
+        if isinstance(session, str):
+            session = PlacementSession.load(session)
+        session._require_fit()
+        if session.feature_config is None:
+            raise ValueError("session carries no feature layout — the "
+                             "service cannot featurize requests")
+        if batch_slots < 1 or cache_size < 1 or size_granularity < 1:
+            raise ValueError("batch_slots, cache_size and size_granularity "
+                             "must all be >= 1")
+        self.session = session
+        self.batch_slots = int(batch_slots)
+        self.size_granularity = int(size_granularity)
+        self._cache_size = int(cache_size)
+        # jit cache keys on operand shapes → recompiles bounded by distinct
+        # bucket shapes; the engine records them for the bound assertion.
+        self._engine = DynamicRolloutEngine(
+            session.trainer._step, session.spec.resolved_config())
+        self._arrays: "OrderedDict[str, GraphArrays]" = OrderedDict()
+        self._keys = jnp.stack(
+            [jax.random.fold_in(jax.random.PRNGKey(0), j)
+             for j in range(self.batch_slots)])
+        self.cache_hits = 0
+        self.cache_misses = 0
+        self.requests = 0
+
+    # ------------------------------------------------------------- prep LRU
+    def _prepared(self, graph: CompGraph) -> GraphArrays:
+        key = corpus_fingerprint([graph])
+        arrays = self._arrays.get(key)
+        if arrays is not None:
+            self.cache_hits += 1
+            self._arrays.move_to_end(key)
+            return arrays
+        self.cache_misses += 1
+        arrays = self.session.featurize(graph)
+        self._arrays[key] = arrays
+        while len(self._arrays) > self._cache_size:
+            self._arrays.popitem(last=False)
+        return arrays
+
+    def _bucket_shape(self, arrays: GraphArrays) -> Tuple[int, int]:
+        g = self.size_granularity
+        return (_round_up(arrays.num_nodes, g),
+                _round_up(max(1, arrays.edges.shape[0]), g))
+
+    # --------------------------------------------------------------- serving
+    def place(self, graph: CompGraph) -> np.ndarray:
+        """Greedy-decode one placement (warm path: no extract, no retrace)."""
+        return self.place_many([graph])[0]
+
+    def evaluate(self, graph: CompGraph) -> Tuple[np.ndarray, float]:
+        """→ (placement, simulated latency) on the session platform."""
+        p = self.place(graph)
+        return p, simulate(graph, p, self.session.platform).latency
+
+    def place_many(self, graphs: Sequence[CompGraph]) -> List[np.ndarray]:
+        """Batch a burst of requests into per-bucket ``(G,)`` decodes.
+
+        Requests are grouped by bucket shape and decoded ``batch_slots`` at
+        a time; response order matches the request order.
+        """
+        graphs = list(graphs)
+        self.requests += len(graphs)
+        entries = [(i, self._prepared(g)) for i, g in enumerate(graphs)]
+        groups: Dict[Tuple[int, int], List[Tuple[int, GraphArrays]]] = {}
+        for i, arrays in entries:
+            groups.setdefault(self._bucket_shape(arrays), []).append(
+                (i, arrays))
+        out: List[Optional[np.ndarray]] = [None] * len(graphs)
+        for (vb, eb), members in groups.items():
+            for lo in range(0, len(members), self.batch_slots):
+                chunk = members[lo:lo + self.batch_slots]
+                # short chunks pad with repeats of the first request so the
+                # decode always traces at (batch_slots,) — G is part of the
+                # jit shape key and must not vary per burst size
+                padded = [a for _, a in chunk]
+                padded += [padded[0]] * (self.batch_slots - len(chunk))
+                gb = batch_graph_arrays(padded, v_max=vb, e_max=eb)
+                ops = GraphOperands(
+                    x0=jnp.asarray(gb.x), adj=jnp.asarray(gb.adj),
+                    edges=jnp.asarray(gb.edges),
+                    node_mask=jnp.asarray(gb.node_mask),
+                    edge_mask=jnp.asarray(gb.edge_mask), sim=None)
+                fines, _ = self._engine.greedy_decode(
+                    ops, self.session.trainer.params, self._keys)
+                fines = np.asarray(fines)
+                for k, (i, arrays) in enumerate(chunk):
+                    out[i] = fines[k, :arrays.num_nodes].astype(np.int64)
+        return out
+
+    # ------------------------------------------------------------ telemetry
+    @property
+    def shape_keys_seen(self) -> set:
+        """Distinct padded operand shapes decoded so far — the compile
+        bound (one trace per shape, however many graphs stream through)."""
+        return self._engine.shape_keys_seen
+
+    def stats(self) -> Dict[str, int]:
+        return {"requests": self.requests,
+                "cache_hits": self.cache_hits,
+                "cache_misses": self.cache_misses,
+                "cached_graphs": len(self._arrays),
+                "shape_keys_seen": len(self.shape_keys_seen)}

@@ -36,8 +36,9 @@ wrapper over it.
 from __future__ import annotations
 
 import dataclasses
+import json
 import time
-from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
+from typing import Callable, Dict, List, NamedTuple, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -112,6 +113,37 @@ class HSDAGConfig:
 
     def __post_init__(self):
         _validate_engine(self.engine)
+
+    # ----------------------------------------------------------- (de)serialize
+    def to_json(self) -> str:
+        """Canonical JSON form (sorted keys) — ``from_json`` round-trips it.
+
+        The serialization is what :class:`repro.api.PlacementSpec` embeds
+        (and hashes) to name a run, so it must be deterministic: same
+        config → same string → same spec hash.
+        """
+        return json.dumps(dataclasses.asdict(self), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, doc: Union[str, Dict]) -> "HSDAGConfig":
+        """Inverse of :meth:`to_json` (also accepts the dict form).
+
+        Unknown fields are rejected by name — a typo'd knob in a spec
+        document must fail loudly, not silently train with defaults.  Field
+        values pass through ``__post_init__``, so e.g. an unregistered
+        ``engine`` raises listing the registered backends.
+        """
+        data = json.loads(doc) if isinstance(doc, str) else dict(doc)
+        if not isinstance(data, dict):
+            raise ValueError(
+                f"HSDAGConfig JSON must be an object, got {type(data).__name__}")
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(data) - known)
+        if unknown:
+            raise ValueError(
+                f"unknown HSDAGConfig fields {unknown}; known fields: "
+                f"{sorted(known)}")
+        return cls(**data)
 
 
 class StepOutput(NamedTuple):

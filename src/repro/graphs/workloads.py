@@ -267,24 +267,39 @@ class CorpusSpec:
 
 
 def parse_corpus_spec(spec: str) -> CorpusSpec:
-    """Parse the ``provider:key=val:key=val;provider:...`` string form."""
+    """Parse the ``provider:key=val:key=val;provider:...`` string form.
+
+    Malformed segments fail loudly: an unknown provider or a bad
+    ``key=value`` token raises ``ValueError`` naming the offending segment
+    and its position in the spec, so a typo deep inside a long corpus
+    string is locatable without bisecting it.
+    """
     entries = []
-    for part in str(spec).split(";"):
+    for pos, part in enumerate(str(spec).split(";")):
         part = part.strip()
         if not part:
             continue
         toks = part.split(":")
         name = toks[0].strip()
-        get_workload(name)           # fail fast on unknown providers
+        try:
+            get_workload(name)       # fail fast on unknown providers
+        except ValueError as e:
+            raise ValueError(
+                f"corpus spec segment {pos} ({part!r}): {e}") from None
         params = []
         for tok in toks[1:]:
             if "=" not in tok:
                 raise ValueError(
-                    f"malformed corpus spec token {tok!r} in {part!r} "
-                    f"(expected key=value)")
+                    f"corpus spec segment {pos} ({part!r}): malformed "
+                    f"token {tok!r} (expected key=value)")
             k, v = tok.split("=", 1)
+            k = k.strip()
+            if not k:
+                raise ValueError(
+                    f"corpus spec segment {pos} ({part!r}): malformed "
+                    f"token {tok!r} (empty key)")
             vv: object = [s for s in v.split("+")] if "+" in v else v
-            params.append((k.strip(), vv))
+            params.append((k, vv))
         entries.append((name, tuple(params)))
     if not entries:
         raise ValueError(f"empty corpus spec {spec!r}")

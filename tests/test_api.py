@@ -1,0 +1,326 @@
+"""v1 API facade: spec round-trips, bit-for-bit trainer equivalence, warm
+serving cache bounds.
+
+The acceptance contract of PR 5: ``PlacementSession.fit`` adds *no*
+numerics over the direct trainer paths (same seeds → same final parameter
+trees, element-for-element), a spec document survives
+``from_json(to_json(spec))`` with an identical hash, and
+``PlacementService`` recompiles are bounded by distinct bucket shapes.
+The CI ``api`` job runs this module with DeprecationWarnings promoted to
+errors, so no in-repo caller may traverse a shimmed path.
+"""
+import json
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (PlacementService, PlacementSession, PlacementSpec,
+                       build_platform, platform_names)
+from repro.checkpoint import policy_manifest
+from repro.core import (HSDAG, HSDAGConfig, FeatureConfig, MultiGraphTrainer,
+                        extract_features, paper_platform, simulate)
+from repro.core.train import CurriculumTrainer
+from repro.graphs import build_corpus, parse_corpus_spec
+
+from conftest import make_diamond
+
+PLAT = paper_platform()
+
+
+def _cfg(**kw):
+    base = dict(num_devices=2, hidden_channel=16, max_episodes=2,
+                update_timestep=3, batch_chains=2)
+    base.update(kw)
+    return HSDAGConfig(**base)
+
+
+def _assert_trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    assert len(la) == len(lb)
+    for x, y in zip(la, lb):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ------------------------------------------------------- HSDAGConfig JSON
+def test_config_json_roundtrip():
+    cfg = _cfg(engine="scan", entropy_coef=0.01, use_baseline=True)
+    assert HSDAGConfig.from_json(cfg.to_json()) == cfg
+    # canonical: same config → same string
+    assert cfg.to_json() == HSDAGConfig.from_json(cfg.to_json()).to_json()
+
+
+def test_config_from_json_rejects_unknown_fields():
+    with pytest.raises(ValueError, match=r"unknown HSDAGConfig fields "
+                                         r"\['bogus'\]"):
+        HSDAGConfig.from_json('{"max_episodes": 3, "bogus": 1}')
+
+
+def test_config_from_json_validates_engine():
+    with pytest.raises(ValueError, match="unknown engine 'warp'.*scan"):
+        HSDAGConfig.from_json('{"engine": "warp"}')
+
+
+# --------------------------------------------------------- PlacementSpec
+def test_spec_json_roundtrip_identical_spec_and_hash():
+    spec = PlacementSpec(
+        workload="benchmark:names=bert_base;synthetic:count=2:size=10",
+        mode="corpus", config=_cfg(engine="scan"), episodes=7,
+        feature={"d_pos": 8, "use_node_id": False},
+        max_buckets=2, graphs_per_episode=3, sampler="plateau",
+        checkpoint_dir="ckpt/x", checkpoint_every=2)
+    back = PlacementSpec.from_json(spec.to_json())
+    assert back == spec
+    assert back.spec_hash() == spec.spec_hash()
+    doc = json.loads(spec.to_json())
+    assert doc["version"] == 1
+    # the config rides along as a nested document
+    assert doc["config"]["engine"] == "scan"
+
+
+def test_spec_hash_tracks_content():
+    a = PlacementSpec(workload="benchmark", config=_cfg())
+    b = PlacementSpec(workload="benchmark", config=_cfg(seed=1))
+    assert a.spec_hash() != b.spec_hash()
+    # mapping insertion order must not change the canonical form
+    c = PlacementSpec(workload="benchmark", config=_cfg(),
+                      feature={"use_node_id": True, "d_pos": 8})
+    d = PlacementSpec(workload="benchmark", config=_cfg(),
+                      feature={"d_pos": 8, "use_node_id": True})
+    assert c.spec_hash() == d.spec_hash()
+
+
+def test_spec_validation():
+    assert "paper" in platform_names()
+    with pytest.raises(ValueError, match="unknown mode"):
+        PlacementSpec(workload="benchmark", mode="serve")
+    with pytest.raises(ValueError, match="registered platforms"):
+        PlacementSpec(workload="benchmark", platform="laptop")
+    with pytest.raises(ValueError, match="segment 1"):
+        PlacementSpec(workload="benchmark;warp:count=2")
+    with pytest.raises(ValueError, match="unknown feature fields"):
+        PlacementSpec(workload="benchmark", feature={"op_vocab": ["x"]})
+    with pytest.raises(ValueError, match="unknown sampler"):
+        PlacementSpec(workload="benchmark", sampler="random")
+    with pytest.raises(ValueError, match="only apply to mode='corpus'"):
+        PlacementSpec(workload="benchmark", mode="search",
+                      warm_start="ckpt/x")
+    with pytest.raises(ValueError, match="unknown PlacementSpec fields"):
+        PlacementSpec.from_json('{"workload": "benchmark", "modes": "x"}')
+    with pytest.raises(ValueError, match="version"):
+        PlacementSpec.from_json('{"workload": "benchmark", "version": 9}')
+
+
+def test_parse_corpus_spec_names_segment_and_position():
+    # satellite regression: malformed segments name the segment + position
+    with pytest.raises(ValueError, match=r"segment 1 \('warp:count=2'\).*"
+                                         r"unknown workload provider"):
+        parse_corpus_spec("benchmark;warp:count=2")
+    with pytest.raises(ValueError, match=r"segment 0.*malformed token "
+                                         r"'oops'"):
+        parse_corpus_spec("synthetic:oops;benchmark")
+    with pytest.raises(ValueError, match=r"segment 2.*empty key"):
+        parse_corpus_spec("benchmark;synthetic:count=1;lm:=3")
+
+
+# ------------------------------------------------- facade fit equivalence
+def test_fit_search_matches_hsdag_search_bit_for_bit():
+    wl = "synthetic:family=layered:count=1:size=10:seed=5"
+    cfg = _cfg(max_episodes=3, update_timestep=4)
+    g = build_corpus(wl)[0]
+    direct = HSDAG(cfg).search(g, extract_features(g, FeatureConfig()),
+                               platform=PLAT,
+                               rng=jax.random.PRNGKey(cfg.seed))
+    res = PlacementSession(PlacementSpec(workload=wl, mode="search",
+                                         config=cfg)).fit()
+    assert [h["best_latency"] for h in res.history] == \
+        [h["best_latency"] for h in direct.history]
+    assert [h["mean_reward"] for h in res.history] == \
+        [h["mean_reward"] for h in direct.history]
+    np.testing.assert_array_equal(res.best_placement, direct.best_placement)
+    assert res.best_latency == direct.best_latency
+    _assert_trees_equal(res.params, direct.params)
+
+
+def test_fit_search_explicit_graphs_and_reward_fn(diamond):
+    """The in-process escape hatch (benchmark drivers) stays equivalent,
+    including the scalar host-reward_fn loop."""
+    cfg = _cfg(batch_chains=1)
+    arrays = extract_features(diamond, FeatureConfig(d_pos=8))
+
+    def reward_fn(p):
+        r = simulate(diamond, p, PLAT)
+        return r.reward, r.latency
+
+    direct = HSDAG(cfg).search(diamond, arrays, reward_fn,
+                               rng=jax.random.PRNGKey(cfg.seed))
+    session = PlacementSession(PlacementSpec(workload="", mode="search",
+                                             config=cfg,
+                                             feature={"d_pos": 8}))
+    res = session.fit(graphs=[diamond], arrays=[arrays],
+                      reward_fn=reward_fn)
+    np.testing.assert_array_equal(res.best_placement, direct.best_placement)
+    _assert_trees_equal(res.params, direct.params)
+
+
+def test_fit_multi_matches_train_multi_bit_for_bit():
+    wl = "synthetic:family=layered:count=2:size=12:seed=2"
+    cfg = _cfg()
+    graphs = build_corpus(wl)
+    direct = MultiGraphTrainer(cfg).train(graphs, platform=PLAT,
+                                          rng=jax.random.PRNGKey(cfg.seed))
+    res = PlacementSession(PlacementSpec(workload=wl, mode="multi",
+                                         config=cfg)).fit()
+    np.testing.assert_array_equal(res.best_latencies, direct.best_latencies)
+    np.testing.assert_array_equal(res.greedy_latencies,
+                                  direct.greedy_latencies)
+    _assert_trees_equal(res.params, direct.params)
+
+
+def test_fit_corpus_matches_train_corpus_bit_for_bit():
+    wl = "synthetic:family=mixed:count=5:size=14:seed=3"
+    cfg = _cfg()
+    graphs = build_corpus(wl)
+    direct = CurriculumTrainer(
+        cfg, max_buckets=2, graphs_per_episode=2,
+        sampler_strategy="stratified").train_corpus(
+            graphs, platform=PLAT, rng=jax.random.PRNGKey(cfg.seed))
+    res = PlacementSession(PlacementSpec(
+        workload=wl, mode="corpus", config=cfg,
+        max_buckets=2, graphs_per_episode=2)).fit()
+    np.testing.assert_array_equal(res.best_latencies, direct.best_latencies)
+    np.testing.assert_array_equal(res.greedy_latencies,
+                                  direct.greedy_latencies)
+    _assert_trees_equal(res.params, direct.params)
+
+
+def test_fit_episodes_override_and_errors():
+    wl = "synthetic:family=layered:count=2:size=10:seed=0"
+    spec = PlacementSpec(workload=wl, mode="multi", config=_cfg(),
+                         episodes=1)
+    res = PlacementSession(spec).fit()
+    assert len(res.history) == 1
+    with pytest.raises(ValueError, match="exactly one graph"):
+        PlacementSession(PlacementSpec(workload=wl, mode="search",
+                                       config=_cfg())).fit()
+    with pytest.raises(ValueError, match="reward_fn= only applies"):
+        PlacementSession(PlacementSpec(workload=wl, mode="multi",
+                                       config=_cfg())).fit(
+            reward_fn=lambda p: (0.0, 0.0))
+    with pytest.raises(ValueError, match="no spec"):
+        PlacementSession().fit()
+    with pytest.raises(ValueError, match="workload is empty"):
+        PlacementSession(PlacementSpec(workload="", config=_cfg())).fit()
+
+
+# -------------------------------------------------- session save/load/place
+def test_session_save_load_place_roundtrip(tmp_path):
+    wl = "synthetic:family=layered:count=2:size=12:seed=4"
+    spec = PlacementSpec(workload=wl, mode="multi", config=_cfg())
+    session = PlacementSession(spec)
+    session.fit()
+    g = session.graphs[0]
+    p = session.place(g)
+    d = str(tmp_path / "policy")
+    session.save(d)
+
+    man = policy_manifest(d)
+    assert man["spec_hash"] == spec.spec_hash()
+    assert man["corpus_fingerprint"]
+    assert PlacementSpec.from_json(man["placement_spec"]) == spec
+
+    restored = PlacementSession.load(d)
+    assert restored.spec == spec
+    _assert_trees_equal(restored.params, session.params)
+    np.testing.assert_array_equal(restored.place(g), p)
+    # evaluate replays on the spec-named platform
+    p2, lat = restored.evaluate(g)
+    np.testing.assert_array_equal(p2, p)
+    assert lat == simulate(g, p, PLAT).latency
+
+
+def test_session_place_validates_vocab():
+    wl = "synthetic:family=layered:count=2:size=10:seed=1"
+    session = PlacementSession(PlacementSpec(workload=wl, mode="multi",
+                                             config=_cfg(max_episodes=1)))
+    session.fit()
+    # an op type absent from the trained vocabulary → place() must raise
+    # by name, not silently encode an all-zero one-hot column
+    from repro.core import CompGraph
+    g = CompGraph("oov")
+    g.add_op("in", "Parameter", output_shape=(1, 4), flops=0, bytes_out=16)
+    g.add_op("sm", "Softmax", ["in"], (1, 4), flops=10, bytes_out=16)
+    with pytest.raises(ValueError, match="Softmax"):
+        session.place(g)
+
+
+# ----------------------------------------------------------- the service
+def test_service_equivalence_cache_and_recompile_bound(tmp_path):
+    wl = "synthetic:family=mixed:count=6:size=14:seed=6"
+    session = PlacementSession(PlacementSpec(
+        workload=wl, mode="corpus", config=_cfg(),
+        max_buckets=2, graphs_per_episode=2))
+    session.fit()
+    d = str(tmp_path / "policy")
+    session.save(d)
+
+    service = PlacementService(d, batch_slots=2, size_granularity=32)
+    # load() does NOT rebuild the training corpus (cheap warm start);
+    # requests are validated per graph instead
+    assert service.session.graphs == []
+    graphs = session.graphs
+    # served placements match the session's strict greedy decode exactly
+    for g in graphs:
+        np.testing.assert_array_equal(service.place(g), session.place(g))
+
+    # recompiles bounded by distinct bucket shapes, not by #graphs
+    buckets = {service._bucket_shape(service._prepared(g)) for g in graphs}
+    assert len(service.shape_keys_seen) <= len(buckets)
+
+    # the warm path: repeat mixed-shape stream adds no shapes, hits cache
+    shapes_before = len(service.shape_keys_seen)
+    hits_before = service.cache_hits
+    stream = [graphs[i % len(graphs)] for i in range(3 * len(graphs))]
+    placements = service.place_many(stream)
+    assert len(service.shape_keys_seen) == shapes_before
+    assert service.cache_hits >= hits_before + len(stream) - len(graphs)
+    for g, p in zip(stream, placements):
+        assert p.shape == (g.num_nodes,)
+    np.testing.assert_array_equal(placements[0],
+                                  placements[len(graphs)])
+
+    stats = service.stats()
+    assert stats["shape_keys_seen"] == shapes_before
+    assert stats["requests"] == len(graphs) + len(stream)
+
+
+def test_service_lru_evicts_beyond_capacity():
+    wl = "synthetic:family=layered:count=4:size=10:seed=9"
+    session = PlacementSession(PlacementSpec(workload=wl, mode="multi",
+                                             config=_cfg(max_episodes=1)))
+    session.fit()
+    service = PlacementService(session, cache_size=2, batch_slots=1,
+                               size_granularity=32)
+    for g in session.graphs:
+        service.place(g)
+    assert service.stats()["cached_graphs"] == 2
+    with pytest.raises(ValueError):
+        PlacementService(session, cache_size=0)
+
+
+# ------------------------------------------------------- deprecation guard
+def test_facade_paths_emit_no_deprecation_warnings():
+    """CI satellite: the in-repo default paths must never traverse a
+    shimmed (deprecated) entry point."""
+    wl = "synthetic:family=layered:count=2:size=10:seed=8"
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        session = PlacementSession(PlacementSpec(
+            workload=wl, mode="multi", config=_cfg(max_episodes=1)))
+        session.fit()
+        session.place(session.graphs[0])
+    deprecations = [w for w in caught
+                    if issubclass(w.category, DeprecationWarning)
+                    and "repro" in str(w.filename)]
+    assert not deprecations, [str(w.message) for w in deprecations]
