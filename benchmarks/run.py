@@ -20,6 +20,7 @@ import table6_throughput
 import table7_generalization
 import table8_corpus
 import table9_serving
+import table10_sharded
 
 
 def _roofline_rows() -> None:
@@ -50,6 +51,7 @@ def main() -> None:
     table7_generalization.main()
     table8_corpus.main()
     table9_serving.main()
+    table10_sharded.main()
     _roofline_rows()
 
 

@@ -77,7 +77,9 @@ def build_spec(args) -> PlacementSpec:
                           if args.mode == "corpus" and args.checkpoint
                           else 0),
         warm_start=(args.warm_start or None
-                    if args.mode == "corpus" else None))
+                    if args.mode == "corpus" else None),
+        mesh=([int(x) for x in args.mesh.split("x")] if args.mesh else None),
+        stream=bool(args.stream))
 
 
 def report_search(session: PlacementSession, res) -> None:
@@ -242,6 +244,13 @@ def main():
     ap.add_argument("--checkpoint", default="",
                     help="directory to save the trained policy (+ run state "
                          "in corpus mode)")
+    ap.add_argument("--mesh", default="",
+                    help="with --mode corpus: GxB device-mesh factorization "
+                         "for sharded rollouts, e.g. 2x4 (needs matching "
+                         "XLA_FLAGS=--xla_force_host_platform_device_count)")
+    ap.add_argument("--stream", action="store_true",
+                    help="with --mode corpus: build the workload as a "
+                         "streaming corpus (lazy graphs behind an LRU)")
     # ---- deprecated pre-v1 spellings (shims over --mode/--workload) ----
     ap.add_argument("--multi-graph", action="store_true",
                     help="DEPRECATED: use --mode multi")
@@ -259,6 +268,10 @@ def main():
         args.mode = "multi"
     if args.warm_start and args.mode != "corpus":
         ap.error("--warm-start requires --mode corpus")
+    if (args.mesh or args.stream) and args.mode != "corpus":
+        ap.error("--mesh/--stream require --mode corpus")
+    if args.mesh and not all(p.isdigit() for p in args.mesh.split("x")):
+        ap.error(f"--mesh wants GxB (e.g. 2x4), got {args.mesh!r}")
     run_spec(args)
 
 

@@ -36,7 +36,8 @@ from ..core.features import (FeatureConfig, GraphArrays, check_feature_compat,
 from ..core.graph import CompGraph
 from ..core.hsdag import HSDAG, MultiGraphTrainer
 from ..core.train.curriculum import CurriculumTrainer
-from ..graphs.workloads import build_corpus, corpus_fingerprint
+from ..graphs.workloads import (StreamingCorpus, build_corpus,
+                                corpus_fingerprint)
 from .spec import PlacementSpec, build_platform
 
 __all__ = ["PlacementSession"]
@@ -99,8 +100,14 @@ class PlacementSession:
                 raise ValueError(
                     "spec.workload is empty — pass graphs= explicitly or "
                     "give the spec a corpus spec string")
-            graphs = build_corpus(spec.workload)
-        graphs = list(graphs)
+            graphs = build_corpus(spec.workload,
+                                  stream=True if spec.stream else None)
+        if not isinstance(graphs, StreamingCorpus):
+            graphs = list(graphs)
+        elif spec.mode != "corpus":
+            raise ValueError(
+                f"a streaming corpus only applies to mode='corpus' (got "
+                f"mode={spec.mode!r}) — search/multi need dense graphs")
         if arrays is not None and len(arrays) != len(graphs):
             raise ValueError(f"got {len(arrays)} arrays for {len(graphs)} "
                              f"graphs")
@@ -152,11 +159,15 @@ class PlacementSession:
                 max_buckets=spec.max_buckets,
                 graphs_per_episode=spec.graphs_per_episode,
                 sampler_strategy=spec.sampler,
-                plateau_patience=spec.plateau_patience)
+                plateau_patience=spec.plateau_patience,
+                mesh_shape=tuple(spec.mesh) if spec.mesh else None)
             if spec.warm_start:
                 trainer.warm_start(spec.warm_start)
             elif spec.feature:
-                trainer.feature_config = shared_feature_config(graphs,
+                vocab_src = (graphs.meta
+                             if isinstance(graphs, StreamingCorpus)
+                             else graphs)
+                trainer.feature_config = shared_feature_config(vocab_src,
                                                                base=base)
             result = trainer.train_corpus(
                 graphs, platform=self.platform, rng=rng, verbose=verbose,
@@ -254,7 +265,8 @@ class PlacementSession:
                 max_buckets=spec.max_buckets,
                 graphs_per_episode=spec.graphs_per_episode,
                 sampler_strategy=spec.sampler,
-                plateau_patience=spec.plateau_patience)
+                plateau_patience=spec.plateau_patience,
+                mesh_shape=tuple(spec.mesh) if spec.mesh else None)
         from ..checkpoint import policy_feature_config
         fc = policy_feature_config(directory, step)
         if fc is None:

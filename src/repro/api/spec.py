@@ -122,6 +122,15 @@ class PlacementSpec:
     checkpoint_every: int = 0
     #: path of a ``save_policy`` checkpoint to fine-tune from (corpus mode).
     warm_start: Optional[str] = None
+    #: ``[graphs, chains]`` device-mesh factorization for the sharded
+    #: rollout engine (corpus mode); ``None`` = unsharded.  ``[1, 1]``
+    #: trains bit-for-bit identically to ``None``.
+    mesh: Optional[List[int]] = None
+    #: build the workload as a :class:`~repro.graphs.StreamingCorpus`
+    #: (corpus mode) — graphs materialize lazily behind an LRU instead of
+    #: as one dense list.  A ``stream:``/``eager:`` marker inside
+    #: ``workload`` must agree with this flag.
+    stream: bool = False
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -139,7 +148,11 @@ class PlacementSpec:
                 f"config must be an HSDAGConfig (or its JSON/dict form), "
                 f"got {type(self.config).__name__}")
         if self.workload:
-            parse_corpus_spec(self.workload)   # segment-level validation
+            cspec = parse_corpus_spec(self.workload)  # segment validation
+            if self.stream and cspec.mode == "eager":
+                raise ValueError(
+                    f"stream=True contradicts the workload's 'eager' "
+                    f"marker ({self.workload!r}) — drop one of them")
         unknown = sorted(set(self.feature) - set(_FEATURE_FIELDS))
         if unknown:
             raise ValueError(
@@ -154,11 +167,22 @@ class PlacementSpec:
                              f"one of {_SAMPLERS}")
         if self.episodes is not None and self.episodes < 1:
             raise ValueError("episodes must be >= 1 when set")
+        if self.mesh is not None:
+            m = list(self.mesh)
+            if len(m) != 2 or not all(
+                    isinstance(v, int) and not isinstance(v, bool) and v >= 1
+                    for v in m):
+                raise ValueError(
+                    f"mesh must be two positive ints [graphs, chains], "
+                    f"got {self.mesh!r}")
+            object.__setattr__(self, "mesh", m)
         if self.mode != "corpus":
             bad = [k for k, v in (("warm_start", self.warm_start),
                                   ("checkpoint_dir", self.checkpoint_dir),
                                   ("checkpoint_every",
-                                   self.checkpoint_every or None)) if v]
+                                   self.checkpoint_every or None),
+                                  ("mesh", self.mesh),
+                                  ("stream", self.stream or None)) if v]
             if bad:
                 raise ValueError(
                     f"{bad} only apply to mode='corpus' (got "

@@ -58,14 +58,16 @@ from .level import LevelBackend, LevelSim
 from .pipeline import RewardPipeline
 from .reference import RefSim, ReferenceBackend
 from .rollout import (DynamicRolloutEngine, GraphOperands, RolloutEngine,
-                      split_multi_keys)
+                      build_window_fns, split_multi_keys)
 from .scan import ScanBackend, ScanSim
+from .sharded import ShardedRolloutEngine, make_rollout_mesh
 
 __all__ = [
     "SimulatorBackend", "register_backend", "get_backend", "backend_names",
     "ReferenceBackend", "RefSim", "ScanBackend", "ScanSim",
     "LevelBackend", "LevelSim",
     "RewardPipeline", "RolloutEngine", "DynamicRolloutEngine",
+    "ShardedRolloutEngine", "make_rollout_mesh", "build_window_fns",
     "GraphOperands", "split_multi_keys",
     "stack_batch_results", "single_from_batch",
 ]

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 from .pipeline import RewardPipeline
 
 __all__ = ["RolloutEngine", "DynamicRolloutEngine", "GraphOperands",
-           "split_multi_keys"]
+           "split_multi_keys", "build_window_fns"]
 
 
 def split_multi_keys(rngs: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -292,6 +292,125 @@ class GraphOperands(NamedTuple):
                      for a in jax.tree.leaves(self))
 
 
+def build_window_fns(step, cfg, *, fused: bool, backend):
+    """The raw (unjitted) operand-style window functions.
+
+    One builder, two consumers: :class:`DynamicRolloutEngine` jits these
+    directly; :class:`~repro.core.sim.sharded.ShardedRolloutEngine`
+    shard_maps the *same* bodies over a ("graphs", "chains") mesh.  Sharing
+    the closures is what makes the mesh=1×1 bitwise-parity contract hold —
+    both engines trace the identical per-shard computation.
+
+    Returns ``(_rollout_window, _window_loss, _greedy)``.  ``_window_loss``
+    takes an optional ``denom`` — the chain count to average over.  The
+    dynamic engine leaves it ``None`` (local ``G*B``, the historical
+    behaviour); a sharded caller passes the *global* chain count so the
+    per-shard partial losses sum (via psum of their grads) to exactly the
+    unsharded mean.
+    """
+
+    def _chain_sample(params, xg, ag, eg, nmg, emg, simg, z, key,
+                      first: bool):
+        out = step(params, z, xg, ag, eg, key, first=first, train=True,
+                   node_mask=nmg, edge_mask=emg)
+        fine = out.policy.fine_placement
+        if simg is not None:
+            reward, latency = backend.score(simg, fine)
+        else:
+            reward = latency = jnp.float32(0.0)
+        return (fine, out.parse.num_groups, out.z_next, reward, latency)
+
+    def _vsample(ops, params, z, keys, first: bool):
+        def per_graph(xg, ag, eg, nmg, emg, simg, z_b, k_b):
+            return jax.vmap(lambda z1, k1: _chain_sample(
+                params, xg, ag, eg, nmg, emg, simg, z1, k1, first)
+            )(z_b, k_b)
+
+        if fused:
+            return jax.vmap(per_graph)(ops.x0, ops.adj, ops.edges,
+                                       ops.node_mask, ops.edge_mask,
+                                       ops.sim, z, keys)
+        return jax.vmap(
+            lambda xg, ag, eg, nmg, emg, z_b, k_b: per_graph(
+                xg, ag, eg, nmg, emg, None, z_b, k_b)
+        )(ops.x0, ops.adj, ops.edges, ops.node_mask, ops.edge_mask,
+          z, keys)
+
+    def _rollout_window(ops, params, z, rngs, num_steps: int,
+                        start_first: bool):
+        def body(carry, _):
+            z_c, rngs_c = carry
+            rngs_c, keys = split_multi_keys(rngs_c)
+            fine, ngroups, z_next, rew, lat = _vsample(
+                ops, params, z_c, keys, first=False)
+            return (z_next, rngs_c), (keys, fine, ngroups, rew, lat)
+
+        if start_first:
+            rngs, keys0 = split_multi_keys(rngs)
+            fine0, ng0, z, rew0, lat0 = _vsample(ops, params, z, keys0,
+                                                 first=True)
+            (z, rngs), tail = jax.lax.scan(body, (z, rngs), None,
+                                           length=num_steps - 1)
+            head = (keys0, fine0, ng0, rew0, lat0)
+            outs = tuple(jnp.concatenate([h[None], t], axis=0)
+                         for h, t in zip(head, tail))
+        else:
+            (z, rngs), outs = jax.lax.scan(body, (z, rngs), None,
+                                           length=num_steps)
+        return (z, rngs) + outs
+
+    def _window_loss(ops, params, z0, keys, weights, num_steps: int,
+                     start_first: bool, denom=None):
+        def _chain_loss(params_, xg, ag, eg, nmg, emg, z1, k1, w1,
+                        first: bool):
+            out = step(params_, z1, xg, ag, eg, k1, first=first,
+                       train=True, node_mask=nmg, edge_mask=emg)
+            loss = -out.policy.logp * w1
+            loss = loss - cfg.entropy_coef * out.policy.entropy
+            return out.z_next, loss
+
+        def _vloss(z_c, k_t, w_t, first: bool):
+            def per_graph(xg, ag, eg, nmg, emg, z_b, k_b, w_b):
+                return jax.vmap(
+                    lambda z1, k1, w1: _chain_loss(
+                        params, xg, ag, eg, nmg, emg, z1, k1, w1, first)
+                )(z_b, k_b, w_b)
+
+            return jax.vmap(per_graph)(ops.x0, ops.adj, ops.edges,
+                                       ops.node_mask, ops.edge_mask,
+                                       z_c, k_t, w_t)
+
+        total = jnp.float32(0.0)
+        z = z0
+        if start_first:
+            z, l0 = _vloss(z, keys[0], weights[0], first=True)
+            total = total + jnp.sum(l0)
+            keys, weights = keys[1:], weights[1:]
+
+        def body(carry, xs):
+            z_c, tot = carry
+            k_t, w_t = xs
+            z_c, l_t = _vloss(z_c, k_t, w_t, first=False)
+            return (z_c, tot + jnp.sum(l_t)), None
+
+        (z, total), _ = jax.lax.scan(body, (z, total), (keys, weights))
+        nchains = denom if denom is not None else z0.shape[0] * z0.shape[1]
+        return total / nchains
+
+    def _greedy(ops, params, keys):
+        """One greedy decode per graph slot → (G, V) placements."""
+        def per_graph(xg, ag, eg, nmg, emg, k):
+            out = step(params, xg, xg, ag, eg, k,
+                       first=True, train=False, greedy=True,
+                       node_mask=nmg, edge_mask=emg)
+            return out.policy.fine_placement, out.parse.num_groups
+
+        return jax.vmap(per_graph)(ops.x0, ops.adj, ops.edges,
+                                   ops.node_mask, ops.edge_mask, keys)
+
+    return _rollout_window, _window_loss, _greedy
+
+
 class DynamicRolloutEngine:
     """The (G, B) window engine with graph data as jit *operands*.
 
@@ -319,114 +438,13 @@ class DynamicRolloutEngine:
 
     # ------------------------------------------------------------- builders
     def _build(self):
-        cfg = self._cfg
-        step = self._step
-        fused, backend = self._fused, self._backend
-
-        def _chain_sample(params, xg, ag, eg, nmg, emg, simg, z, key,
-                          first: bool):
-            out = step(params, z, xg, ag, eg, key, first=first, train=True,
-                       node_mask=nmg, edge_mask=emg)
-            fine = out.policy.fine_placement
-            if simg is not None:
-                reward, latency = backend.score(simg, fine)
-            else:
-                reward = latency = jnp.float32(0.0)
-            return (fine, out.parse.num_groups, out.z_next, reward, latency)
-
-        def _vsample(ops, params, z, keys, first: bool):
-            def per_graph(xg, ag, eg, nmg, emg, simg, z_b, k_b):
-                return jax.vmap(lambda z1, k1: _chain_sample(
-                    params, xg, ag, eg, nmg, emg, simg, z1, k1, first)
-                )(z_b, k_b)
-
-            if fused:
-                return jax.vmap(per_graph)(ops.x0, ops.adj, ops.edges,
-                                           ops.node_mask, ops.edge_mask,
-                                           ops.sim, z, keys)
-            return jax.vmap(
-                lambda xg, ag, eg, nmg, emg, z_b, k_b: per_graph(
-                    xg, ag, eg, nmg, emg, None, z_b, k_b)
-            )(ops.x0, ops.adj, ops.edges, ops.node_mask, ops.edge_mask,
-              z, keys)
-
-        def _rollout_window(ops, params, z, rngs, num_steps: int,
-                            start_first: bool):
-            def body(carry, _):
-                z_c, rngs_c = carry
-                rngs_c, keys = split_multi_keys(rngs_c)
-                fine, ngroups, z_next, rew, lat = _vsample(
-                    ops, params, z_c, keys, first=False)
-                return (z_next, rngs_c), (keys, fine, ngroups, rew, lat)
-
-            if start_first:
-                rngs, keys0 = split_multi_keys(rngs)
-                fine0, ng0, z, rew0, lat0 = _vsample(ops, params, z, keys0,
-                                                     first=True)
-                (z, rngs), tail = jax.lax.scan(body, (z, rngs), None,
-                                               length=num_steps - 1)
-                head = (keys0, fine0, ng0, rew0, lat0)
-                outs = tuple(jnp.concatenate([h[None], t], axis=0)
-                             for h, t in zip(head, tail))
-            else:
-                (z, rngs), outs = jax.lax.scan(body, (z, rngs), None,
-                                               length=num_steps)
-            return (z, rngs) + outs
-
-        def _window_loss(ops, params, z0, keys, weights, num_steps: int,
-                         start_first: bool):
-            def _chain_loss(params_, xg, ag, eg, nmg, emg, z1, k1, w1,
-                            first: bool):
-                out = step(params_, z1, xg, ag, eg, k1, first=first,
-                           train=True, node_mask=nmg, edge_mask=emg)
-                loss = -out.policy.logp * w1
-                loss = loss - cfg.entropy_coef * out.policy.entropy
-                return out.z_next, loss
-
-            def _vloss(z_c, k_t, w_t, first: bool):
-                def per_graph(xg, ag, eg, nmg, emg, z_b, k_b, w_b):
-                    return jax.vmap(
-                        lambda z1, k1, w1: _chain_loss(
-                            params, xg, ag, eg, nmg, emg, z1, k1, w1, first)
-                    )(z_b, k_b, w_b)
-
-                return jax.vmap(per_graph)(ops.x0, ops.adj, ops.edges,
-                                           ops.node_mask, ops.edge_mask,
-                                           z_c, k_t, w_t)
-
-            total = jnp.float32(0.0)
-            z = z0
-            if start_first:
-                z, l0 = _vloss(z, keys[0], weights[0], first=True)
-                total = total + jnp.sum(l0)
-                keys, weights = keys[1:], weights[1:]
-
-            def body(carry, xs):
-                z_c, tot = carry
-                k_t, w_t = xs
-                z_c, l_t = _vloss(z_c, k_t, w_t, first=False)
-                return (z_c, tot + jnp.sum(l_t)), None
-
-            (z, total), _ = jax.lax.scan(body, (z, total), (keys, weights))
-            nchains = z0.shape[0] * z0.shape[1]
-            return total / nchains
-
-        def _greedy(ops, params, keys):
-            """One greedy decode per graph slot → (G, V) placements."""
-            def per_graph(xg, ag, eg, nmg, emg, k):
-                out = step(params, xg, xg, ag, eg, k,
-                           first=True, train=False, greedy=True,
-                           node_mask=nmg, edge_mask=emg)
-                return out.policy.fine_placement, out.parse.num_groups
-
-            return jax.vmap(per_graph)(ops.x0, ops.adj, ops.edges,
-                                       ops.node_mask, ops.edge_mask, keys)
-
-        return (jax.jit(_rollout_window,
+        rollout, loss, greedy = build_window_fns(
+            self._step, self._cfg, fused=self._fused, backend=self._backend)
+        return (jax.jit(rollout,
                         static_argnames=("num_steps", "start_first")),
-                jax.jit(jax.grad(_window_loss, argnums=1),
+                jax.jit(jax.grad(loss, argnums=1),
                         static_argnames=("num_steps", "start_first")),
-                jax.jit(_greedy))
+                jax.jit(greedy))
 
     @property
     def _built(self):

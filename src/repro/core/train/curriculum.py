@@ -24,9 +24,23 @@ fingerprint (refusing a mismatched graph set), the sampler's full RNG and
 plateau state, the cumulative best tracker, and the optimizer state; every
 episode's PRNG keys derive from ``fold_in(rng, episode)``, so a resumed run
 replays the exact episode stream the uninterrupted run would have produced.
+
+Two scale axes layer on top (this is the PR-6 fleet story):
+
+* ``mesh_shape=(gm, bm)`` swaps the dynamic engine for a
+  :class:`~repro.core.sim.ShardedRolloutEngine` — the episode's (G, B)
+  chain grid tiles a ("graphs", "chains") device mesh, gradients psum in-
+  mesh.  At 1×1 this is bit-for-bit the unsharded run; any real split
+  switches the replay-weights math to the in-mesh float32 kernel
+  (``update="auto"``; force with ``"host"``/``"fused"``).
+* ``graphs`` may be a :class:`~repro.graphs.StreamingCorpus` — bucket
+  planning and feature vocabularies come from its :class:`GraphMeta`
+  records, and only the sampled subset (plus ``stream_cache`` featurized
+  neighbours) is ever host-resident.
 """
 from __future__ import annotations
 
+import collections
 import time
 from typing import Dict, List, NamedTuple, Optional, Sequence, Tuple
 
@@ -41,7 +55,7 @@ from ..features import (check_feature_compat, batch_graph_arrays,
 from ..graph import CompGraph
 from ..hsdag import _LOOP_ENGINES, HSDAGConfig, MultiGraphTrainer
 from ..sim import (DynamicRolloutEngine, GraphOperands, RewardPipeline,
-                   get_backend)
+                   ShardedRolloutEngine, get_backend)
 from ..reinforce import RunningBaseline
 from .loop import BestTracker, EpisodeRunner, WindowStream
 from .sampler import CurriculumSampler
@@ -102,7 +116,9 @@ class CurriculumTrainer(MultiGraphTrainer):
                  reward_norm: str = "pergraph", max_buckets: int = 4,
                  graphs_per_episode: int = 4,
                  sampler_strategy: str = "stratified",
-                 plateau_patience: int = 5):
+                 plateau_patience: int = 5,
+                 mesh_shape: Optional[Tuple[int, int]] = None,
+                 update: str = "auto", stream_cache: int = 64):
         super().__init__(cfg, reward_norm=reward_norm)
         if cfg.engine == "scalar":
             raise ValueError(
@@ -110,10 +126,23 @@ class CurriculumTrainer(MultiGraphTrainer):
                 "or a simulator backend name")
         if max_buckets < 1:
             raise ValueError("max_buckets must be >= 1")
+        if update not in ("auto", "host", "fused"):
+            raise ValueError(f"unknown update mode {update!r}; expected "
+                             f"'auto', 'host' or 'fused'")
+        if mesh_shape is not None:
+            mesh_shape = (int(mesh_shape[0]), int(mesh_shape[1]))
+            if min(mesh_shape) < 1:
+                raise ValueError(f"mesh_shape must be positive, got "
+                                 f"{mesh_shape}")
+        if int(stream_cache) < 1:
+            raise ValueError("stream_cache must be >= 1")
         self.max_buckets = int(max_buckets)
         self.graphs_per_episode = int(graphs_per_episode)
         self.sampler_strategy = sampler_strategy
         self.plateau_patience = int(plateau_patience)
+        self.mesh_shape = mesh_shape
+        self.update = update
+        self.stream_cache = int(stream_cache)
         self._warm_start: Optional[Tuple[str, Optional[int]]] = None
 
     # ------------------------------------------------------------ warm start
@@ -146,14 +175,25 @@ class CurriculumTrainer(MultiGraphTrainer):
         ``checkpoint_dir``, state is saved every ``checkpoint_every``
         episodes (and at the end); ``resume=True`` continues an interrupted
         run from the latest checkpoint after validating that the corpus
-        fingerprint matches.
+        fingerprint (and mesh shape) matches.
+
+        ``graphs`` is a dense graph sequence or a
+        :class:`~repro.graphs.StreamingCorpus` (never materialized whole).
         """
         from ...checkpoint import CheckpointManager, restore_policy
-        from ...graphs import corpus_fingerprint
+        from ...graphs import StreamingCorpus, corpus_fingerprint
 
         cfg = self.cfg
-        graphs = list(graphs)
-        if not graphs:
+        streaming = isinstance(graphs, StreamingCorpus)
+        if not streaming:
+            graphs = list(graphs)
+        # ``meta`` carries name/num_nodes/op-vocab accessors for *every*
+        # graph without holding it dense: the graphs themselves for an
+        # eager corpus, GraphMeta records for a streaming one.  Everything
+        # corpus-wide (feature config, buckets, fingerprints, reporting)
+        # reads meta; only sampled episodes touch ``graphs[i]``.
+        meta: Sequence = graphs.meta if streaming else graphs
+        if not len(meta):
             raise ValueError("train_corpus needs at least one graph")
         if cfg.num_devices > platform.num_devices:
             raise ValueError(
@@ -161,7 +201,7 @@ class CurriculumTrainer(MultiGraphTrainer):
                 f"{platform.num_devices} devices")
         backend = get_backend(cfg.engine if cfg.engine not in _LOOP_ENGINES
                               else "scan")
-        N = len(graphs)
+        N = len(meta)
         nchains = max(1, cfg.batch_chains)
         g_sub = min(self.graphs_per_episode, N)
         max_eps = episodes if episodes is not None else cfg.max_episodes
@@ -175,39 +215,57 @@ class CurriculumTrainer(MultiGraphTrainer):
             fc = policy_feature_config(directory, wstep)
             # vocab compatibility is enforced by restore_policy(graphs=)
             # below — fail fast here too, before features/params are built
-            check_feature_compat(fc, graphs)
+            check_feature_compat(fc, meta)
             self.feature_config = fc
         elif self.feature_config is not None:
             fc = self.feature_config
-            check_feature_compat(fc, graphs)
+            check_feature_compat(fc, meta)
         else:
-            fc = self.feature_config = shared_feature_config(graphs)
-        arrays = [extract_features(g, fc) for g in graphs]
+            fc = self.feature_config = shared_feature_config(meta)
+
+        if streaming:
+            get_arrays = _ArrayCache(graphs, fc, self.stream_cache)
+        else:
+            arrays = [extract_features(g, fc) for g in graphs]
+            get_arrays = arrays.__getitem__
 
         rng = rng if rng is not None else jax.random.PRNGKey(cfg.seed)
         if self.params is None:
             rng, k_init = jax.random.split(rng)
-            self.init(k_init, arrays[0])
+            self.init(k_init, get_arrays(0))
         if self._warm_start is not None:
             self.params, _, _, _ = restore_policy(directory, self.params,
-                                                  step=wstep, graphs=graphs)
+                                                  step=wstep, graphs=meta)
             self._opt_state = self._opt.init(self.params)
             self._warm_start = None
 
         # ---- size buckets: fixed jit shapes per bucket ----
-        buckets = plan_buckets([g.num_nodes for g in graphs],
+        buckets = plan_buckets([m.num_nodes for m in meta],
                                self.max_buckets)
         schedule = "level" if getattr(backend, "name", "") == "level" \
             else "topo"
         shapes: List[BucketShape] = []
         for members in buckets:
-            sas = [sim_arrays(graphs[i], platform, schedule=schedule)
-                   for i in members]
-            shapes.append(BucketShape(
-                v_max=max(sa.num_nodes for sa in sas),
-                p_max=max(sa.preds.shape[1] for sa in sas),
-                e_max=max(1, max(arrays[i].edges.shape[0]
-                                 for i in members))))
+            if streaming:
+                # metadata-derived shapes — identical to the sim_arrays
+                # pass below by construction (preds width = max in-degree
+                # clamped to 1, edge slots = edge count clamped to 1), so
+                # a streaming run compiles the same bucket jits an eager
+                # run of the same corpus does.
+                shapes.append(BucketShape(
+                    v_max=max(meta[i].num_nodes for i in members),
+                    p_max=max(1, max(meta[i].max_in_degree
+                                     for i in members)),
+                    e_max=max(1, max(meta[i].num_edges
+                                     for i in members))))
+            else:
+                sas = [sim_arrays(graphs[i], platform, schedule=schedule)
+                       for i in members]
+                shapes.append(BucketShape(
+                    v_max=max(sa.num_nodes for sa in sas),
+                    p_max=max(sa.preds.shape[1] for sa in sas),
+                    e_max=max(1, max(get_arrays(i).edges.shape[0]
+                                     for i in members))))
 
         sampler = CurriculumSampler(
             buckets, graphs_per_episode=g_sub,
@@ -215,15 +273,46 @@ class CurriculumTrainer(MultiGraphTrainer):
             plateau_patience=self.plateau_patience)
         # Exposed for introspection: ``engine.shape_keys_seen`` is how the
         # recompile bound (O(#buckets)) is asserted in CI.
-        engine = self.engine = DynamicRolloutEngine(self._step, cfg,
-                                                    backend=backend)
-        tracker = BestTracker([g.num_nodes for g in graphs], nchains)
+        if self.mesh_shape is not None:
+            gm, bm = self.mesh_shape
+            if g_sub % gm:
+                raise ValueError(
+                    f"graphs_per_episode={g_sub} does not tile the mesh "
+                    f"'graphs' axis ({gm}) — pick a multiple")
+            if nchains % bm:
+                raise ValueError(
+                    f"batch_chains={nchains} does not tile the mesh "
+                    f"'chains' axis ({bm}) — pick a multiple")
+            engine = ShardedRolloutEngine(self._step, cfg, backend=backend,
+                                          mesh_shape=self.mesh_shape)
+        else:
+            engine = DynamicRolloutEngine(self._step, cfg, backend=backend)
+        self.engine = engine
+        tracker = BestTracker([m.num_nodes for m in meta], nchains)
         baseline = (RunningBaseline()
                     if cfg.use_baseline and self.reward_norm != "pergraph"
                     else None)
+        # "auto" keeps the host float64 weights path (bit-for-bit with the
+        # unsharded trainer) until the mesh is really split, then switches
+        # to the in-mesh float32 kernel to avoid an all-gather per episode.
+        shards = (1 if self.mesh_shape is None
+                  else self.mesh_shape[0] * self.mesh_shape[1])
+        weights_mode = (self.update if self.update != "auto"
+                        else ("fused" if shards > 1 else "host"))
+        if weights_mode == "fused":
+            if baseline is not None:
+                raise ValueError(
+                    "update='fused' is incompatible with the EMA baseline "
+                    "(its per-sample update is host-sequential); set "
+                    "use_baseline=False or reward_norm='pergraph'")
+            if not backend.jit_fused:
+                raise ValueError(
+                    f"update='fused' needs a jit-fused simulator backend "
+                    f"(rewards must already live on device); backend "
+                    f"{getattr(backend, 'name', '?')!r} is host-side")
         runner = EpisodeRunner(self, engine, pipeline=None, tracker=tracker,
                                reward_norm=self.reward_norm,
-                               baseline=baseline)
+                               baseline=baseline, weights=weights_mode)
 
         # ---- resume from an interrupted run ----
         mgr = (CheckpointManager(checkpoint_dir, keep=3)
@@ -240,6 +329,19 @@ class CurriculumTrainer(MultiGraphTrainer):
                         "checkpoint was written for a different corpus "
                         "(fingerprint mismatch) — resuming would mis-map "
                         "sampler state and per-graph bests")
+                saved_mesh = man.get("mesh")
+                cur_mesh = (list(self.mesh_shape)
+                            if self.mesh_shape is not None else None)
+                # mesh=1×1 and unsharded are bit-for-bit the same run, so
+                # either may resume the other; any real split changes the
+                # weights math and must match exactly.
+                if (saved_mesh or [1, 1]) != (cur_mesh or [1, 1]):
+                    raise ValueError(
+                        f"checkpoint was written with mesh={saved_mesh} "
+                        f"but this trainer uses mesh={cur_mesh} — a "
+                        f"resumed run would not replay the same episode "
+                        f"stream; recreate the trainer with the saved "
+                        f"mesh_shape")
                 state = mgr.restore(last, {"params": self.params,
                                            "opt": self._opt_state})
                 self.params = state["params"]
@@ -264,14 +366,14 @@ class CurriculumTrainer(MultiGraphTrainer):
         for episode in range(start_ep, max_eps):
             bi, ids = sampler.sample()
             ops, pipeline = self._episode_batch(
-                graphs, arrays, ids, shapes[bi], platform, backend)
+                graphs, get_arrays, ids, shapes[bi], platform, backend)
             stream = WindowStream.fresh(
                 jax.random.fold_in(rng, episode), ops.x0, nchains,
                 graph_ids=ids, operands=ops)
             stats = runner.run_episode(stream, pipeline=pipeline)
             sampler.observe(ids, tracker.best_latencies)
             history.append({"episode": episode, "bucket": bi,
-                            "graphs": [graphs[i].name for i in ids],
+                            "graphs": [meta[i].name for i in ids],
                             **stats})
             if verbose:
                 h = history[-1]
@@ -283,15 +385,15 @@ class CurriculumTrainer(MultiGraphTrainer):
             if mgr is not None and checkpoint_every \
                     and (episode + 1) % checkpoint_every == 0:
                 self._save_state(mgr, episode, tracker, sampler, fingerprint,
-                                 baseline)
+                                 baseline, streaming)
         if mgr is not None:
             if max_eps > start_ep:
                 self._save_state(mgr, max_eps - 1, tracker, sampler,
-                                 fingerprint, baseline)
+                                 fingerprint, baseline, streaming)
             mgr.close()
 
         greedy_placements, greedy_latencies = self._greedy_corpus(
-            graphs, arrays, buckets, shapes, engine, platform, g_sub)
+            graphs, get_arrays, buckets, shapes, engine, platform, g_sub)
 
         wall = time.perf_counter() - t_start
         n_evals = max(0, max_eps - start_ep) * cfg.update_timestep \
@@ -303,12 +405,16 @@ class CurriculumTrainer(MultiGraphTrainer):
             max(0, max_eps - start_ep))
 
     # ------------------------------------------------------------ internals
-    def _episode_batch(self, graphs, arrays, ids: Sequence[int],
+    def _episode_batch(self, graphs, get_arrays, ids: Sequence[int],
                        shape: BucketShape, platform: Platform, backend
                        ) -> Tuple[GraphOperands, RewardPipeline]:
-        """Assemble one sampled subset into the bucket's fixed jit shape."""
+        """Assemble one sampled subset into the bucket's fixed jit shape.
+
+        ``graphs[i]`` / ``get_arrays(i)`` are the only dense accesses — on
+        a streaming corpus they materialize just the sampled subset.
+        """
         sub = [graphs[i] for i in ids]
-        ga = batch_graph_arrays([arrays[i] for i in ids],
+        ga = batch_graph_arrays([get_arrays(i) for i in ids],
                                 v_max=shape.v_max, e_max=shape.e_max)
         if backend.jit_fused:
             sb = sim_arrays_batch(sub, platform, v_max=shape.v_max,
@@ -323,12 +429,14 @@ class CurriculumTrainer(MultiGraphTrainer):
                                   num_nodes=[g.num_nodes for g in sub])
         return _operands(ga, sim_tree), pipeline
 
-    def _greedy_corpus(self, graphs, arrays, buckets, shapes, engine,
+    def _greedy_corpus(self, graphs, get_arrays, buckets, shapes, engine,
                        platform, g_sub: int):
         """Greedy-decode every corpus graph through the dynamic engine.
 
         Chunked to the training batch width per bucket, so the decode adds
-        at most one more compile per bucket (not one per graph).
+        at most one more compile per bucket (not one per graph).  On a
+        streaming corpus each chunk materializes ``g_sub`` graphs at a
+        time, nothing more.
         """
         N = len(graphs)
         placements: List[Optional[np.ndarray]] = [None] * N
@@ -339,22 +447,22 @@ class CurriculumTrainer(MultiGraphTrainer):
             for lo in range(0, len(members), g_sub):
                 chunk = members[lo:lo + g_sub]
                 padded = list(chunk) + [chunk[0]] * (g_sub - len(chunk))
-                ga = batch_graph_arrays([arrays[i] for i in padded],
+                ga = batch_graph_arrays([get_arrays(i) for i in padded],
                                         v_max=shape.v_max,
                                         e_max=shape.e_max)
                 fines, _ = engine.greedy_decode(_operands(ga, None),
                                                 self.params, keys)
                 fines = np.asarray(fines)
                 for k, gid in enumerate(chunk):
-                    p = fines[k, :graphs[gid].num_nodes].astype(np.int64)
+                    g = graphs[gid]
+                    p = fines[k, :g.num_nodes].astype(np.int64)
                     placements[gid] = p
-                    latencies[gid] = simulate(graphs[gid], p,
-                                              platform).latency
+                    latencies[gid] = simulate(g, p, platform).latency
         return placements, latencies
 
     def _save_state(self, mgr, episode: int, tracker: BestTracker,
                     sampler: CurriculumSampler, fingerprint: str,
-                    baseline=None) -> None:
+                    baseline=None, streaming: bool = False) -> None:
         from ...checkpoint.manager import _feature_config_to_meta
         t = tracker.state_arrays()
         meta = {
@@ -366,6 +474,9 @@ class CurriculumTrainer(MultiGraphTrainer):
                         "chain_best": t["chain_best"].tolist()},
             "engine": self.cfg.engine,
             "feature_config": _feature_config_to_meta(self.feature_config),
+            "mesh": (list(self.mesh_shape)
+                     if self.mesh_shape is not None else None),
+            "stream": bool(streaming),
         }
         if baseline is not None:
             meta["baseline"] = {"value": baseline.value,
@@ -373,3 +484,30 @@ class CurriculumTrainer(MultiGraphTrainer):
         mgr.save(episode, {"params": self.params, "opt": self._opt_state},
                  meta)
         mgr.wait()
+
+
+class _ArrayCache:
+    """LRU ``get_arrays`` for a streaming corpus.
+
+    Featurized GraphArrays are rebuilt from the (itself LRU-cached) graph
+    on miss; at most ``capacity`` stay resident, so feature memory tracks
+    the working set, not the corpus.
+    """
+
+    def __init__(self, corpus, fc, capacity: int):
+        self._corpus = corpus
+        self._fc = fc
+        self._capacity = int(capacity)
+        self._lru: "collections.OrderedDict[int, object]" = \
+            collections.OrderedDict()
+
+    def __call__(self, i: int):
+        a = self._lru.get(i)
+        if a is not None:
+            self._lru.move_to_end(i)
+            return a
+        a = extract_features(self._corpus[i], self._fc)
+        self._lru[i] = a
+        while len(self._lru) > self._capacity:
+            self._lru.popitem(last=False)
+        return a

@@ -132,18 +132,33 @@ class EpisodeRunner:
     ``agent`` supplies ``cfg``, ``params`` and ``apply_grads`` (the
     optimizer step) — :class:`~repro.core.hsdag.HSDAG` or anything shaped
     like it.  ``engine`` is a static :class:`~repro.core.sim.RolloutEngine`
-    (stream ``operands`` must be ``None``) or a
-    :class:`~repro.core.sim.DynamicRolloutEngine` (operands required).
+    (stream ``operands`` must be ``None``), a
+    :class:`~repro.core.sim.DynamicRolloutEngine` (operands required) or a
+    :class:`~repro.core.sim.ShardedRolloutEngine`.
+
+    ``weights="fused"`` computes the replay weights in-mesh through the
+    engine's ``window_weights`` kernel (float32, per-graph standardization
+    psum'd over the chain axis) instead of the host float64
+    ``step_weights`` path — the sharded trainer's default whenever the mesh
+    is really split, since host-side standardization would force a full
+    gather.  Requires a fused pipeline, an engine with ``window_weights``
+    and no EMA baseline (its update is inherently host-sequential); the
+    runner falls back to the host path when any of these is missing.
     """
 
     def __init__(self, agent, engine, *, pipeline, tracker: BestTracker,
-                 reward_norm: str = "none", baseline=None):
+                 reward_norm: str = "none", baseline=None,
+                 weights: str = "host"):
+        if weights not in ("host", "fused"):
+            raise ValueError(f"unknown weights mode {weights!r}; expected "
+                             f"'host' or 'fused'")
         self.agent = agent
         self.engine = engine
         self.pipeline = pipeline
         self.tracker = tracker
         self.reward_norm = reward_norm
         self.baseline = baseline
+        self.weights_mode = weights
 
     def run_episode(self, stream: WindowStream, *, pipeline=None) -> Dict:
         agent = self.agent
@@ -159,6 +174,7 @@ class EpisodeRunner:
             *ops, agent.params, stream.z, stream.chain_rngs,
             num_steps=tsteps, start_first=stream.first)
         fines_np = np.asarray(fines)                         # (T, G, B, V)
+        rewards_dev = rewards if pipeline.fused else None
         if pipeline.fused:
             rewards = np.asarray(rewards, dtype=np.float64)  # (T, G, B)
             latencies = np.asarray(latencies, dtype=np.float64)
@@ -169,18 +185,28 @@ class EpisodeRunner:
                             self.baseline)
 
         # ---- shared-policy update over the (G, B, T) window ----
-        r_for_w = rewards
-        if self.reward_norm == "pergraph":
-            mean_g = rewards.mean(axis=(0, 2), keepdims=True)
-            std_g = rewards.std(axis=(0, 2), keepdims=True)
-            r_for_w = (rewards - mean_g) / (std_g + 1e-8)
-        weights_gbt = step_weights(
-            np.transpose(r_for_w, (1, 2, 0)), cfg.gamma,
-            reward_to_go=cfg.reward_to_go,
-            baseline=(self.baseline.value if self.baseline is not None
-                      else None),
-            normalize=cfg.normalize_weights)
-        weights_tgb = jnp.asarray(np.transpose(weights_gbt, (2, 0, 1)))
+        fused_w = (self.weights_mode == "fused" and rewards_dev is not None
+                   and self.baseline is None
+                   and hasattr(self.engine, "window_weights"))
+        if fused_w:
+            weights_tgb = self.engine.window_weights(
+                rewards_dev, gamma=cfg.gamma,
+                reward_to_go=cfg.reward_to_go,
+                normalize=cfg.normalize_weights,
+                reward_norm=self.reward_norm)
+        else:
+            r_for_w = rewards
+            if self.reward_norm == "pergraph":
+                mean_g = rewards.mean(axis=(0, 2), keepdims=True)
+                std_g = rewards.std(axis=(0, 2), keepdims=True)
+                r_for_w = (rewards - mean_g) / (std_g + 1e-8)
+            weights_gbt = step_weights(
+                np.transpose(r_for_w, (1, 2, 0)), cfg.gamma,
+                reward_to_go=cfg.reward_to_go,
+                baseline=(self.baseline.value if self.baseline is not None
+                          else None),
+                normalize=cfg.normalize_weights)
+            weights_tgb = jnp.asarray(np.transpose(weights_gbt, (2, 0, 1)))
         for _ in range(max(1, cfg.k_epochs)):
             grads = self.engine.window_grads(
                 *ops, agent.params, stream.z, keys, weights_tgb,

@@ -21,8 +21,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec
 
-__all__ = ["AxisRules", "DEFAULT_RULES", "use_rules", "logical_spec",
-           "shard", "param_specs", "current_mesh", "with_rules"]
+__all__ = ["AxisRules", "DEFAULT_RULES", "ROLLOUT_RULES", "use_rules",
+           "logical_spec", "shard", "param_specs", "current_mesh",
+           "with_rules"]
 
 MeshAxes = Union[None, str, Tuple[str, ...]]
 AxisRules = Dict[str, MeshAxes]
@@ -57,6 +58,15 @@ DEFAULT_RULES: AxisRules = {
     "cache_seq": None,
 }
 
+#: logical axes of the (G, B) rollout grid — the 2-D ("graphs", "chains")
+#: mesh the :class:`~repro.core.sim.ShardedRolloutEngine` shard_maps over.
+#: "time" (the window step axis) is never sharded.
+ROLLOUT_RULES: AxisRules = {
+    "graphs": "graphs",
+    "chains": "chains",
+    "time": None,
+}
+
 
 class _Ctx(threading.local):
     def __init__(self):
@@ -69,10 +79,16 @@ _CTX = _Ctx()
 
 @contextlib.contextmanager
 def use_rules(mesh: Mesh, rules: Optional[AxisRules] = None):
-    """Activate a mesh + logical rules for ``shard`` constraints."""
+    """Activate a mesh + logical rules for ``shard`` constraints.
+
+    Nesting-safe under exceptions: the merged rules table is built *before*
+    the context is touched (a bad ``rules`` mapping raises with the outer
+    context intact — code before a contextmanager's ``yield`` runs with no
+    cleanup), and both slots are restored in one ``finally``.
+    """
+    merged = dict(DEFAULT_RULES, **(rules or {}))
     prev = (_CTX.mesh, _CTX.rules)
-    _CTX.mesh = mesh
-    _CTX.rules = dict(DEFAULT_RULES, **(rules or {}))
+    _CTX.mesh, _CTX.rules = mesh, merged
     try:
         yield
     finally:

@@ -6,9 +6,10 @@ from .bert import bert_base
 from .jaxpr_trace import trace_to_graph
 from .synthetic import (SYNTHETIC_FAMILIES, branch_join_dag, layered_dag,
                         series_parallel_dag)
-from .workloads import (CorpusSpec, WorkloadProvider, build_corpus,
-                        corpus_fingerprint, get_workload, parse_corpus_spec,
-                        register_workload, workload_names)
+from .workloads import (CorpusSpec, GraphMeta, StreamingCorpus,
+                        WorkloadProvider, build_corpus, corpus_fingerprint,
+                        get_workload, parse_corpus_spec, register_workload,
+                        workload_names)
 
 PAPER_BENCHMARKS = {
     "inception_v3": inception_v3,
@@ -22,4 +23,5 @@ __all__ = ["inception_v3", "resnet50", "bert_base", "trace_to_graph",
            "SYNTHETIC_FAMILIES",
            "WorkloadProvider", "register_workload", "get_workload",
            "workload_names", "CorpusSpec", "parse_corpus_spec",
-           "build_corpus", "corpus_fingerprint"]
+           "build_corpus", "corpus_fingerprint",
+           "GraphMeta", "StreamingCorpus"]

@@ -22,18 +22,39 @@ Entries are ``;``-separated, provider parameters ``:``-separated
 types) — checkpoint manifests record it so an interrupted corpus run can
 refuse to resume against a different graph set.
 
+Streaming corpora
+-----------------
+
+A thousand-graph corpus doesn't fit comfortably as a dense list: every
+graph carries node tables, padded predecessor tables and SimArrays once the
+trainer touches it.  Providers therefore expose :meth:`WorkloadProvider
+.lazy_build` — per-graph *thunks* instead of materialized graphs — and
+:class:`StreamingCorpus` wraps a spec as a sequence that builds graphs on
+demand behind an LRU (``cache_graphs`` dense graphs resident at once).  A
+one-pass init sweep materializes each graph transiently to record its
+:class:`GraphMeta` (name, sizes, vocab — everything feature-config and
+bucket planning need) and the same order-sensitive fingerprint
+:func:`corpus_fingerprint` computes for the eager list, so streaming and
+eager runs of one spec are interchangeable in checkpoints.
+
+Spec strings opt in with a ``stream:`` head marker (``eager:`` pins the
+default): ``stream:synthetic:count=1000:size=150``.  Mixing both markers in
+one spec is a hard error naming the offending segment.
+
 Registering a provider mirrors ``core/sim``::
 
     class MyWorkloads(WorkloadProvider):
         name = "mine"
-        def build(self, **params): return [...]
+        def lazy_build(self, **params): return [thunk, ...]   # or build()
     register_workload(MyWorkloads())
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import hashlib
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, \
+    Tuple, Union
 
 import numpy as np
 
@@ -47,18 +68,42 @@ from .jaxpr_trace import trace_to_graph
 __all__ = [
     "WorkloadProvider", "register_workload", "get_workload",
     "workload_names", "CorpusSpec", "parse_corpus_spec", "build_corpus",
-    "corpus_fingerprint",
+    "corpus_fingerprint", "GraphMeta", "StreamingCorpus",
 ]
+
+GraphThunk = Callable[[], CompGraph]
 
 
 class WorkloadProvider:
-    """Interface every graph source implements (see module docstring)."""
+    """Interface every graph source implements (see module docstring).
+
+    Implement **one** of :meth:`build` / :meth:`lazy_build`; each default
+    delegates to the other.  ``lazy_build`` is the preferred hook — it
+    yields per-graph thunks so :class:`StreamingCorpus` never holds the
+    whole entry dense; a provider that only implements ``build`` still
+    streams, but each thunk re-materializes the full entry to pick one
+    graph out of it.
+    """
 
     name: str = "?"
 
     def build(self, **params) -> List[CompGraph]:
         """Materialize this provider's graphs for one spec entry."""
-        raise NotImplementedError
+        if type(self).lazy_build is WorkloadProvider.lazy_build:
+            raise NotImplementedError(
+                f"workload provider {self.name!r} implements neither "
+                f"build() nor lazy_build()")
+        return [thunk() for thunk in self.lazy_build(**params)]
+
+    def lazy_build(self, **params) -> List[GraphThunk]:
+        """Per-graph thunks for one spec entry (see class docstring)."""
+        if type(self).build is WorkloadProvider.build:
+            raise NotImplementedError(
+                f"workload provider {self.name!r} implements neither "
+                f"build() nor lazy_build()")
+        count = len(self.build(**params))
+        return [(lambda i=i: self.build(**params)[i])
+                for i in range(count)]
 
 
 _REGISTRY: Dict[str, WorkloadProvider] = {}
@@ -90,8 +135,8 @@ class BenchmarkWorkloads(WorkloadProvider):
     _BUILDERS = {"inception_v3": inception_v3, "resnet50": resnet50,
                  "bert_base": bert_base}
 
-    def build(self, names: Union[str, Sequence[str]] = "all",
-              **params) -> List[CompGraph]:
+    def lazy_build(self, names: Union[str, Sequence[str]] = "all",
+                   **params) -> List[GraphThunk]:
         _reject_unknown(self.name, params)
         if names == "all":
             names = sorted(self._BUILDERS)
@@ -101,7 +146,7 @@ class BenchmarkWorkloads(WorkloadProvider):
         if unknown:
             raise ValueError(f"unknown benchmark graphs {unknown}; "
                              f"available: {sorted(self._BUILDERS)}")
-        return [self._BUILDERS[n]() for n in names]
+        return [self._BUILDERS[n] for n in names]
 
 
 class LMLayerWorkloads(WorkloadProvider):
@@ -115,10 +160,10 @@ class LMLayerWorkloads(WorkloadProvider):
 
     name = "lm"
 
-    def build(self, archs: Union[str, Sequence[str]] = "all",
-              kinds: Union[str, Sequence[str]] = "train",
-              seq_len: int = 4096, batch: int = 8,
-              **params) -> List[CompGraph]:
+    def lazy_build(self, archs: Union[str, Sequence[str]] = "all",
+                   kinds: Union[str, Sequence[str]] = "train",
+                   seq_len: int = 4096, batch: int = 8,
+                   **params) -> List[GraphThunk]:
         _reject_unknown(self.name, params)
         from ..configs import all_archs, get
         from ..core.planner import layer_graph
@@ -128,12 +173,10 @@ class LMLayerWorkloads(WorkloadProvider):
             archs = [archs]
         if isinstance(kinds, str):
             kinds = [kinds]
-        out = []
-        for a in archs:
-            cfg = get(a).config
-            for kind in kinds:
-                out.append(layer_graph(cfg, int(seq_len), int(batch), kind))
-        return out
+        return [
+            (lambda a=a, kind=kind: layer_graph(
+                get(a).config, int(seq_len), int(batch), kind))
+            for a in archs for kind in kinds]
 
 
 class TracedLayerWorkloads(WorkloadProvider):
@@ -148,15 +191,16 @@ class TracedLayerWorkloads(WorkloadProvider):
 
     name = "traced"
 
-    def build(self, archs: Union[str, Sequence[str]] = "all",
-              seq_len: int = 32, **params) -> List[CompGraph]:
+    def lazy_build(self, archs: Union[str, Sequence[str]] = "all",
+                   seq_len: int = 32, **params) -> List[GraphThunk]:
         _reject_unknown(self.name, params)
         from ..configs import all_archs, get
         if archs == "all":
             archs = list(all_archs())
         elif isinstance(archs, str):
             archs = [archs]
-        return [self._trace_layer(get(a).smoke_config, int(seq_len))
+        return [(lambda a=a: self._trace_layer(get(a).smoke_config,
+                                               int(seq_len)))
                 for a in archs]
 
     @staticmethod
@@ -199,9 +243,9 @@ class SyntheticWorkloads(WorkloadProvider):
 
     name = "synthetic"
 
-    def build(self, family: Union[str, Sequence[str]] = "mixed",
-              count: int = 4, size: int = 32,
-              seed: int = 0, **params) -> List[CompGraph]:
+    def lazy_build(self, family: Union[str, Sequence[str]] = "mixed",
+                   count: int = 4, size: int = 32,
+                   seed: int = 0, **params) -> List[GraphThunk]:
         _reject_unknown(self.name, params)
         count, size, seed = int(count), int(size), int(seed)
         if family == "mixed":
@@ -213,28 +257,33 @@ class SyntheticWorkloads(WorkloadProvider):
                 raise ValueError(
                     f"unknown synthetic families {unknown}; available: "
                     f"{sorted(SYNTHETIC_FAMILIES)} or 'mixed'")
-        out = []
-        for i in range(count):
-            fam = fams[i % len(fams)]
-            rng = np.random.default_rng((seed, i))
-            n = max(4, int(size * float(rng.uniform(0.5, 1.5))))
-            gseed = int(rng.integers(0, 2**31))
-            if fam == "layered":
-                width = max(1, int(rng.integers(2, 6)))
-                g = SYNTHETIC_FAMILIES[fam](
-                    num_layers=max(1, n // (width + 1)), width=width,
-                    seed=gseed)
-            elif fam == "series_parallel":
-                g = SYNTHETIC_FAMILIES[fam](target_nodes=n, seed=gseed)
-            else:
-                branches = max(2, int(rng.integers(2, 6)))
-                depth = max(1, int(rng.integers(1, 4)))
-                g = SYNTHETIC_FAMILIES[fam](
-                    num_blocks=max(1, n // (branches * depth + 1)),
-                    branches=branches, depth=depth, seed=gseed)
-            g.name = f"{g.name}#{i}"
-            out.append(g)
-        return out
+        return [(lambda i=i: self._build_one(fams, size, seed, i))
+                for i in range(count)]
+
+    @staticmethod
+    def _build_one(fams: Sequence[str], size: int, seed: int,
+                   i: int) -> CompGraph:
+        """Graph ``i`` of the entry — per-index seeding, so any single
+        graph rebuilds identically without touching its neighbours."""
+        fam = fams[i % len(fams)]
+        rng = np.random.default_rng((seed, i))
+        n = max(4, int(size * float(rng.uniform(0.5, 1.5))))
+        gseed = int(rng.integers(0, 2**31))
+        if fam == "layered":
+            width = max(1, int(rng.integers(2, 6)))
+            g = SYNTHETIC_FAMILIES[fam](
+                num_layers=max(1, n // (width + 1)), width=width,
+                seed=gseed)
+        elif fam == "series_parallel":
+            g = SYNTHETIC_FAMILIES[fam](target_nodes=n, seed=gseed)
+        else:
+            branches = max(2, int(rng.integers(2, 6)))
+            depth = max(1, int(rng.integers(1, 4)))
+            g = SYNTHETIC_FAMILIES[fam](
+                num_blocks=max(1, n // (branches * depth + 1)),
+                branches=branches, depth=depth, seed=gseed)
+        g.name = f"{g.name}#{i}"
+        return g
 
 
 def _reject_unknown(provider: str, params: Dict) -> None:
@@ -250,11 +299,20 @@ register_workload(SyntheticWorkloads())
 
 
 # ------------------------------------------------------------- corpus spec
+_MODE_MARKERS = ("stream", "eager")
+
+
 @dataclasses.dataclass(frozen=True)
 class CorpusSpec:
-    """An ordered list of (provider name, params) entries."""
+    """An ordered list of (provider name, params) entries.
+
+    ``mode`` records a ``stream:`` / ``eager:`` head marker from the string
+    form (``None`` = unmarked; :func:`build_corpus` then defaults to eager
+    unless its ``stream=`` argument says otherwise).
+    """
 
     entries: Tuple[Tuple[str, Tuple[Tuple[str, object], ...]], ...]
+    mode: Optional[str] = None
 
     def __str__(self) -> str:
         parts = []
@@ -263,23 +321,42 @@ class CorpusSpec:
                 f"{k}={'+'.join(map(str, v)) if isinstance(v, (list, tuple)) else v}"
                 for k, v in params]
             parts.append(":".join(toks))
-        return ";".join(parts)
+        out = ";".join(parts)
+        return f"{self.mode}:{out}" if self.mode else out
 
 
 def parse_corpus_spec(spec: str) -> CorpusSpec:
     """Parse the ``provider:key=val:key=val;provider:...`` string form.
 
-    Malformed segments fail loudly: an unknown provider or a bad
-    ``key=value`` token raises ``ValueError`` naming the offending segment
-    and its position in the spec, so a typo deep inside a long corpus
-    string is locatable without bisecting it.
+    A segment may lead with a ``stream`` or ``eager`` mode marker — as a
+    prefix (``stream:synthetic:count=1000``) or a bare segment
+    (``stream;synthetic:...``).  The marker sets :attr:`CorpusSpec.mode`;
+    mixing both markers in one spec is contradictory and rejected.
+
+    Malformed segments fail loudly: an unknown provider, a bad
+    ``key=value`` token or a contradictory mode marker raises
+    ``ValueError`` naming the offending segment and its position in the
+    spec, so a typo deep inside a long corpus string is locatable without
+    bisecting it.
     """
     entries = []
+    mode: Optional[str] = None
     for pos, part in enumerate(str(spec).split(";")):
         part = part.strip()
         if not part:
             continue
         toks = part.split(":")
+        head = toks[0].strip()
+        if head in _MODE_MARKERS:
+            if mode is not None and mode != head:
+                raise ValueError(
+                    f"corpus spec segment {pos} ({part!r}): mode marker "
+                    f"{head!r} contradicts earlier {mode!r} — a spec is "
+                    f"all-streaming or all-eager, pick one")
+            mode = head
+            toks = toks[1:]
+            if not toks:
+                continue                     # bare marker segment
         name = toks[0].strip()
         try:
             get_workload(name)       # fail fast on unknown providers
@@ -303,17 +380,157 @@ def parse_corpus_spec(spec: str) -> CorpusSpec:
         entries.append((name, tuple(params)))
     if not entries:
         raise ValueError(f"empty corpus spec {spec!r}")
-    return CorpusSpec(tuple(entries))
+    return CorpusSpec(tuple(entries), mode=mode)
 
 
-def build_corpus(spec: Union[str, CorpusSpec]) -> List[CompGraph]:
+# --------------------------------------------------------------- streaming
+@dataclasses.dataclass(frozen=True)
+class GraphMeta:
+    """Static per-graph facts a trainer needs *without* the graph.
+
+    Duck-types the :class:`CompGraph` accessors that feature-config
+    building (``shared_feature_config`` / ``check_feature_compat``) and
+    bucket planning consume — name, sizes and the op/degree vocabularies —
+    so a streaming corpus can plan everything up front and materialize
+    dense graphs only when an episode samples them.
+    """
+
+    name: str
+    num_nodes: int
+    num_edges: int
+    max_in_degree: int
+    op_type_seq: Tuple[str, ...]
+    in_degree_seq: Tuple[int, ...]
+    out_degree_seq: Tuple[int, ...]
+
+    @classmethod
+    def from_graph(cls, g: CompGraph) -> "GraphMeta":
+        in_deg = g.in_degrees()
+        return cls(
+            name=g.name,
+            num_nodes=int(g.num_nodes),
+            num_edges=int(g.edges.shape[0]),
+            max_in_degree=int(in_deg.max()) if in_deg.size else 0,
+            op_type_seq=tuple(g.op_types()),
+            in_degree_seq=tuple(int(d) for d in in_deg),
+            out_degree_seq=tuple(int(d) for d in g.out_degrees()))
+
+    # CompGraph-compatible accessors (vocab duck-typing)
+    def op_types(self) -> List[str]:
+        return list(self.op_type_seq)
+
+    def in_degrees(self) -> np.ndarray:
+        return np.asarray(self.in_degree_seq, dtype=np.int64)
+
+    def out_degrees(self) -> np.ndarray:
+        return np.asarray(self.out_degree_seq, dtype=np.int64)
+
+
+class StreamingCorpus:
+    """A corpus spec as a lazy graph sequence behind a per-graph LRU.
+
+    ``__init__`` walks every provider thunk once, materializing each graph
+    *transiently* (one at a time) to apply :func:`build_corpus`'s name
+    uniquification, record :class:`GraphMeta` and accumulate the exact
+    :func:`corpus_fingerprint` hash — then drops it.  ``corpus[i]``
+    re-materializes on demand; at most ``cache_graphs`` dense graphs stay
+    resident, least-recently-used evicted first.  Rebuilt graphs are
+    fresh objects, so anything keyed on graph *identity* (the SimArrays
+    weak cache in ``core.costmodel``) releases with the eviction.
+    """
+
+    def __init__(self, spec: Union[str, CorpusSpec], *,
+                 cache_graphs: int = 16):
+        if isinstance(spec, str):
+            spec = parse_corpus_spec(spec)
+        if int(cache_graphs) < 1:
+            raise ValueError(
+                f"cache_graphs must be >= 1, got {cache_graphs}")
+        self.spec = spec
+        self.cache_graphs = int(cache_graphs)
+        thunks: List[GraphThunk] = []
+        for name, params in spec.entries:
+            thunks.extend(get_workload(name).lazy_build(**dict(params)))
+        names: List[str] = []
+        metas: List[GraphMeta] = []
+        seen: Dict[str, int] = {}
+        h = hashlib.sha256()
+        for thunk in thunks:
+            g = thunk()
+            n = seen.get(g.name, 0) + 1
+            seen[g.name] = n
+            if n > 1:
+                g.name = f"{g.name}/{n}"
+            names.append(g.name)
+            _fingerprint_one(h, g)
+            metas.append(GraphMeta.from_graph(g))
+        self._thunks = thunks
+        self._names = names
+        self.meta: Tuple[GraphMeta, ...] = tuple(metas)
+        self._fingerprint = h.hexdigest()
+        self._lru: "collections.OrderedDict[int, CompGraph]" = \
+            collections.OrderedDict()
+
+    @property
+    def fingerprint(self) -> str:
+        """Equal to ``corpus_fingerprint(build_corpus(spec))`` by construction."""
+        return self._fingerprint
+
+    def __len__(self) -> int:
+        return len(self._thunks)
+
+    def __getitem__(self, i: int) -> CompGraph:
+        i = int(i)
+        if i < 0:
+            i += len(self._thunks)
+        if not 0 <= i < len(self._thunks):
+            raise IndexError(f"graph index {i} out of range "
+                             f"[0, {len(self._thunks)})")
+        g = self._lru.get(i)
+        if g is not None:
+            self._lru.move_to_end(i)
+            return g
+        g = self._thunks[i]()
+        g.name = self._names[i]      # re-apply corpus-level uniquification
+        self._lru[i] = g
+        while len(self._lru) > self.cache_graphs:
+            self._lru.popitem(last=False)
+        return g
+
+    def __iter__(self) -> Iterator[CompGraph]:
+        return (self[i] for i in range(len(self)))
+
+    def cached_indices(self) -> List[int]:
+        """Currently resident graph indices, LRU-first (for tests/metrics)."""
+        return list(self._lru)
+
+
+def build_corpus(spec: Union[str, CorpusSpec], *,
+                 stream: Optional[bool] = None,
+                 cache_graphs: int = 16
+                 ) -> Union[List[CompGraph], StreamingCorpus]:
     """Materialize every entry of ``spec`` into one graph list.
 
     Graph names are uniquified (``/2``, ``/3`` suffixes) so per-graph
     reporting stays unambiguous when entries overlap.
+
+    ``stream=True`` (or a ``stream:`` spec marker) returns a
+    :class:`StreamingCorpus` instead of a dense list; an explicit
+    ``stream`` argument that contradicts the spec's own marker is an
+    error — the spec is the source of truth a checkpoint may replay, so
+    silently overriding it would change the run's memory envelope.
     """
     if isinstance(spec, str):
         spec = parse_corpus_spec(spec)
+    if stream is not None and spec.mode is not None \
+            and bool(stream) != (spec.mode == "stream"):
+        raise ValueError(
+            f"stream={stream!r} contradicts the corpus spec's "
+            f"{spec.mode!r} marker ({str(spec)!r}) — drop one of them")
+    streaming = bool(stream) if stream is not None \
+        else spec.mode == "stream"
+    if streaming:
+        return StreamingCorpus(spec, cache_graphs=cache_graphs)
     graphs: List[CompGraph] = []
     seen: Dict[str, int] = {}
     for name, params in spec.entries:
@@ -326,19 +543,28 @@ def build_corpus(spec: Union[str, CorpusSpec]) -> List[CompGraph]:
     return graphs
 
 
-def corpus_fingerprint(graphs: Sequence[CompGraph]) -> str:
+def _fingerprint_one(h, g: CompGraph) -> None:
+    h.update(g.name.encode())
+    h.update(np.int64(g.num_nodes).tobytes())
+    h.update(np.ascontiguousarray(g.edges).tobytes())
+    h.update(np.ascontiguousarray(g.flops()).tobytes())
+    h.update(np.ascontiguousarray(g.bytes_out()).tobytes())
+    h.update("|".join(g.op_types()).encode())
+
+
+def corpus_fingerprint(
+        graphs: Union[Sequence[CompGraph], StreamingCorpus]) -> str:
     """Order-sensitive content hash of a corpus (topology, costs, op types).
 
     Checkpoint manifests record it; resume refuses a mismatched corpus
     (same-length graph lists with different contents would otherwise
-    silently mis-map sampler state and per-graph bests).
+    silently mis-map sampler state and per-graph bests).  A
+    :class:`StreamingCorpus` answers from its init-sweep hash — identical
+    by construction — without materializing anything.
     """
+    if isinstance(graphs, StreamingCorpus):
+        return graphs.fingerprint
     h = hashlib.sha256()
     for g in graphs:
-        h.update(g.name.encode())
-        h.update(np.int64(g.num_nodes).tobytes())
-        h.update(np.ascontiguousarray(g.edges).tobytes())
-        h.update(np.ascontiguousarray(g.flops()).tobytes())
-        h.update(np.ascontiguousarray(g.bytes_out()).tobytes())
-        h.update("|".join(g.op_types()).encode())
+        _fingerprint_one(h, g)
     return h.hexdigest()

@@ -127,3 +127,104 @@ def test_corpus_fingerprint_sensitivity():
     # cost edits change it too
     a[0].nodes[1].flops += 1.0
     assert corpus_fingerprint(a) != corpus_fingerprint(b)
+
+
+# ---------------------------------------------------------------- streaming
+def test_stream_marker_parse_and_roundtrip():
+    from repro.graphs import StreamingCorpus
+    s = "synthetic:family=layered:count=4:size=16:seed=0"
+    spec = parse_corpus_spec("stream:" + s)
+    assert spec.mode == "stream"
+    assert str(spec) == "stream:" + s
+    assert parse_corpus_spec(str(spec)) == spec
+    # bare marker segment works too, and parses to the same entries
+    assert parse_corpus_spec("stream;" + s).entries == spec.entries
+    assert parse_corpus_spec("eager:" + s).mode == "eager"
+    assert parse_corpus_spec(s).mode is None
+    assert isinstance(build_corpus("stream:" + s), StreamingCorpus)
+    assert isinstance(build_corpus(s), list)
+    assert isinstance(build_corpus(s, stream=True), StreamingCorpus)
+
+
+def test_stream_marker_contradictions():
+    with pytest.raises(ValueError,
+                       match=r"segment 1 .*'eager' contradicts earlier "
+                             r"'stream'"):
+        parse_corpus_spec("stream:benchmark;eager:synthetic:count=2")
+    with pytest.raises(ValueError, match="contradicts the corpus spec's"):
+        build_corpus("eager:benchmark:names=bert_base", stream=True)
+    with pytest.raises(ValueError, match="contradicts the corpus spec's"):
+        build_corpus("stream:benchmark:names=bert_base", stream=False)
+
+
+def test_streaming_corpus_matches_eager():
+    """Same graphs, names, order and fingerprint as the dense list."""
+    s = ("synthetic:family=mixed:count=6:size=18:seed=2;"
+         "synthetic:family=mixed:count=6:size=18:seed=2")
+    eager = build_corpus(s)
+    sc = build_corpus("stream:" + s)
+    assert len(sc) == len(eager)
+    assert corpus_fingerprint(sc) == corpus_fingerprint(eager)
+    for ge, gs in zip(eager, sc):
+        assert ge.name == gs.name          # incl. /2 uniquification
+        assert ge.num_nodes == gs.num_nodes
+        assert np.array_equal(ge.edges, gs.edges)
+        assert ge.op_types() == gs.op_types()
+
+
+def test_streaming_corpus_lru_eviction():
+    from repro.graphs import StreamingCorpus
+    sc = StreamingCorpus("synthetic:count=8:size=12:seed=0",
+                         cache_graphs=3)
+    for i in range(8):
+        sc[i]
+    assert sc.cached_indices() == [5, 6, 7]
+    g5 = sc[5]                             # hit: refresh recency
+    assert sc.cached_indices() == [6, 7, 5]
+    assert sc[5] is g5
+    assert sc[0] is not None               # miss: rebuilds, evicts 6
+    assert sc.cached_indices() == [7, 5, 0]
+    with pytest.raises(IndexError):
+        sc[8]
+    with pytest.raises(ValueError, match="cache_graphs"):
+        StreamingCorpus("benchmark", cache_graphs=0)
+
+
+def test_graph_meta_matches_feature_config():
+    """GraphMeta duck-types the vocab accessors bit-for-bit."""
+    from repro.core.features import (check_feature_compat,
+                                     shared_feature_config)
+    from repro.graphs import StreamingCorpus
+    s = "synthetic:family=mixed:count=5:size=20:seed=4"
+    eager = build_corpus(s)
+    sc = StreamingCorpus(s)
+    assert shared_feature_config(sc.meta) == shared_feature_config(eager)
+    check_feature_compat(shared_feature_config(eager), sc.meta)
+    for g, m in zip(eager, sc.meta):
+        assert m.name == g.name
+        assert m.num_nodes == g.num_nodes
+        assert m.num_edges == g.edges.shape[0]
+        assert m.max_in_degree == int(g.in_degrees().max())
+        assert np.array_equal(m.in_degrees(), g.in_degrees())
+        assert np.array_equal(m.out_degrees(), g.out_degrees())
+
+
+def test_provider_must_implement_one_hook():
+    class Neither(WorkloadProvider):
+        name = "neither"
+
+    with pytest.raises(NotImplementedError, match="neither"):
+        Neither().build()
+    with pytest.raises(NotImplementedError, match="neither"):
+        Neither().lazy_build()
+
+    class BuildOnly(WorkloadProvider):
+        name = "build_only"
+
+        def build(self, **params):
+            return build_corpus("synthetic:count=2:size=12:seed=0")
+
+    # the fallback lazy_build streams through build()
+    thunks = BuildOnly().lazy_build()
+    assert len(thunks) == 2
+    assert thunks[1]().name == BuildOnly().build()[1].name

@@ -33,6 +33,61 @@ def test_sharding_rules_resolve():
     assert spec2 == PartitionSpec(("pod", "data"), None, None, None)
 
 
+def test_use_rules_restores_on_exception():
+    """The context restores mesh+rules even when the body raises."""
+    from repro.distributed.sharding import current_mesh, use_rules
+    from repro.distributed import sharding
+
+    assert current_mesh() is None
+    with pytest.raises(RuntimeError):
+        with use_rules("outer-mesh", {"batch": "data"}):
+            assert current_mesh() == "outer-mesh"
+            with pytest.raises(RuntimeError):
+                with use_rules("inner-mesh", {"batch": None}):
+                    assert current_mesh() == "inner-mesh"
+                    raise RuntimeError("inner boom")
+            # inner context unwound cleanly, outer still active
+            assert current_mesh() == "outer-mesh"
+            assert sharding._CTX.rules["batch"] == "data"
+            raise RuntimeError("outer boom")
+    assert current_mesh() is None
+    assert sharding._CTX.rules is None
+
+
+def test_use_rules_bad_rules_leave_context_intact():
+    """A rules mapping that explodes during merge must not half-activate."""
+    from repro.distributed.sharding import current_mesh, use_rules
+
+    from collections.abc import Mapping
+
+    class BoomMapping(Mapping):
+        def __getitem__(self, k):
+            raise RuntimeError("bad rules")
+
+        def __iter__(self):
+            return iter(["batch"])
+
+        def __len__(self):
+            return 1
+
+        def keys(self):
+            raise RuntimeError("bad rules")
+
+    with use_rules("outer-mesh"):
+        with pytest.raises(RuntimeError, match="bad rules"):
+            with use_rules("inner-mesh", BoomMapping()):
+                pass                             # pragma: no cover
+        assert current_mesh() == "outer-mesh"
+    assert current_mesh() is None
+
+
+def test_rollout_rules_resolve():
+    from jax.sharding import PartitionSpec
+    from repro.distributed.sharding import ROLLOUT_RULES, logical_spec
+    spec = logical_spec(("time", "graphs", "chains"), ROLLOUT_RULES)
+    assert spec == PartitionSpec(None, "graphs", "chains")
+
+
 def test_mesh_axis_filtering():
     """'pod' is dropped when the mesh lacks that axis (single-pod mode)."""
     out = run_with_devices("""

@@ -1,0 +1,144 @@
+"""ShardedRolloutEngine parity contract (PR-6 tentpole).
+
+* mesh 1×1 trains **bit-for-bit** equal to the unsharded
+  DynamicRolloutEngine (every psum is an identity, the shard body is the
+  same jaxpr — ``build_window_fns`` is shared).
+* Any real factorization (2×2, 4×2) matches the unsharded run to ≤1e-5 on
+  final parameters — the only delta is the in-mesh float32 replay-weights
+  kernel vs the host float64 path.
+
+Multi-device runs follow DESIGN.md §8: subprocesses with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the main test
+process keeps one device).
+"""
+import numpy as np
+import pytest
+
+from test_distributed import run_with_devices
+
+_CFG_KW = dict(num_devices=2, hidden_channel=16, max_episodes=3,
+               update_timestep=2, batch_chains=4)
+_SPEC = "synthetic:family=mixed:count=8:size=14:seed=0"
+
+
+def _train(mesh_shape=None, **kw):
+    import jax
+    from repro.core.costmodel import paper_platform
+    from repro.core.hsdag import HSDAGConfig
+    from repro.core.train.curriculum import CurriculumTrainer
+    from repro.graphs import build_corpus
+
+    trainer = CurriculumTrainer(
+        HSDAGConfig(**_CFG_KW), max_buckets=2, graphs_per_episode=4,
+        mesh_shape=mesh_shape, **kw)
+    res = trainer.train_corpus(build_corpus(_SPEC),
+                               platform=paper_platform())
+    return res, [np.asarray(l) for l in jax.tree.leaves(res.params)]
+
+
+def test_mesh_1x1_bitwise_training():
+    """mesh=1×1 is the unsharded run, bit for bit (params, bests, greedy)."""
+    ref, ref_leaves = _train(mesh_shape=None)
+    got, got_leaves = _train(mesh_shape=(1, 1))
+    for a, b in zip(ref_leaves, got_leaves):
+        np.testing.assert_array_equal(a, b)
+    np.testing.assert_array_equal(ref.best_latencies, got.best_latencies)
+    np.testing.assert_array_equal(ref.greedy_latencies, got.greedy_latencies)
+
+
+def test_fused_weights_match_host_pergraph():
+    """window_weights (in-mesh f32) ≈ the host f64 pergraph+step_weights
+    path, for both discount modes and with/without time-normalization."""
+    from repro.core.hsdag import HSDAGConfig
+    from repro.core.reinforce import step_weights
+    from repro.core.sim import ShardedRolloutEngine
+
+    eng = ShardedRolloutEngine(lambda *a, **k: None, HSDAGConfig(),
+                               mesh_shape=(1, 1))
+    rng = np.random.default_rng(0)
+    rewards = rng.standard_normal((5, 2, 4)).astype(np.float32) * 3.0
+
+    for rtg in (False, True):
+        for norm in (False, True):
+            got = np.asarray(eng.window_weights(
+                rewards, gamma=0.97, reward_to_go=rtg, normalize=norm,
+                reward_norm="pergraph"))
+            r = rewards.astype(np.float64)
+            mean = r.mean(axis=(0, 2), keepdims=True)
+            std = r.std(axis=(0, 2), keepdims=True)
+            w_gbt = step_weights(
+                np.transpose((r - mean) / (std + 1e-8), (1, 2, 0)),
+                0.97, reward_to_go=rtg, normalize=norm)
+            want = np.transpose(w_gbt, (2, 0, 1))
+            np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-4)
+
+    # reward_norm="none": no standardization at all
+    got = np.asarray(eng.window_weights(
+        rewards, gamma=1.0, reward_to_go=False, normalize=False,
+        reward_norm="none"))
+    want = np.transpose(step_weights(
+        np.transpose(rewards.astype(np.float64), (1, 2, 0)), 1.0,
+        reward_to_go=False, normalize=False), (2, 0, 1))
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-4)
+
+
+def test_mesh_needs_devices():
+    """A mesh larger than the visible device set names the XLA_FLAGS fix."""
+    from repro.core.sim import make_rollout_mesh
+    with pytest.raises(ValueError, match="host_platform_device_count"):
+        make_rollout_mesh(2, 2)
+
+
+def test_mesh_tiling_validation():
+    """G/B not divisible by the mesh axes raise before any device work."""
+    from repro.core.costmodel import paper_platform
+    from repro.core.hsdag import HSDAGConfig
+    from repro.core.train.curriculum import CurriculumTrainer
+    from repro.graphs import build_corpus
+
+    graphs = build_corpus("synthetic:count=4:size=12:seed=1")
+    t = CurriculumTrainer(HSDAGConfig(**_CFG_KW), graphs_per_episode=3,
+                          mesh_shape=(2, 1))
+    with pytest.raises(ValueError, match="does not tile the mesh 'graphs'"):
+        t.train_corpus(graphs, platform=paper_platform())
+    t = CurriculumTrainer(HSDAGConfig(**dict(_CFG_KW, batch_chains=3)),
+                          graphs_per_episode=2, mesh_shape=(1, 2))
+    with pytest.raises(ValueError, match="does not tile the mesh 'chains'"):
+        t.train_corpus(graphs, platform=paper_platform())
+    with pytest.raises(ValueError, match="must be positive"):
+        CurriculumTrainer(HSDAGConfig(**_CFG_KW), mesh_shape=(0, 2))
+    with pytest.raises(ValueError, match="unknown update mode"):
+        CurriculumTrainer(HSDAGConfig(**_CFG_KW), update="psum")
+
+
+def test_sharded_parity_multidevice():
+    """2×2 and 4×2 meshes match the unsharded run to ≤1e-5 on final params
+    (8 virtual host devices; the weights kernel is the only f32 delta)."""
+    out = run_with_devices("""
+        import jax, numpy as np
+        from repro.core.costmodel import paper_platform
+        from repro.core.hsdag import HSDAGConfig
+        from repro.core.train.curriculum import CurriculumTrainer
+        from repro.graphs import build_corpus
+
+        SPEC = "synthetic:family=mixed:count=8:size=14:seed=0"
+        cfg = HSDAGConfig(num_devices=2, hidden_channel=16, max_episodes=2,
+                          update_timestep=2, batch_chains=4)
+
+        def leaves(mesh_shape):
+            tr = CurriculumTrainer(cfg, max_buckets=2, graphs_per_episode=4,
+                                   mesh_shape=mesh_shape)
+            res = tr.train_corpus(build_corpus(SPEC),
+                                  platform=paper_platform())
+            return [np.asarray(l) for l in jax.tree.leaves(res.params)]
+
+        ref = leaves(None)
+        for shape in ((2, 2), (4, 2)):
+            got = leaves(shape)
+            worst = max(float(np.max(np.abs(a - b)))
+                        for a, b in zip(ref, got))
+            assert worst <= 1e-5, (shape, worst)
+            print("mesh", shape, "max|dparam|", worst)
+        print("OK")
+    """, n=8, timeout=600)
+    assert "OK" in out

@@ -250,3 +250,26 @@ def test_warm_start_requires_feature_config(tmp_path):
     ft = CurriculumTrainer(_cfg())
     with pytest.raises(ValueError, match="feature_config"):
         ft.warm_start(d)
+
+
+def test_streaming_corpus_trains_bitwise_equal():
+    """A StreamingCorpus run replays the eager run bit for bit: metadata
+    bucket shapes equal the sim_arrays-derived ones, the LRU only changes
+    residency."""
+    spec = "synthetic:family=mixed:count=8:size=18:seed=0"
+
+    def run(graphs):
+        t = CurriculumTrainer(_cfg(), max_buckets=2, graphs_per_episode=2,
+                              stream_cache=3)
+        return t.train_corpus(graphs, platform=PLAT)
+
+    ref = run(build_corpus(spec))
+    got = run(build_corpus("stream:" + spec))
+    for a, b in zip(jax.tree.leaves(ref.params),
+                    jax.tree.leaves(got.params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(ref.best_latencies, got.best_latencies)
+    np.testing.assert_array_equal(ref.greedy_latencies,
+                                  got.greedy_latencies)
+    assert [h["graphs"] for h in ref.history] == \
+        [h["graphs"] for h in got.history]
