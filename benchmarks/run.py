@@ -21,6 +21,7 @@ import table7_generalization
 import table8_corpus
 import table9_serving
 import table10_sharded
+import table11_server
 
 
 def _roofline_rows() -> None:
@@ -52,6 +53,7 @@ def main() -> None:
     table8_corpus.main()
     table9_serving.main()
     table10_sharded.main()
+    table11_server.main()
     _roofline_rows()
 
 

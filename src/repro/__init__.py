@@ -23,6 +23,9 @@ _V1_SURFACE = {
     "PlacementSpec": "api",
     "PlacementSession": "api",
     "PlacementService": "api",
+    "AsyncPlacementServer": "api",
+    "AotExecutableCache": "api",
+    "PlacementRequestError": "api",
     "register_platform": "api",
     "platform_names": "api",
     "build_platform": "api",

@@ -22,13 +22,16 @@ The facade is equivalence-pinned: ``fit`` reproduces ``HSDAG.search`` /
 bit-for-bit (``tests/test_api.py``), so everything the PR-1..4 suites
 guarantee about the engines holds through this surface.  See docs/API.md.
 """
-from .service import PlacementService
+from .aot import AotExecutableCache
+from .server import AsyncPlacementServer
+from .service import PlacementRequestError, PlacementService
 from .session import PlacementSession
 from .spec import (MODES, SPEC_VERSION, PlacementSpec, build_platform,
                    platform_names, register_platform)
 
 __all__ = [
     "PlacementSpec", "PlacementSession", "PlacementService",
+    "AsyncPlacementServer", "AotExecutableCache", "PlacementRequestError",
     "SPEC_VERSION", "MODES",
     "register_platform", "platform_names", "build_platform",
 ]

@@ -15,10 +15,26 @@ The service keeps everything warm:
   of *distinct bucket shapes* in the request stream, not the number of
   distinct graphs (``shape_keys_seen`` exposes the bound, as in the PR-4
   curriculum trainer).
+* **Persistent AOT executable cache** — with ``aot_cache=`` set, the first
+  traced decode of each bucket shape is exported (``jax.export``) and
+  persisted keyed by ``(spec_hash, bucket shape, batch_slots)``; a fresh
+  process serving a previously-seen bucket preloads the executable and
+  performs **zero traces** (``shape_keys_seen`` stays empty, hits counted
+  in ``aot_decodes`` and the cache's own counters).  The ~1.1 s cold
+  compile is paid once per build, not once per process.
 * **Batched decode** — :meth:`place_many` packs concurrent requests into
   fixed ``(batch_slots,)``-wide greedy decodes (one device call per chunk,
   short chunks padded with repeats), so a burst of same-bucket requests
   costs one compiled call, not N.
+
+Failure isolation: requests are validated (featurized) one at a time, and
+a bad graph — out-of-vocabulary op type, malformed topology — fails *its
+own* request only.  ``place_many(..., return_exceptions=True)`` returns
+the per-request exception in that request's slot and serves the rest of
+the burst; the default raises :class:`PlacementRequestError` naming every
+offending graph *before* any counter or decode work, so ``stats()`` never
+drifts.  (:class:`~repro.api.AsyncPlacementServer` builds per-request
+futures on the same isolation.)
 
 Padding is free correctness-wise: pad slots are masked throughout the
 encoder/GPN/policy (the PR-2 contract), so a bucket-padded greedy decode is
@@ -38,9 +54,10 @@ from ..core.features import GraphArrays, batch_graph_arrays
 from ..core.graph import CompGraph
 from ..core.sim.rollout import DynamicRolloutEngine, GraphOperands
 from ..graphs.workloads import corpus_fingerprint
+from .aot import AotExecutableCache
 from .session import PlacementSession
 
-__all__ = ["PlacementService"]
+__all__ = ["PlacementService", "PlacementRequestError"]
 
 
 def _round_up(n: int, granularity: int) -> int:
@@ -48,18 +65,38 @@ def _round_up(n: int, granularity: int) -> int:
                * granularity)
 
 
+class PlacementRequestError(ValueError):
+    """A burst contained invalid requests; names each offending graph.
+
+    ``failures`` maps request index → the underlying exception, so a
+    caller that wants partial results can retry with
+    ``return_exceptions=True`` instead.
+    """
+
+    def __init__(self, failures: Dict[int, Exception],
+                 names: Dict[int, str]):
+        self.failures = dict(failures)
+        detail = "; ".join(
+            f"request {i} ({names.get(i, '?')!r}): {failures[i]}"
+            for i in sorted(failures))
+        super().__init__(
+            f"{len(failures)} invalid request(s) in burst — {detail}")
+
+
 class PlacementService:
     """See module docstring.  Example::
 
-        service = PlacementService("ckpt/corpus_policy")   # or a session
-        placement = service.place(graph)                   # warm after 1st
-        placements = service.place_many(burst_of_graphs)   # batched decode
-        service.stats()   # hits/misses/recompile bound
+        service = PlacementService("ckpt/corpus_policy",  # or a session
+                                   aot_cache="ckpt/aot")  # optional, persists
+        placement = service.place(graph)                  # warm after 1st
+        placements = service.place_many(burst_of_graphs)  # batched decode
+        service.stats()   # hits/misses/recompile bound/AOT counters
     """
 
     def __init__(self, session: Union[PlacementSession, str], *,
                  cache_size: int = 64, batch_slots: int = 4,
-                 size_granularity: int = 16):
+                 size_granularity: int = 16,
+                 aot_cache: Union[AotExecutableCache, str, None] = None):
         if isinstance(session, str):
             session = PlacementSession.load(session)
         session._require_fit()
@@ -81,9 +118,20 @@ class PlacementService:
         self._keys = jnp.stack(
             [jax.random.fold_in(jax.random.PRNGKey(0), j)
              for j in range(self.batch_slots)])
+        if isinstance(aot_cache, str):
+            aot_cache = AotExecutableCache(aot_cache)
+        self._aot = aot_cache
+        self._spec_hash = (session.spec.spec_hash()
+                           if session.spec is not None else None)
+        # buckets whose persisted executable was already looked up / whose
+        # traced executable was already exported (once per process each)
+        self._aot_checked: set = set()
+        self._aot_loaded: set = set()
+        self._aot_stored: set = set()
         self.cache_hits = 0
         self.cache_misses = 0
         self.requests = 0
+        self.failed = 0
 
     # ------------------------------------------------------------- prep LRU
     def _prepared(self, graph: CompGraph) -> GraphArrays:
@@ -93,8 +141,8 @@ class PlacementService:
             self.cache_hits += 1
             self._arrays.move_to_end(key)
             return arrays
+        arrays = self.session.featurize(graph)   # may raise: count after
         self.cache_misses += 1
-        arrays = self.session.featurize(graph)
         self._arrays[key] = arrays
         while len(self._arrays) > self._cache_size:
             self._arrays.popitem(last=False)
@@ -104,6 +152,36 @@ class PlacementService:
         g = self.size_granularity
         return (_round_up(arrays.num_nodes, g),
                 _round_up(max(1, arrays.edges.shape[0]), g))
+
+    # ----------------------------------------------------------- AOT plumbing
+    def _aot_preload(self, bucket: Tuple[int, int]) -> None:
+        """Try once per bucket to install the persisted executable."""
+        if self._aot is None or bucket in self._aot_checked:
+            return
+        self._aot_checked.add(bucket)
+        if self._spec_hash is None:
+            return
+        blob = self._aot.load(self._spec_hash, bucket, self.batch_slots)
+        if blob is None:
+            return
+        try:
+            self._engine.preload_greedy(blob)
+            self._aot_loaded.add(bucket)
+        except Exception:
+            # version skew / corrupt blob: fall back to tracing; the
+            # post-decode export below overwrites the bad entry
+            self._aot.note_load_failure()
+
+    def _aot_export(self, bucket: Tuple[int, int],
+                    ops: GraphOperands) -> None:
+        """Persist the freshly-traced executable (once per bucket)."""
+        if (self._aot is None or self._spec_hash is None
+                or bucket in self._aot_stored or bucket in self._aot_loaded):
+            return
+        self._aot_stored.add(bucket)
+        blob = self._engine.export_greedy(ops, self.session.trainer.params,
+                                          self._keys)
+        self._aot.store(self._spec_hash, bucket, self.batch_slots, blob)
 
     # --------------------------------------------------------------- serving
     def place(self, graph: CompGraph) -> np.ndarray:
@@ -115,51 +193,97 @@ class PlacementService:
         p = self.place(graph)
         return p, simulate(graph, p, self.session.platform).latency
 
-    def place_many(self, graphs: Sequence[CompGraph]) -> List[np.ndarray]:
+    def decode_bucket(self, bucket: Tuple[int, int],
+                      members: Sequence[Tuple[int, GraphArrays]],
+                      out: List) -> None:
+        """Decode same-bucket ``(slot_index, arrays)`` members into ``out``.
+
+        The one device-facing hot path: chunks of ``batch_slots`` requests,
+        each decoded by a single compiled call (AOT-preloaded when the
+        persistent cache has this bucket, traced + exported otherwise).
+        Shared by :meth:`place_many` and the async server's batch flusher.
+        """
+        vb, eb = bucket
+        self._aot_preload(bucket)
+        for lo in range(0, len(members), self.batch_slots):
+            chunk = members[lo:lo + self.batch_slots]
+            # short chunks pad with repeats of the first request so the
+            # decode always traces at (batch_slots,) — G is part of the
+            # jit shape key and must not vary per burst size
+            padded = [a for _, a in chunk]
+            padded += [padded[0]] * (self.batch_slots - len(chunk))
+            gb = batch_graph_arrays(padded, v_max=vb, e_max=eb)
+            ops = GraphOperands(
+                x0=jnp.asarray(gb.x), adj=jnp.asarray(gb.adj),
+                edges=jnp.asarray(gb.edges),
+                node_mask=jnp.asarray(gb.node_mask),
+                edge_mask=jnp.asarray(gb.edge_mask), sim=None)
+            fines, _ = self._engine.greedy_decode(
+                ops, self.session.trainer.params, self._keys)
+            fines = np.asarray(fines)
+            for k, (i, arrays) in enumerate(chunk):
+                out[i] = fines[k, :arrays.num_nodes].astype(np.int64)
+            self._aot_export(bucket, ops)
+            self.requests += len(chunk)
+
+    def place_many(self, graphs: Sequence[CompGraph], *,
+                   return_exceptions: bool = False) -> List:
         """Batch a burst of requests into per-bucket ``(G,)`` decodes.
 
         Requests are grouped by bucket shape and decoded ``batch_slots`` at
-        a time; response order matches the request order.
+        a time; response order matches the request order.  A request that
+        fails validation (e.g. out-of-vocabulary ops) fails alone: with
+        ``return_exceptions=True`` its slot holds the exception and every
+        valid request is still served; with the default ``False`` the whole
+        burst raises :class:`PlacementRequestError` *before* any decode, so
+        counters stay consistent (``requests`` only ever counts decoded
+        requests, ``failed`` counts rejected ones).
         """
         graphs = list(graphs)
-        self.requests += len(graphs)
-        entries = [(i, self._prepared(g)) for i, g in enumerate(graphs)]
+        out: List = [None] * len(graphs)
+        entries: List[Tuple[int, GraphArrays]] = []
+        failures: Dict[int, Exception] = {}
+        for i, g in enumerate(graphs):
+            try:
+                entries.append((i, self._prepared(g)))
+            except Exception as e:         # noqa: BLE001 — isolated per request
+                self.failed += 1
+                failures[i] = e
+        if failures and not return_exceptions:
+            raise PlacementRequestError(
+                failures, {i: getattr(graphs[i], "name", "?")
+                           for i in failures})
+        for i, e in failures.items():
+            out[i] = e
         groups: Dict[Tuple[int, int], List[Tuple[int, GraphArrays]]] = {}
         for i, arrays in entries:
             groups.setdefault(self._bucket_shape(arrays), []).append(
                 (i, arrays))
-        out: List[Optional[np.ndarray]] = [None] * len(graphs)
-        for (vb, eb), members in groups.items():
-            for lo in range(0, len(members), self.batch_slots):
-                chunk = members[lo:lo + self.batch_slots]
-                # short chunks pad with repeats of the first request so the
-                # decode always traces at (batch_slots,) — G is part of the
-                # jit shape key and must not vary per burst size
-                padded = [a for _, a in chunk]
-                padded += [padded[0]] * (self.batch_slots - len(chunk))
-                gb = batch_graph_arrays(padded, v_max=vb, e_max=eb)
-                ops = GraphOperands(
-                    x0=jnp.asarray(gb.x), adj=jnp.asarray(gb.adj),
-                    edges=jnp.asarray(gb.edges),
-                    node_mask=jnp.asarray(gb.node_mask),
-                    edge_mask=jnp.asarray(gb.edge_mask), sim=None)
-                fines, _ = self._engine.greedy_decode(
-                    ops, self.session.trainer.params, self._keys)
-                fines = np.asarray(fines)
-                for k, (i, arrays) in enumerate(chunk):
-                    out[i] = fines[k, :arrays.num_nodes].astype(np.int64)
+        for bucket, members in groups.items():
+            self.decode_bucket(bucket, members, out)
         return out
 
     # ------------------------------------------------------------ telemetry
     @property
     def shape_keys_seen(self) -> set:
-        """Distinct padded operand shapes decoded so far — the compile
-        bound (one trace per shape, however many graphs stream through)."""
+        """Distinct padded operand shapes *traced* so far — the compile
+        bound (one trace per shape, however many graphs stream through).
+        Decodes served from a preloaded AOT executable never appear here."""
         return self._engine.shape_keys_seen
 
+    @property
+    def aot_decodes(self) -> int:
+        """Decode calls served by a preloaded (never-traced) executable."""
+        return self._engine.aot_hits
+
     def stats(self) -> Dict[str, int]:
-        return {"requests": self.requests,
-                "cache_hits": self.cache_hits,
-                "cache_misses": self.cache_misses,
-                "cached_graphs": len(self._arrays),
-                "shape_keys_seen": len(self.shape_keys_seen)}
+        stats = {"requests": self.requests,
+                 "failed": self.failed,
+                 "cache_hits": self.cache_hits,
+                 "cache_misses": self.cache_misses,
+                 "cached_graphs": len(self._arrays),
+                 "shape_keys_seen": len(self.shape_keys_seen),
+                 "aot_decodes": self.aot_decodes}
+        if self._aot is not None:
+            stats.update(self._aot.stats())
+        return stats

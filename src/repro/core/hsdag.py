@@ -332,7 +332,8 @@ class HSDAG:
         if engine == "auto" and cfg.batch_chains == 1 and platform is None:
             return self._search_scalar(arrays, reward_fn, rng, verbose)
         if reward_fn is not None:
-            pipeline = RewardPipeline.from_reward_fn(reward_fn)
+            pipeline = RewardPipeline.from_reward_fn(
+                reward_fn, num_nodes=graph.num_nodes)
         else:
             backend = engine if engine not in _LOOP_ENGINES else "scan"
             pipeline = RewardPipeline.from_platform(graph, platform, backend)

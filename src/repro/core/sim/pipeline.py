@@ -46,16 +46,25 @@ class RewardPipeline:
 
     # ------------------------------------------------------------ construction
     @classmethod
-    def from_reward_fn(cls, reward_fn: Callable) -> "RewardPipeline":
-        """Host callable ``fn(fine_placement) -> (reward, latency)``."""
-        return cls(reward_fn=reward_fn)
+    def from_reward_fn(cls, reward_fn: Callable, *,
+                       num_nodes: Optional[int] = None) -> "RewardPipeline":
+        """Host callable ``fn(fine_placement) -> (reward, latency)``.
+
+        ``num_nodes`` is the graph's true node count: a bucket-padded
+        rollout produces (V_max,) placement rows, and the callable (the
+        ``MeasuredExecutor`` slot) must see only the ``:num_nodes`` prefix —
+        pad slots are policy noise, not ops.
+        """
+        nn = [int(num_nodes)] if num_nodes is not None else None
+        return cls(reward_fn=reward_fn, num_nodes=nn)
 
     @classmethod
     def from_platform(cls, graph, platform,
                       backend: str = "scan") -> "RewardPipeline":
         """Single-graph pipeline over a registered simulator backend."""
         b = get_backend(backend) if isinstance(backend, str) else backend
-        return cls(backend=b, prep=b.prepare(graph, platform))
+        return cls(backend=b, prep=b.prepare(graph, platform),
+                   num_nodes=[graph.num_nodes])
 
     @classmethod
     def from_graphs(cls, graphs: Sequence, platform, *,
@@ -105,16 +114,19 @@ class RewardPipeline:
 
     def _score_single(self, fines):
         T, B, V = fines.shape
+        # Bucket-padded rollouts hand (V_max,) rows; only the ``:nn`` prefix
+        # is real ops — the same trim _score_multi applies per graph.
+        nn = self._num_nodes[0] if self._num_nodes else V
         if self.reward_fn is not None:
             rewards = np.empty((T, B))
             latencies = np.empty((T, B))
             for t in range(T):            # (t, b) order — scalar-engine order
                 for b in range(B):
                     rewards[t, b], latencies[t, b] = self.reward_fn(
-                        fines[t, b])
+                        fines[t, b, :nn])
             return rewards, latencies
         res = self.backend.simulate_batch(self.prep,
-                                          fines.reshape(T * B, V))
+                                          fines[:, :, :nn].reshape(T * B, nn))
         return (np.asarray(res.reward, np.float64).reshape(T, B),
                 np.asarray(res.latency, np.float64).reshape(T, B))
 

@@ -292,6 +292,20 @@ class GraphOperands(NamedTuple):
                      for a in jax.tree.leaves(self))
 
 
+# AOT export (jax.export) serializes pytree structure by name; registering
+# GraphOperands once here lets any process deserialize an exported decode
+# whose signature carries the operand tuple.  Older jax builds without the
+# hook simply lose AOT support (export_greedy raises), nothing else.
+try:  # pragma: no cover - trivially version-dependent
+    from jax import export as _jax_export
+    _jax_export.register_namedtuple_serialization(
+        GraphOperands, serialized_name="repro.core.sim.GraphOperands")
+    _HAVE_EXPORT = True
+except (ImportError, AttributeError):  # pragma: no cover
+    _jax_export = None
+    _HAVE_EXPORT = False
+
+
 def build_window_fns(step, cfg, *, fused: bool, backend):
     """The raw (unjitted) operand-style window functions.
 
@@ -435,6 +449,12 @@ class DynamicRolloutEngine:
         self._fused = backend is not None and backend.jit_fused
         self._fns = None
         self.shape_keys_seen = set()
+        # AOT-loaded greedy executables by shape key: decodes served from
+        # here never trace (shape_keys_seen stays untouched) — the serving
+        # layer preloads them from a persistent cache so a fresh process
+        # pays zero compiles for previously-seen bucket shapes.
+        self._aot_greedy: dict = {}
+        self.aot_hits = 0
 
     # ------------------------------------------------------------- builders
     def _build(self):
@@ -469,5 +489,45 @@ class DynamicRolloutEngine:
                               num_steps=num_steps, start_first=start_first)
 
     def greedy_decode(self, ops: GraphOperands, params, keys):
+        aot = self._aot_greedy.get(ops.shape_key())
+        if aot is not None:
+            self.aot_hits += 1
+            return aot(ops, params, keys)
         self._note(ops)
         return self._built[2](ops, params, keys)
+
+    # ------------------------------------------------------------ AOT export
+    def export_greedy(self, ops: GraphOperands, params, keys) -> bytes:
+        """Serialize the greedy decode at ``ops``'s shapes via ``jax.export``.
+
+        The returned blob is the lowered StableHLO module plus the call
+        signature: a fresh process :meth:`preload_greedy`-s it and serves
+        this shape without ever tracing the policy step (the dominant cost
+        of a cold decode).  Parameter *values* are call-time operands, so
+        one export survives policy updates; only shape changes invalidate.
+        """
+        if not _HAVE_EXPORT:
+            raise RuntimeError(
+                "jax.export is unavailable in this jax build — AOT "
+                "executable caching requires it")
+        return _jax_export.export(self._built[2])(ops, params, keys) \
+            .serialize()
+
+    def preload_greedy(self, blob: bytes) -> Tuple:
+        """Install a serialized greedy decode; → its operand shape key.
+
+        Subsequent :meth:`greedy_decode` calls at that shape run the
+        deserialized executable (counted in ``aot_hits``) instead of
+        tracing.  The shape key is recovered from the export's own input
+        signature, so the caller needs no side channel.
+        """
+        if not _HAVE_EXPORT:
+            raise RuntimeError(
+                "jax.export is unavailable in this jax build — AOT "
+                "executable caching requires it")
+        exported = _jax_export.deserialize(bytes(blob))
+        args, _ = exported.in_tree.unflatten(list(exported.in_avals))
+        key = tuple((tuple(a.shape), str(a.dtype))
+                    for a in jax.tree.leaves(args[0]))
+        self._aot_greedy[key] = exported.call
+        return key

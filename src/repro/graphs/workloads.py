@@ -492,6 +492,21 @@ class StreamingCorpus:
             return g
         g = self._thunks[i]()
         g.name = self._names[i]      # re-apply corpus-level uniquification
+        # A provider thunk must re-materialize the *same* graph the init
+        # sweep recorded — a nondeterministic provider (unseeded RNG, wall
+        # clock, mutable captured state) would otherwise silently train on
+        # graphs the fingerprint/meta never saw.  Sizes are the cheap
+        # invariant every downstream consumer (bucket plan, SimArrays,
+        # feature extraction) keys on, so check them on every rebuild.
+        meta = self.meta[i]
+        nn, ne = int(g.num_nodes), int(g.edges.shape[0])
+        if nn != meta.num_nodes or ne != meta.num_edges:
+            raise RuntimeError(
+                f"streaming corpus graph {meta.name!r} (index {i}) "
+                f"re-materialized with {nn} nodes / {ne} edges but was "
+                f"recorded at init with {meta.num_nodes} nodes / "
+                f"{meta.num_edges} edges — the provider thunk is "
+                f"nondeterministic; seed it or materialize eagerly")
         self._lru[i] = g
         while len(self._lru) > self.cache_graphs:
             self._lru.popitem(last=False)

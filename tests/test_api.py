@@ -125,6 +125,7 @@ def test_parse_corpus_spec_names_segment_and_position():
 
 
 # ------------------------------------------------- facade fit equivalence
+@pytest.mark.slow
 def test_fit_search_matches_hsdag_search_bit_for_bit():
     wl = "synthetic:family=layered:count=1:size=10:seed=5"
     cfg = _cfg(max_episodes=3, update_timestep=4)
@@ -164,6 +165,7 @@ def test_fit_search_explicit_graphs_and_reward_fn(diamond):
     _assert_trees_equal(res.params, direct.params)
 
 
+@pytest.mark.slow
 def test_fit_multi_matches_train_multi_bit_for_bit():
     wl = "synthetic:family=layered:count=2:size=12:seed=2"
     cfg = _cfg()
@@ -178,6 +180,7 @@ def test_fit_multi_matches_train_multi_bit_for_bit():
     _assert_trees_equal(res.params, direct.params)
 
 
+@pytest.mark.slow
 def test_fit_corpus_matches_train_corpus_bit_for_bit():
     wl = "synthetic:family=mixed:count=5:size=14:seed=3"
     cfg = _cfg()
@@ -256,6 +259,7 @@ def test_session_place_validates_vocab():
 
 
 # ----------------------------------------------------------- the service
+@pytest.mark.slow
 def test_service_equivalence_cache_and_recompile_bound(tmp_path):
     wl = "synthetic:family=mixed:count=6:size=14:seed=6"
     session = PlacementSession(PlacementSpec(

@@ -228,3 +228,45 @@ def test_provider_must_implement_one_hook():
     thunks = BuildOnly().lazy_build()
     assert len(thunks) == 2
     assert thunks[1]().name == BuildOnly().build()[1].name
+
+
+def test_streaming_corpus_rejects_nondeterministic_thunk():
+    """PR-7 regression: a provider whose thunks re-materialize a *different*
+    graph than the init sweep recorded must raise by graph name, not
+    silently corrupt training (meta/fingerprint describe a graph the LRU
+    never serves again)."""
+    from repro.graphs import StreamingCorpus
+
+    class Drifting(WorkloadProvider):
+        """Every build() call grows the graph by one node."""
+
+        name = "test_drifting"
+
+        def __init__(self):
+            self.calls = 0
+
+        def lazy_build(self, **params):
+            def thunk():
+                self.calls += 1
+                g = layered_dag(num_layers=2 + self.calls, width=3, seed=0)
+                g.name = "drifter"
+                return g
+            return [thunk]
+
+    register_workload(Drifting())
+    sc = StreamingCorpus("test_drifting", cache_graphs=1)
+    # init sweep consumed call 1 (11 nodes); the first __getitem__ rebuild
+    # materializes call 2 (12 nodes) — sizes no longer match the meta
+    with pytest.raises(RuntimeError, match=r"drifter.*nondeterministic"):
+        sc[0]
+
+
+def test_streaming_corpus_deterministic_rebuild_passes_check():
+    """Seeded providers rebuild identically — the size check is free."""
+    from repro.graphs import StreamingCorpus
+    sc = StreamingCorpus("synthetic:count=3:size=14:seed=5", cache_graphs=1)
+    for i in range(3):          # every access beyond the LRU is a rebuild
+        g = sc[i]
+        assert g.num_nodes == sc.meta[i].num_nodes
+    for i in range(3):          # second sweep: all rebuilds, all verified
+        sc[i]

@@ -33,6 +33,7 @@ def test_step_weights_reward_to_go():
     np.testing.assert_allclose(w, [1.5, 1.0])
 
 
+@pytest.mark.slow
 def test_search_beats_worst_single_device(diamond):
     cfg = HSDAGConfig(num_devices=2, hidden_channel=32, max_episodes=6,
                       update_timestep=8)

@@ -184,6 +184,7 @@ def _cfg(**kw):
     return HSDAGConfig(**base)
 
 
+@pytest.mark.slow
 def test_g1_train_multi_matches_batched_bit_for_bit(diamond):
     """Acceptance: G=1 reproduces the PR-1 batched engine's trajectory —
     identical per-episode stats, best placement AND final parameters."""

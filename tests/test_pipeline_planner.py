@@ -10,9 +10,12 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 
+@pytest.mark.slow
 def test_plan_driven_pipeline_matches_sequential():
     code = textwrap.dedent("""
         import jax, jax.numpy as jnp, numpy as np

@@ -1,0 +1,101 @@
+"""RewardPipeline contracts — padded-row trimming for host reward_fns.
+
+Regression suite for the PR-7 serving bugfix: ``_score_single`` handed the
+full padded (V_max,) placement row to ``reward_fn`` while ``_score_multi``
+trimmed to the graph's true ``:num_nodes`` prefix.  A bucket-padded
+single-graph rollout therefore fed pad slots to the ``MeasuredExecutor``
+slot.  These tests fail on the pre-fix code.
+"""
+import numpy as np
+import pytest
+
+from repro.core import paper_platform, simulate
+from repro.core.sim.pipeline import RewardPipeline
+
+from conftest import make_diamond
+
+PLAT = paper_platform()
+
+
+def _padded_fines(T, B, nn, v_max, rng):
+    """(T, B, V_max) placements whose pad slots carry garbage device ids."""
+    fines = rng.integers(0, 2, size=(T, B, v_max))
+    fines[:, :, nn:] = 97  # poison: any consumer of pad slots must notice
+    return fines
+
+
+def test_score_single_reward_fn_trims_pad_slots():
+    g = make_diamond()
+    nn, v_max = g.num_nodes, g.num_nodes + 9
+    seen_lengths = []
+
+    def reward_fn(p):
+        seen_lengths.append(len(p))
+        assert not np.any(np.asarray(p) == 97), \
+            "reward_fn received pad slots from a padded rollout row"
+        r = simulate(g, np.asarray(p), PLAT)
+        return r.reward, r.latency
+
+    pipe = RewardPipeline.from_reward_fn(reward_fn, num_nodes=nn)
+    fines = _padded_fines(3, 2, nn, v_max, np.random.default_rng(0))
+    rewards, latencies = pipe.score_window(fines)
+    assert rewards.shape == latencies.shape == (3, 2)
+    assert seen_lengths == [nn] * (3 * 2)
+
+
+def test_score_single_matches_unpadded_scores():
+    """Padded and unpadded windows of the same placements score equal."""
+    g = make_diamond()
+    nn = g.num_nodes
+
+    def reward_fn(p):
+        r = simulate(g, np.asarray(p), PLAT)
+        return r.reward, r.latency
+
+    rng = np.random.default_rng(1)
+    base = rng.integers(0, 2, size=(2, 3, nn))
+    padded = np.full((2, 3, nn + 5), 97, dtype=base.dtype)
+    padded[:, :, :nn] = base
+
+    exact = RewardPipeline.from_reward_fn(reward_fn,
+                                          num_nodes=nn).score_window(base)
+    trimmed = RewardPipeline.from_reward_fn(reward_fn,
+                                            num_nodes=nn).score_window(padded)
+    np.testing.assert_array_equal(exact[0], trimmed[0])
+    np.testing.assert_array_equal(exact[1], trimmed[1])
+
+
+def test_score_single_backend_trims_pad_slots():
+    """The simulator-backend path trims too (prep is built unpadded)."""
+    g = make_diamond()
+    nn = g.num_nodes
+    pipe = RewardPipeline.from_platform(g, PLAT, backend="reference")
+    rng = np.random.default_rng(2)
+    base = rng.integers(0, 2, size=(2, 2, nn))
+    padded = np.full((2, 2, nn + 7), 97, dtype=base.dtype)
+    padded[:, :, :nn] = base
+    r_pad, l_pad = pipe.score_window(padded)
+    r_ref, l_ref = pipe.score_window(base)
+    np.testing.assert_allclose(r_pad, r_ref)
+    np.testing.assert_allclose(l_pad, l_ref)
+
+
+def test_from_reward_fn_without_num_nodes_passes_rows_through():
+    """Legacy callers (no padding) keep the identity contract."""
+    rows = []
+
+    def reward_fn(p):
+        rows.append(np.asarray(p).copy())
+        return 0.0, 0.0
+
+    pipe = RewardPipeline.from_reward_fn(reward_fn)
+    fines = np.arange(2 * 1 * 4).reshape(2, 1, 4)
+    pipe.score_window(fines)
+    np.testing.assert_array_equal(rows[0], fines[0, 0])
+    assert all(r.shape == (4,) for r in rows)
+
+
+def test_score_window_rejects_bad_rank():
+    pipe = RewardPipeline.from_reward_fn(lambda p: (0.0, 0.0))
+    with pytest.raises(ValueError, match="placements"):
+        pipe.score_window(np.zeros((3, 4)))

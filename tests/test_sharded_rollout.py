@@ -36,6 +36,7 @@ def _train(mesh_shape=None, **kw):
     return res, [np.asarray(l) for l in jax.tree.leaves(res.params)]
 
 
+@pytest.mark.slow
 def test_mesh_1x1_bitwise_training():
     """mesh=1×1 is the unsharded run, bit for bit (params, bests, greedy)."""
     ref, ref_leaves = _train(mesh_shape=None)
@@ -111,6 +112,7 @@ def test_mesh_tiling_validation():
         CurriculumTrainer(HSDAGConfig(**_CFG_KW), update="psum")
 
 
+@pytest.mark.slow
 def test_sharded_parity_multidevice():
     """2×2 and 4×2 meshes match the unsharded run to ≤1e-5 on final params
     (8 virtual host devices; the weights kernel is the only f32 delta)."""

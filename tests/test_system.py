@@ -41,6 +41,7 @@ def test_calibration_matches_paper_ordering():
     assert gains["bert"] > 0.45
 
 
+@pytest.mark.slow
 def test_hsdag_end_to_end_beats_cpu(resnet):
     arrays = extract_features(resnet, FeatureConfig(d_pos=16))
     plat = paper_platform()

@@ -93,6 +93,7 @@ def test_sampler_validation():
 
 
 # ---------------------------------------------------------- corpus training
+@pytest.mark.slow
 def test_curriculum_mixed_corpus_smoke():
     """Acceptance-shaped (scaled down for CI): a ≥12-graph mixed corpus —
     benchmark + traced LM layer + synthetic — trains with jit recompiles
@@ -125,6 +126,7 @@ def test_curriculum_mixed_corpus_smoke():
                 rtol=1e-5)
 
 
+@pytest.mark.slow
 def test_curriculum_resume_bitwise(tmp_path):
     """3 episodes + checkpoint + 3 resumed episodes ≡ 6 straight episodes:
     same final params (bitwise) and same cumulative bests."""
@@ -149,6 +151,7 @@ def test_curriculum_resume_bitwise(tmp_path):
     np.testing.assert_array_equal(r1.best_latencies, r3.best_latencies)
 
 
+@pytest.mark.slow
 def test_curriculum_resume_bitwise_with_ema_baseline(tmp_path):
     """The EMA baseline feeds step_weights, so its state must ride in the
     checkpoint too (regression: a resumed use_baseline run used to restart
@@ -195,6 +198,7 @@ def _trained_policy_dir(tmp_path, corpus):
     return d, tr
 
 
+@pytest.mark.slow
 def test_warm_start_restores_and_fine_tunes(tmp_path):
     corpus = _small_corpus(5, 16, seed=3)
     d, tr = _trained_policy_dir(tmp_path, corpus)
@@ -252,6 +256,7 @@ def test_warm_start_requires_feature_config(tmp_path):
         ft.warm_start(d)
 
 
+@pytest.mark.slow
 def test_streaming_corpus_trains_bitwise_equal():
     """A StreamingCorpus run replays the eager run bit for bit: metadata
     bucket shapes equal the sim_arrays-derived ones, the LRU only changes
