@@ -4,13 +4,20 @@ Output convention (benchmarks/run.py): CSV rows ``name,us_per_call,derived``.
 ``REPRO_BENCH_EPISODES`` scales RL search effort (default 12 — CI-friendly;
 the paper's Appendix-H setting is 100.  Results monotonically improve with
 episodes; the table structure is identical).
+
+Machine-readable output: ``run.py --json-out DIR`` captures every
+:func:`emit` row and writes one ``BENCH_<table>.json`` file per table —
+rows carry the benchmark name, the emitting config (when the table passes
+one), the metric and the host's ``physical_cores``, so results from
+different machines stay comparable.
 """
 from __future__ import annotations
 
 import dataclasses
+import json
 import os
 import time
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
@@ -26,9 +33,70 @@ from repro.graphs import PAPER_BENCHMARKS
 EPISODES = int(os.environ.get("REPRO_BENCH_EPISODES", "12"))
 UPDATE_TIMESTEP = int(os.environ.get("REPRO_BENCH_TIMESTEP", "10"))
 
+# ------------------------------------------------------------- JSON capture
+_JSON: Dict = {"dir": None, "table": None, "rows": []}
 
-def emit(name: str, us_per_call: float, derived: str) -> None:
+
+def physical_cores() -> int:
+    """Physical core count (unique (physical id, core id) pairs from
+    /proc/cpuinfo); falls back to the logical count off-Linux."""
+    try:
+        pairs, phys = set(), None
+        with open("/proc/cpuinfo") as f:
+            for line in f:
+                if line.startswith("physical id"):
+                    phys = line.split(":", 1)[1].strip()
+                elif line.startswith("core id"):
+                    pairs.add((phys, line.split(":", 1)[1].strip()))
+        if pairs:
+            return len(pairs)
+    except OSError:
+        pass
+    return os.cpu_count() or 1
+
+
+def set_json_dir(path: str) -> None:
+    """Start capturing emit() rows; flush_json() writes them under ``path``."""
+    _JSON["dir"] = path
+    _JSON["rows"] = []
+
+
+def begin_table(table: str) -> None:
+    """Tag subsequent emit() rows with ``table`` (run.py calls this before
+    each table module's main)."""
+    _JSON["table"] = table
+
+
+def flush_json() -> List[str]:
+    """Write one ``BENCH_<table>.json`` per captured table → file paths."""
+    if _JSON["dir"] is None:
+        return []
+    os.makedirs(_JSON["dir"], exist_ok=True)
+    by_table: Dict[str, List[dict]] = {}
+    for row in _JSON["rows"]:
+        by_table.setdefault(row.pop("table"), []).append(row)
+    paths = []
+    for table, rows in sorted(by_table.items()):
+        path = os.path.join(_JSON["dir"], f"BENCH_{table}.json")
+        with open(path, "w") as f:
+            json.dump(rows, f, indent=1, sort_keys=True)
+        paths.append(path)
+    _JSON["rows"] = []
+    return paths
+
+
+def emit(name: str, us_per_call: float, derived: str,
+         config: Optional[Dict] = None) -> None:
     print(f"{name},{us_per_call:.3f},{derived}")
+    if _JSON["dir"] is not None:
+        _JSON["rows"].append({
+            "table": _JSON["table"] or "misc",
+            "benchmark": name,
+            "config": dict(config or {}),
+            "metric": {"us_per_call": float(us_per_call),
+                       "derived": derived},
+            "physical_cores": physical_cores(),
+        })
 
 
 def reward_fn_for(graph, platform=None):

@@ -3,14 +3,22 @@
 Prints ``name,us_per_call,derived`` CSV rows.  Effort is scaled by
 ``REPRO_BENCH_EPISODES`` (default 12; the paper uses 100 — see Appendix H).
 Roofline rows are appended from results/dryrun when present.
+
+``--json-out DIR`` additionally writes one machine-readable
+``BENCH_<table>.json`` per table (rows: benchmark name, emitting config,
+metric, host ``physical_cores``) so table numbers are regression-checkable
+across machines.  ``--tables a,b`` restricts the run to named tables
+(e.g. ``--tables table6_throughput,table12_population``).
 """
 from __future__ import annotations
 
+import argparse
 import os
 import sys
 
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
+import common
 import table1_graph_stats
 import table2_placement
 import table3_ablation
@@ -22,6 +30,24 @@ import table8_corpus
 import table9_serving
 import table10_sharded
 import table11_server
+import table12_population
+
+#: execution order; the name doubles as the --tables selector and the
+#: BENCH_<name>.json stem.
+TABLES = [
+    ("table1_graph_stats", table1_graph_stats),
+    ("table2_placement", table2_placement),
+    ("table3_ablation", table3_ablation),
+    ("table4_downstream", table4_downstream),
+    ("table5_complexity", table5_complexity),
+    ("table6_throughput", table6_throughput),
+    ("table7_generalization", table7_generalization),
+    ("table8_corpus", table8_corpus),
+    ("table9_serving", table9_serving),
+    ("table10_sharded", table10_sharded),
+    ("table11_server", table11_server),
+    ("table12_population", table12_population),
+]
 
 
 def _roofline_rows() -> None:
@@ -41,20 +67,34 @@ def _roofline_rows() -> None:
              f"roofline_frac={100*r['roofline_fraction']:.1f}%")
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json-out", default=os.environ.get(
+        "REPRO_BENCH_JSON_OUT", ""),
+        help="directory for machine-readable BENCH_<table>.json files")
+    ap.add_argument("--tables", default="",
+                    help="comma-separated table names to run (default: all)")
+    args = ap.parse_args(argv)
+    if args.tables:
+        want = set(args.tables.split(","))
+        unknown = want - {n for n, _ in TABLES}
+        if unknown:
+            ap.error(f"unknown tables {sorted(unknown)}; known: "
+                     f"{[n for n, _ in TABLES]}")
+        tables = [(n, m) for n, m in TABLES if n in want]
+    else:
+        tables = TABLES
+    if args.json_out:
+        common.set_json_dir(args.json_out)
+
     print("name,us_per_call,derived")
-    table1_graph_stats.main()
-    table2_placement.main()
-    table3_ablation.main()
-    table4_downstream.main()
-    table5_complexity.main()
-    table6_throughput.main()
-    table7_generalization.main()
-    table8_corpus.main()
-    table9_serving.main()
-    table10_sharded.main()
-    table11_server.main()
+    for name, mod in tables:
+        common.begin_table(name)
+        mod.main()
+    common.begin_table("roofline")
     _roofline_rows()
+    for path in common.flush_json():
+        print(f"# wrote {path}", file=sys.stderr)
 
 
 if __name__ == "__main__":

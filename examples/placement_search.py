@@ -40,7 +40,7 @@ import warnings
 import numpy as np
 
 from repro.api import PlacementSession, PlacementSpec
-from repro.core import HSDAGConfig, simulate
+from repro.core import HSDAGConfig, PopulationConfig, simulate
 from repro.core.baselines import cpu_only, gpu_only
 from repro.core.planner import plan_stages
 from repro.configs import get
@@ -79,7 +79,12 @@ def build_spec(args) -> PlacementSpec:
         warm_start=(args.warm_start or None
                     if args.mode == "corpus" else None),
         mesh=([int(x) for x in args.mesh.split("x")] if args.mesh else None),
-        stream=bool(args.stream))
+        stream=bool(args.stream),
+        population=(PopulationConfig(
+            cull_every=args.cull_every,
+            greedy_restart_every=args.greedy_restart_every)
+            if args.population else None),
+        prefetch=args.prefetch)
 
 
 def report_search(session: PlacementSession, res) -> None:
@@ -176,7 +181,9 @@ def _fill_defaults(args) -> None:
                  ("episodes", 10), ("chains", 8), ("engine", "auto"),
                  ("warm_start", ""), ("max_buckets", 4),
                  ("graphs_per_episode", 4), ("sampler", "stratified"),
-                 ("checkpoint", ""), ("mode", "search")):
+                 ("checkpoint", ""), ("mode", "search"),
+                 ("population", False), ("cull_every", 4),
+                 ("greedy_restart_every", 0), ("prefetch", "auto")):
         if not hasattr(args, k):
             setattr(args, k, v)
 
@@ -251,6 +258,22 @@ def main():
     ap.add_argument("--stream", action="store_true",
                     help="with --mode corpus: build the workload as a "
                          "streaming corpus (lazy graphs behind an LRU)")
+    ap.add_argument("--population", action="store_true",
+                    help="PBT-style chain-population search: per-chain "
+                         "sampling temperatures, periodic culling of the "
+                         "worst chains, elite exchange and greedy restarts "
+                         "(scale --chains to 256+ to benefit)")
+    ap.add_argument("--cull-every", type=int, default=4,
+                    help="with --population: PBT transition period, in "
+                         "update windows (search/multi) or episodes (corpus)")
+    ap.add_argument("--greedy-restart-every", type=int, default=0,
+                    help="with --population: every Nth PBT transition "
+                         "re-seeds culled chains from a greedy decode "
+                         "instead of the per-graph best chain (0 = never)")
+    ap.add_argument("--prefetch", default="auto",
+                    choices=("auto", "on", "off"),
+                    help="with --mode corpus: overlap host featurization of "
+                         "episode t+1 with device rollouts of episode t")
     # ---- deprecated pre-v1 spellings (shims over --mode/--workload) ----
     ap.add_argument("--multi-graph", action="store_true",
                     help="DEPRECATED: use --mode multi")

@@ -142,7 +142,7 @@ class PlacementSession:
                 graph, arr,
                 reward_fn=reward_fn,
                 platform=self.platform if reward_fn is None else None,
-                rng=rng, verbose=verbose)
+                rng=rng, verbose=verbose, population=spec.population)
             agent.feature_config = fc
             self.trainer = agent
         elif spec.mode == "multi":
@@ -151,7 +151,8 @@ class PlacementSession:
                            if spec.feature else None)
             result = trainer.train(graphs, list(arrays) if arrays else None,
                                    platform=self.platform, rng=rng,
-                                   verbose=verbose, feature_cfg=feature_cfg)
+                                   verbose=verbose, feature_cfg=feature_cfg,
+                                   population=spec.population)
             self.trainer = trainer
         else:                                   # corpus
             trainer = CurriculumTrainer(
@@ -160,7 +161,8 @@ class PlacementSession:
                 graphs_per_episode=spec.graphs_per_episode,
                 sampler_strategy=spec.sampler,
                 plateau_patience=spec.plateau_patience,
-                mesh_shape=tuple(spec.mesh) if spec.mesh else None)
+                mesh_shape=tuple(spec.mesh) if spec.mesh else None,
+                population=spec.population, prefetch=spec.prefetch)
             if spec.warm_start:
                 trainer.warm_start(spec.warm_start)
             elif spec.feature:
@@ -266,7 +268,8 @@ class PlacementSession:
                 graphs_per_episode=spec.graphs_per_episode,
                 sampler_strategy=spec.sampler,
                 plateau_patience=spec.plateau_patience,
-                mesh_shape=tuple(spec.mesh) if spec.mesh else None)
+                mesh_shape=tuple(spec.mesh) if spec.mesh else None,
+                population=spec.population, prefetch=spec.prefetch)
         from ..checkpoint import policy_feature_config
         fc = policy_feature_config(directory, step)
         if fc is None:

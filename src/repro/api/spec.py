@@ -32,6 +32,7 @@ from typing import Callable, Dict, List, Mapping, Optional, Union
 from ..core.costmodel import Platform, paper_platform, tpu_stage_platform
 from ..core.features import FeatureConfig
 from ..core.hsdag import HSDAGConfig
+from ..core.train.population import PopulationConfig
 from ..graphs.workloads import parse_corpus_spec
 
 __all__ = ["PlacementSpec", "SPEC_VERSION", "MODES",
@@ -131,6 +132,16 @@ class PlacementSpec:
     #: as one dense list.  A ``stream:``/``eager:`` marker inside
     #: ``workload`` must agree with this flag.
     stream: bool = False
+    #: PBT-style chain-population search over the B chains (culling, elite
+    #: exchange, greedy restarts — :class:`~repro.core.train.
+    #: PopulationConfig` or its dict form).  ``None`` keeps every engine
+    #: bit-for-bit identical to the plain run.  Valid in all three modes.
+    population: Optional[PopulationConfig] = None
+    #: host/device overlap for corpus mode: prefetch episode t+1's batch
+    #: arrays on a background thread while episode t runs on device.
+    #: ``"auto"`` enables it for multi-episode runs; ``"on"``/``"off"``
+    #: force.  Bit-for-bit neutral — only wall-clock changes.
+    prefetch: str = "auto"
 
     def __post_init__(self):
         if self.mode not in MODES:
@@ -162,6 +173,17 @@ class PlacementSpec:
         if self.reward_norm not in _REWARD_NORMS:
             raise ValueError(f"unknown reward_norm {self.reward_norm!r}; "
                              f"expected one of {_REWARD_NORMS}")
+        if isinstance(self.population, (dict, str)):
+            object.__setattr__(self, "population",
+                               PopulationConfig.from_json(self.population))
+        elif not (self.population is None
+                  or isinstance(self.population, PopulationConfig)):
+            raise ValueError(
+                f"population must be a PopulationConfig (or its JSON/dict "
+                f"form) or None, got {type(self.population).__name__}")
+        if self.prefetch not in ("auto", "on", "off"):
+            raise ValueError(f"unknown prefetch {self.prefetch!r}; expected "
+                             f"'auto', 'on' or 'off'")
         if self.sampler not in _SAMPLERS:
             raise ValueError(f"unknown sampler {self.sampler!r}; expected "
                              f"one of {_SAMPLERS}")
@@ -200,6 +222,8 @@ class PlacementSpec:
         """Canonical (sorted-key) JSON document, ``version``-stamped."""
         doc = dataclasses.asdict(self)
         doc["config"] = dataclasses.asdict(self.config)
+        if self.population is not None:
+            doc["population"] = dataclasses.asdict(self.population)
         doc["version"] = SPEC_VERSION
         return json.dumps(doc, sort_keys=True)
 

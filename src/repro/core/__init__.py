@@ -18,6 +18,8 @@ from .sim import (DynamicRolloutEngine, GraphOperands, RewardPipeline,
 from .hsdag import (HSDAG, HSDAGConfig, SearchResult,
                     MultiGraphTrainer, MultiSearchResult)
 from .train.curriculum import CorpusTrainResult, CurriculumTrainer
+from .train.population import (ChainState, PopulationConfig,
+                               PopulationController)
 from .train.sampler import CurriculumSampler
 
 __all__ = [
@@ -38,4 +40,5 @@ __all__ = [
     "HSDAG", "HSDAGConfig", "SearchResult",
     "MultiGraphTrainer", "MultiSearchResult",
     "CurriculumTrainer", "CorpusTrainResult", "CurriculumSampler",
+    "PopulationConfig", "PopulationController", "ChainState",
 ]

@@ -56,6 +56,7 @@ from .policy import PolicyOutput, policy_apply, policy_init
 from .reinforce import RolloutBuffer, RunningBaseline, step_weights
 from .sim import RewardPipeline, RolloutEngine, backend_names, get_backend
 from .train.loop import BestTracker, EpisodeRunner, WindowStream
+from .train.population import PopulationConfig, PopulationController
 
 __all__ = ["HSDAGConfig", "HSDAG", "SearchResult",
            "MultiGraphTrainer", "MultiSearchResult"]
@@ -71,6 +72,17 @@ def _validate_engine(engine: str) -> str:
     raise ValueError(
         f"unknown engine {engine!r}; rollout loops: {_LOOP_ENGINES}; "
         f"registered simulator backends: {backend_names()}")
+
+
+def _as_population(population) -> PopulationConfig:
+    """Accept a :class:`PopulationConfig` or its JSON (dict/str) form."""
+    if isinstance(population, PopulationConfig):
+        return population
+    if isinstance(population, (dict, str)):
+        return PopulationConfig.from_json(population)
+    raise TypeError(
+        f"population must be a PopulationConfig or its JSON form, "
+        f"got {type(population).__name__}")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -230,13 +242,16 @@ class HSDAG:
     def _step(self, params: Dict, z: jnp.ndarray, x0: jnp.ndarray,
               adj: jnp.ndarray, edges: jnp.ndarray, rng, *,
               first: bool, train: bool, greedy: bool = False,
-              node_mask=None, edge_mask=None) -> StepOutput:
+              node_mask=None, edge_mask=None,
+              temperature=None) -> StepOutput:
         """One Alg.-1 iteration: encode → parse → place → state update.
 
         ``node_mask``/``edge_mask`` (``None`` for single-graph use) thread the
         padded multi-graph batch contract through the encoder, the GPN and the
         state update; the masked computation on an unpadded graph is the
-        unmasked one.
+        unmasked one.  ``temperature`` (``None`` = off, a trace-time branch)
+        is the per-chain sampling temperature population search threads into
+        the policy head.
         """
         cfg = self.cfg
         k_net, k_parse, k_pol = jax.random.split(rng, 3)
@@ -252,7 +267,8 @@ class HSDAG:
             dropout_parsing=cfg.dropout_parsing if train else 0.0,
             node_mask=node_mask, edge_mask=edge_mask)
         pol = policy_apply(params["pol"], parse.pooled_z, parse.active,
-                           parse.labels, k_pol, greedy=greedy)
+                           parse.labels, k_pol, greedy=greedy,
+                           temperature=temperature)
         # Alg. 1 line 10: Z_v ← Z_v + Z_{v'}.
         z_next = z_enc + parse.pooled_z[parse.labels]
         if cfg.state_norm:
@@ -261,7 +277,8 @@ class HSDAG:
 
     # ----------------------------------------------------- engine construction
     def _engine_single(self, arrays: GraphArrays,
-                       pipeline: Optional[RewardPipeline]) -> RolloutEngine:
+                       pipeline: Optional[RewardPipeline],
+                       population=None) -> RolloutEngine:
         """The unified (G, B) engine over a single graph (G=1).
 
         A G=1 batch normally needs no padding, so masks drop at trace time
@@ -270,17 +287,19 @@ class HSDAG:
         edge table to one (masked) slot, and the masks must ride along or
         the phantom edge would enter the GPN unmasked.
         """
-        return self._engine_multi(batch_graph_arrays([arrays]), pipeline)
+        return self._engine_multi(batch_graph_arrays([arrays]), pipeline,
+                                  population)
 
     def _engine_multi(self, gb: GraphArraysBatch,
-                      pipeline: Optional[RewardPipeline]) -> RolloutEngine:
+                      pipeline: Optional[RewardPipeline],
+                      population=None) -> RolloutEngine:
         """The same engine over a padded multi-graph batch."""
         use_masks = gb.padded
         return RolloutEngine(
             self._step, self.cfg, x0=gb.x, adj=gb.adj, edges=gb.edges,
             node_mask=gb.node_mask if use_masks else None,
             edge_mask=gb.edge_mask if use_masks else None,
-            pipeline=pipeline)
+            pipeline=pipeline, population=population)
 
     # ---------------------------------------------------------------- search
     def search(self, graph: CompGraph, arrays: GraphArrays,
@@ -288,7 +307,8 @@ class HSDAG:
                                             Tuple[float, float]]] = None,
                rng=None, verbose: bool = False, *,
                platform: Optional[Platform] = None,
-               engine: Optional[str] = None) -> SearchResult:
+               engine: Optional[str] = None,
+               population: Optional[PopulationConfig] = None) -> SearchResult:
         """Run the full RL search (Alg. 1) and return the best placement.
 
         Reward source: ``platform`` (a registered simulator backend — the
@@ -299,6 +319,14 @@ class HSDAG:
         reference implementation); ``"batched"``/``"scalar"`` force a loop;
         a backend name ("reference"/"scan"/"level"/plug-ins) forces the
         batched loop with that reward backend.
+
+        ``population`` (a :class:`~repro.core.train.PopulationConfig` or its
+        dict form) turns the B chains into a PBT-style population: every
+        chain samples at its own temperature, and every ``cull_every``
+        windows the worst chains are re-seeded from the elites (optionally
+        from a greedy decode) with perturbed temperatures.  ``None`` (the
+        default) leaves the engine bit-for-bit identical to the plain
+        batched loop.
         """
         cfg = self.cfg
         engine = _validate_engine(engine if engine is not None
@@ -321,6 +349,15 @@ class HSDAG:
             raise ValueError(
                 f"engine={engine!r} names a simulator backend but a host "
                 f"reward_fn was also given — pass exactly one reward source")
+        if population is not None:
+            population = _as_population(population)
+            if engine == "scalar" or (engine == "auto"
+                                      and cfg.batch_chains == 1
+                                      and platform is None):
+                raise ValueError(
+                    "population search needs the batched multi-chain loop; "
+                    "engine='scalar' (and the batch_chains==1 auto-scalar "
+                    "path) has no chain population")
         if engine == "scalar":
             if cfg.batch_chains != 1:
                 raise ValueError("engine='scalar' requires batch_chains == 1")
@@ -337,7 +374,8 @@ class HSDAG:
         else:
             backend = engine if engine not in _LOOP_ENGINES else "scan"
             pipeline = RewardPipeline.from_platform(graph, platform, backend)
-        return self._search_batched(arrays, pipeline, rng, verbose)
+        return self._search_batched(arrays, pipeline, rng, verbose,
+                                    population=population)
 
     # ------------------------------------------------- scalar reference loop
     def _search_scalar(self, arrays: GraphArrays, reward_fn,
@@ -422,7 +460,9 @@ class HSDAG:
     # ------------------------------------------------ batched multi-chain loop
     def _search_batched(self, arrays: GraphArrays,
                         pipeline: RewardPipeline,
-                        rng, verbose: bool) -> SearchResult:
+                        rng, verbose: bool,
+                        population: Optional[PopulationConfig] = None
+                        ) -> SearchResult:
         """B parallel chains through the unified (G, B) engine at G=1."""
         cfg = self.cfg
         nchains = max(1, cfg.batch_chains)
@@ -432,8 +472,18 @@ class HSDAG:
             rng, k_init = jax.random.split(rng)
             self.init(k_init, arrays)
 
-        engine = self._engine_single(arrays, pipeline)
+        engine = self._engine_single(arrays, pipeline, population)
         baseline = RunningBaseline() if cfg.use_baseline else None
+
+        # Population search: per-chain temperatures + in-jit PBT transitions.
+        # The key is fold_in-derived so the chain PRNG streams below are
+        # untouched — population=None stays bit-for-bit the plain loop.
+        controller = pop = None
+        if population is not None:
+            controller = PopulationController(population, num_chains=nchains,
+                                              in_jit_pbt=True)
+            pop = engine.init_population(jax.random.fold_in(rng, 0x706F70),
+                                         num_chains=nchains)
 
         best_latency = float("inf")
         best_placement = np.zeros(arrays.num_nodes, dtype=np.int64)
@@ -453,10 +503,17 @@ class HSDAG:
 
         for episode in range(cfg.max_episodes):
             t_ep = time.perf_counter()
-            (z, chain_rngs, keys, fines, ngroups, rewards,
-             latencies) = engine.rollout_window(
-                self.params, z0_window, chain_rngs,
-                num_steps=tsteps, start_first=first_of_window)
+            if pop is not None:
+                (z, chain_rngs, pop, keys, fines, ngroups, rewards,
+                 latencies) = engine.rollout_window_pop(
+                    self.params, z0_window, chain_rngs, pop,
+                    num_steps=tsteps, start_first=first_of_window)
+            else:
+                (z, chain_rngs, keys, fines, ngroups, rewards,
+                 latencies) = engine.rollout_window(
+                    self.params, z0_window, chain_rngs,
+                    num_steps=tsteps, start_first=first_of_window)
+            sample_temps = pop.temperature if pop is not None else None
             fines_np = np.asarray(fines)[:, 0]                # (T, B, V)
             if pipeline.fused:
                 rewards = np.asarray(rewards, dtype=np.float64)[:, 0]
@@ -465,6 +522,10 @@ class HSDAG:
                 # Window scoring: host reward_fn loop, or one batched device
                 # call for jit_window backends (the level kernel).
                 rewards, latencies = pipeline.score_window(fines_np)
+                if pop is not None:
+                    pop = engine.update_population(
+                        pop, fines,
+                        jnp.asarray(latencies, jnp.float32)[:, None, :])
 
             # Bookkeeping in (t, b) order — identical to the scalar loop at
             # B=1 (EMA baseline order and strict-< best tie-breaks matter).
@@ -485,10 +546,31 @@ class HSDAG:
                 normalize=cfg.normalize_weights)
             weights_tgb = jnp.asarray(weights_bt.T)[:, None]  # (T, 1, B)
             for _ in range(max(1, cfg.k_epochs)):
-                grads = engine.window_grads(
-                    self.params, z0_window, keys, weights_tgb,
-                    num_steps=tsteps, start_first=first_of_window)
+                if pop is not None:
+                    grads = engine.window_grads_pop(
+                        self.params, z0_window, keys, weights_tgb,
+                        sample_temps, num_steps=tsteps,
+                        start_first=first_of_window)
+                else:
+                    grads = engine.window_grads(
+                        self.params, z0_window, keys, weights_tgb,
+                        num_steps=tsteps, start_first=first_of_window)
                 self.apply_grads(grads)
+            pop_stats: Dict = {}
+            if controller is not None:
+                # PBT runs AFTER the replay update (the gradient must see the
+                # temperatures this window actually sampled at); re-seeded
+                # chain states and new temperatures take effect next window.
+                due, use_greedy = controller.note_window()
+                if due:
+                    pop, z = engine.pbt_step(self.params, pop, z,
+                                             use_greedy=use_greedy)
+                pop_stats = {
+                    "culled": bool(due),
+                    "pop_best_latency": float(
+                        np.min(np.asarray(pop.best_latency))),
+                    "temp_mean": float(np.mean(np.asarray(pop.temperature))),
+                }
             z0_window = z
             first_of_window = False
             history.append({
@@ -497,6 +579,7 @@ class HSDAG:
                 "best_latency": best_latency,
                 "mean_groups": float(np.mean(np.asarray(ngroups))),
                 "wall_s": time.perf_counter() - t_ep,
+                **pop_stats,
             })
             if verbose:
                 h = history[-1]
@@ -515,7 +598,9 @@ class HSDAG:
                     platform: Platform,
                     rng=None, verbose: bool = False,
                     feature_cfg: Optional[FeatureConfig] = None,
-                    reward_norm: str = "pergraph") -> MultiSearchResult:
+                    reward_norm: str = "pergraph",
+                    population: Optional[PopulationConfig] = None
+                    ) -> MultiSearchResult:
         """Train ONE policy jointly over ``graphs`` (GDP/Placeto-style).
 
         Runs ``(G, batch_chains)`` REINFORCE chains in a single jitted
@@ -549,6 +634,8 @@ class HSDAG:
             raise ValueError("train_multi needs at least one graph")
         if reward_norm not in ("none", "pergraph"):
             raise ValueError(f"unknown reward_norm {reward_norm!r}")
+        if population is not None:
+            population = _as_population(population)
         if cfg.num_devices > platform.num_devices:
             raise ValueError(
                 f"cfg.num_devices={cfg.num_devices} exceeds the platform's "
@@ -582,7 +669,7 @@ class HSDAG:
             rng, k_init = jax.random.split(rng)
             self.init(k_init, arrays[0])
 
-        engine = self._engine_multi(gb, pipeline)
+        engine = self._engine_multi(gb, pipeline, population)
         # The per-graph standardization below already centers rewards (it IS
         # a per-graph baseline); layering the scalar EMA baseline on top
         # would subtract a raw-reward-scale value (~1/latency) from ~N(0, 1)
@@ -597,10 +684,16 @@ class HSDAG:
         # with reward_norm="none" bit-for-bit the single-graph engine.
         num_nodes = [int(n) for n in gb.num_nodes]
         tracker = BestTracker(num_nodes, nchains)
+        controller = pop0 = None
+        if population is not None:
+            controller = PopulationController(population, num_chains=nchains,
+                                              in_jit_pbt=True)
+            pop0 = engine.init_population(jax.random.fold_in(rng, 0x706F70),
+                                          num_chains=nchains)
         runner = EpisodeRunner(self, engine, pipeline=pipeline,
                                tracker=tracker, reward_norm=reward_norm,
-                               baseline=baseline)
-        stream = WindowStream.fresh(rng, gb.x, nchains)
+                               baseline=baseline, controller=controller)
+        stream = WindowStream.fresh(rng, gb.x, nchains, pop=pop0)
         history: List[dict] = []
         tsteps = cfg.update_timestep
 
@@ -667,11 +760,13 @@ class MultiGraphTrainer(HSDAG):
     def train(self, graphs: List[CompGraph],
               arrays: Optional[List[GraphArrays]] = None, *,
               platform: Platform, rng=None, verbose: bool = False,
-              feature_cfg: Optional[FeatureConfig] = None
+              feature_cfg: Optional[FeatureConfig] = None,
+              population: Optional[PopulationConfig] = None
               ) -> MultiSearchResult:
         return self.train_multi(graphs, arrays, platform=platform, rng=rng,
                                 verbose=verbose, feature_cfg=feature_cfg,
-                                reward_norm=self.reward_norm)
+                                reward_norm=self.reward_norm,
+                                population=population)
 
     def evaluate_zero_shot(self, graph: CompGraph, *, platform: Platform,
                            arrays: Optional[GraphArrays] = None,

@@ -49,9 +49,18 @@ def _log_softmax(logits):
 
 def policy_apply(params: Dict, pooled_z: jnp.ndarray, active: jnp.ndarray,
                  labels: jnp.ndarray, rng, *,
-                 greedy: bool = False) -> PolicyOutput:
-    """Sample a placement for every active cluster slot and map it to nodes."""
+                 greedy: bool = False, temperature=None) -> PolicyOutput:
+    """Sample a placement for every active cluster slot and map it to nodes.
+
+    ``temperature`` (a per-chain scalar; population search threads it)
+    scales the categorical distribution to softmax(logits/T) — logp and
+    entropy follow the tempered distribution, so the Eq.-14 replay stays
+    the exact gradient of what was sampled.  ``None`` skips the division at
+    trace time: the jaxpr is unchanged from the temperature-free build.
+    """
     logits = mlp_apply(params["mlp"], pooled_z)
+    if temperature is not None:
+        logits = logits / temperature
     logp_full = _log_softmax(logits)
     if greedy:
         coarse = jnp.argmax(logits, axis=-1).astype(jnp.int32)

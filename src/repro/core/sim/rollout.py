@@ -31,7 +31,7 @@ import jax.numpy as jnp
 from .pipeline import RewardPipeline
 
 __all__ = ["RolloutEngine", "DynamicRolloutEngine", "GraphOperands",
-           "split_multi_keys", "build_window_fns"]
+           "PopulationWindowFns", "split_multi_keys", "build_window_fns"]
 
 
 def split_multi_keys(rngs: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
@@ -52,7 +52,8 @@ class RolloutEngine:
 
     def __init__(self, step_fn, cfg, *, x0, adj, edges,
                  node_mask=None, edge_mask=None,
-                 pipeline: Optional[RewardPipeline] = None):
+                 pipeline: Optional[RewardPipeline] = None,
+                 population=None):
         self._step = step_fn
         self._cfg = cfg
         self._x0 = jnp.asarray(x0)                   # (G, V, d)
@@ -67,6 +68,8 @@ class RolloutEngine:
                      if self._fused else None)
         self._window_fns = None
         self._scalar_fns = None
+        self._population = population
+        self._pop_state = None
 
     # ----------------------------------------------------- (G, B) window path
     def _build_window_fns(self):
@@ -208,6 +211,65 @@ class RolloutEngine:
         return self._window[1](params, z0, keys, weights,
                                num_steps=num_steps, start_first=start_first)
 
+    # ------------------------------------------------------- population API
+    # The pop path is implemented once, on the operand-style engine; the
+    # static engine delegates through a fixed GraphOperands built from its
+    # closure constants (all-true masks when it was constructed unmasked —
+    # numerically identical by the padding contract).  The closure-constant
+    # base path above is untouched, preserving the population=None pin.
+    @property
+    def _pop(self):
+        if self._pop_state is None:
+            if self._population is None:
+                raise ValueError(
+                    "population path requested but the engine was built "
+                    "without population= (pass a PopulationConfig)")
+            backend = (self._pipeline.backend
+                       if self._pipeline is not None else None)
+            eng = DynamicRolloutEngine(self._step, self._cfg,
+                                       backend=backend,
+                                       population=self._population)
+            nmask = (self._nmask if self._use_masks else
+                     jnp.ones(self._x0.shape[:2], dtype=bool))
+            emask = (self._emask if self._use_masks else
+                     jnp.ones(self._edges.shape[:2], dtype=bool))
+            ops = GraphOperands(self._x0, self._adj, self._edges,
+                                nmask, emask, sim=self._sim)
+            self._pop_state = (eng, ops)
+        return self._pop_state
+
+    @property
+    def population(self):
+        return self._population
+
+    def init_population(self, key, *, num_chains: int, temperatures=None):
+        eng, ops = self._pop
+        return eng.init_population(
+            key, num_graphs=self._x0.shape[0], num_chains=num_chains,
+            num_nodes=self._x0.shape[1], temperatures=temperatures)
+
+    def rollout_window_pop(self, params, z, rngs, pop, *, num_steps: int,
+                           start_first: bool):
+        eng, ops = self._pop
+        return eng.rollout_window_pop(ops, params, z, rngs, pop,
+                                      num_steps=num_steps,
+                                      start_first=start_first)
+
+    def window_grads_pop(self, params, z0, keys, weights, temps, *,
+                         num_steps: int, start_first: bool):
+        eng, ops = self._pop
+        return eng.window_grads_pop(ops, params, z0, keys, weights, temps,
+                                    num_steps=num_steps,
+                                    start_first=start_first)
+
+    def pbt_step(self, params, pop, z, *, use_greedy: bool = False):
+        eng, ops = self._pop
+        return eng.pbt_step(ops, params, pop, z, use_greedy=use_greedy)
+
+    def update_population(self, pop, fines, latencies):
+        eng, _ = self._pop
+        return eng.update_population(pop, fines, latencies)
+
     # ------------------------------------------------- scalar reference path
     def _build_scalar_fns(self):
         import numpy as np
@@ -306,7 +368,21 @@ except (ImportError, AttributeError):  # pragma: no cover
     _HAVE_EXPORT = False
 
 
-def build_window_fns(step, cfg, *, fused: bool, backend):
+class PopulationWindowFns(NamedTuple):
+    """The raw population-search window closures ``build_window_fns``
+    returns when a :class:`~repro.core.train.population.PopulationConfig`
+    is passed.  Same sharing contract as the base triple: the dynamic
+    engine jits them, the sharded engine shard_maps the same bodies."""
+
+    rollout: object       # (ops, params, z, rngs, pop, T, first) → 8-tuple
+    loss: object          # (ops, params, z0, keys, w, temps, T, first[, denom])
+    greedy: object        # (ops, params, keys) → (fine, ngroups) per graph
+    greedy_state: object  # (ops, params, keys) → (G, V, d) post-decode state
+    pbt: object           # (ops, params, pop, z, use_greedy) → (pop, z)
+    update_bests: object  # (pop, fines, latencies) → pop
+
+
+def build_window_fns(step, cfg, *, fused: bool, backend, population=None):
     """The raw (unjitted) operand-style window functions.
 
     One builder, two consumers: :class:`DynamicRolloutEngine` jits these
@@ -321,6 +397,15 @@ def build_window_fns(step, cfg, *, fused: bool, backend):
     behaviour); a sharded caller passes the *global* chain count so the
     per-shard partial losses sum (via psum of their grads) to exactly the
     unsharded mean.
+
+    With ``population=`` (a PopulationConfig) the return value is instead a
+    :class:`PopulationWindowFns`: the same rollout/loss bodies with the
+    per-chain sampling temperature threaded into every policy step (a
+    :class:`~repro.core.train.population.ChainState` rides along as an
+    operand, its per-chain best records updated in-jit when the pipeline is
+    fused), plus the full-view PBT transition.  ``population=None`` leaves
+    this function's output — closure for closure, jaxpr for jaxpr —
+    exactly the PR-7 build.
     """
 
     def _chain_sample(params, xg, ag, eg, nmg, emg, simg, z, key,
@@ -422,7 +507,169 @@ def build_window_fns(step, cfg, *, fused: bool, backend):
         return jax.vmap(per_graph)(ops.x0, ops.adj, ops.edges,
                                    ops.node_mask, ops.edge_mask, keys)
 
-    return _rollout_window, _window_loss, _greedy
+    if population is None:
+        return _rollout_window, _window_loss, _greedy
+
+    # ------------------------------------------------ population variants
+    # Function-level import: core/train pulls in the curriculum stack
+    # (which imports this module); by the time an engine is *built* both
+    # packages are fully imported, so no cycle — and the population-free
+    # path never touches core/train at all.
+    from ..train import population as popmod
+
+    def _chain_sample_pop(params, xg, ag, eg, nmg, emg, simg, z, key, temp,
+                          first: bool):
+        out = step(params, z, xg, ag, eg, key, first=first, train=True,
+                   node_mask=nmg, edge_mask=emg, temperature=temp)
+        fine = out.policy.fine_placement
+        if simg is not None:
+            reward, latency = backend.score(simg, fine)
+        else:
+            reward = latency = jnp.float32(0.0)
+        return (fine, out.parse.num_groups, out.z_next, reward, latency)
+
+    def _vsample_pop(ops, params, z, keys, temps, first: bool):
+        def per_graph(xg, ag, eg, nmg, emg, simg, z_b, k_b, t_b):
+            return jax.vmap(lambda z1, k1, t1: _chain_sample_pop(
+                params, xg, ag, eg, nmg, emg, simg, z1, k1, t1, first)
+            )(z_b, k_b, t_b)
+
+        if fused:
+            return jax.vmap(per_graph)(ops.x0, ops.adj, ops.edges,
+                                       ops.node_mask, ops.edge_mask,
+                                       ops.sim, z, keys, temps)
+        return jax.vmap(
+            lambda xg, ag, eg, nmg, emg, z_b, k_b, t_b: per_graph(
+                xg, ag, eg, nmg, emg, None, z_b, k_b, t_b)
+        )(ops.x0, ops.adj, ops.edges, ops.node_mask, ops.edge_mask,
+          z, keys, temps)
+
+    def _rollout_window_pop(ops, params, z, rngs, pop, num_steps: int,
+                            start_first: bool):
+        """→ (z, rngs, pop, keys, fine, ngroups, rewards, latencies); the
+        chain-best records fold in-jit when rewards are fused (host-scored
+        paths call ``update_bests`` afterwards)."""
+        temps = pop.temperature
+
+        def body(carry, _):
+            z_c, rngs_c = carry
+            rngs_c, keys = split_multi_keys(rngs_c)
+            fine, ngroups, z_next, rew, lat = _vsample_pop(
+                ops, params, z_c, keys, temps, first=False)
+            return (z_next, rngs_c), (keys, fine, ngroups, rew, lat)
+
+        if start_first:
+            rngs, keys0 = split_multi_keys(rngs)
+            fine0, ng0, z, rew0, lat0 = _vsample_pop(ops, params, z, keys0,
+                                                     temps, first=True)
+            (z, rngs), tail = jax.lax.scan(body, (z, rngs), None,
+                                           length=num_steps - 1)
+            head = (keys0, fine0, ng0, rew0, lat0)
+            outs = tuple(jnp.concatenate([h[None], t], axis=0)
+                         for h, t in zip(head, tail))
+        else:
+            (z, rngs), outs = jax.lax.scan(body, (z, rngs), None,
+                                           length=num_steps)
+        if fused:
+            pop = popmod.update_chain_bests(pop, outs[1], outs[4])
+        return (z, rngs, pop) + outs
+
+    def _window_loss_pop(ops, params, z0, keys, weights, temps,
+                         num_steps: int, start_first: bool, denom=None):
+        """The Eq.-14 replay with the *same* per-chain temperatures the
+        sampling pass used — the tempered logp is the exact log-density of
+        what was sampled, so the gradient stays unbiased."""
+
+        def _chain_loss(params_, xg, ag, eg, nmg, emg, z1, k1, w1, t1,
+                        first: bool):
+            out = step(params_, z1, xg, ag, eg, k1, first=first,
+                       train=True, node_mask=nmg, edge_mask=emg,
+                       temperature=t1)
+            loss = -out.policy.logp * w1
+            loss = loss - cfg.entropy_coef * out.policy.entropy
+            return out.z_next, loss
+
+        def _vloss(z_c, k_t, w_t, first: bool):
+            def per_graph(xg, ag, eg, nmg, emg, z_b, k_b, w_b, t_b):
+                return jax.vmap(
+                    lambda z1, k1, w1, t1: _chain_loss(
+                        params, xg, ag, eg, nmg, emg, z1, k1, w1, t1,
+                        first)
+                )(z_b, k_b, w_b, t_b)
+
+            return jax.vmap(per_graph)(ops.x0, ops.adj, ops.edges,
+                                       ops.node_mask, ops.edge_mask,
+                                       z_c, k_t, w_t, temps)
+
+        total = jnp.float32(0.0)
+        z = z0
+        if start_first:
+            z, l0 = _vloss(z, keys[0], weights[0], first=True)
+            total = total + jnp.sum(l0)
+            keys, weights = keys[1:], weights[1:]
+
+        def body(carry, xs):
+            z_c, tot = carry
+            k_t, w_t = xs
+            z_c, l_t = _vloss(z_c, k_t, w_t, first=False)
+            return (z_c, tot + jnp.sum(l_t)), None
+
+        (z, total), _ = jax.lax.scan(body, (z, total), (keys, weights))
+        nchains = denom if denom is not None else z0.shape[0] * z0.shape[1]
+        return total / nchains
+
+    def _greedy_state(ops, params, keys):
+        """One greedy decode per graph slot → the post-decode recurrent
+        state (G, V, d) — what a greedy restart re-seeds culled chains
+        from."""
+        def per_graph(xg, ag, eg, nmg, emg, k):
+            out = step(params, xg, xg, ag, eg, k,
+                       first=True, train=False, greedy=True,
+                       node_mask=nmg, edge_mask=emg)
+            return out.z_next
+
+        return jax.vmap(per_graph)(ops.x0, ops.adj, ops.edges,
+                                   ops.node_mask, ops.edge_mask, keys)
+
+    def _pbt(ops, params, pop, z, use_greedy: bool):
+        """One full-view PBT transition (culling + exchange + restarts).
+
+        The elite broadcast is written as one-hot masked sums so the
+        sharded mirror (same sums per shard tile + psum over "chains") is
+        the identical computation at mesh=1×1.
+        """
+        G, B = pop.temperature.shape
+        k_use, k_greedy, k_next = jax.random.split(pop.rng, 3)
+        culled, inherit, new_temp, jstar = popmod.pbt_rows(
+            population, k_use, pop.best_latency, pop.temperature,
+            jnp.arange(G))
+        onehot = jnp.arange(B)[None, :] == jstar[:, None]        # (G, B)
+        lat_star = jnp.sum(jnp.where(onehot, pop.best_latency, 0.0),
+                           axis=1)                               # (G,)
+        fine_star = jnp.sum(pop.best_fine * onehot[:, :, None],
+                            axis=1)                              # (G, V)
+        z_star = jnp.sum(z * onehot[:, :, None, None].astype(z.dtype),
+                         axis=1)                                 # (G, V, d)
+        if use_greedy:
+            gkeys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+                k_greedy, jnp.arange(G))
+            z_src = _greedy_state(ops, params, gkeys)
+        else:
+            z_src = z_star
+        new_z = jnp.where(culled[:, :, None, None], z_src[:, None], z)
+        new_pop = pop._replace(
+            temperature=new_temp,
+            best_latency=jnp.where(inherit, lat_star[:, None],
+                                   pop.best_latency),
+            best_fine=jnp.where(inherit[:, :, None], fine_star[:, None],
+                                pop.best_fine),
+            rng=k_next)
+        return new_pop, new_z
+
+    return PopulationWindowFns(
+        rollout=_rollout_window_pop, loss=_window_loss_pop, greedy=_greedy,
+        greedy_state=_greedy_state, pbt=_pbt,
+        update_bests=popmod.update_chain_bests)
 
 
 class DynamicRolloutEngine:
@@ -442,12 +689,14 @@ class DynamicRolloutEngine:
     and the fused reward hook scores against the operand ``sim`` tree.
     """
 
-    def __init__(self, step_fn, cfg, *, backend=None):
+    def __init__(self, step_fn, cfg, *, backend=None, population=None):
         self._step = step_fn
         self._cfg = cfg
         self._backend = backend
         self._fused = backend is not None and backend.jit_fused
         self._fns = None
+        self._population = population
+        self._pop_fns = None
         self.shape_keys_seen = set()
         # AOT-loaded greedy executables by shape key: decodes served from
         # here never trace (shape_keys_seen stays untouched) — the serving
@@ -472,6 +721,26 @@ class DynamicRolloutEngine:
             self._fns = self._build()
         return self._fns
 
+    @property
+    def _pop_built(self):
+        if self._pop_fns is None:
+            if self._population is None:
+                raise ValueError(
+                    "population path requested but the engine was built "
+                    "without population= (pass a PopulationConfig)")
+            fns = build_window_fns(self._step, self._cfg, fused=self._fused,
+                                   backend=self._backend,
+                                   population=self._population)
+            self._pop_fns = (
+                jax.jit(fns.rollout,
+                        static_argnames=("num_steps", "start_first")),
+                jax.jit(jax.grad(fns.loss, argnums=1),
+                        static_argnames=("num_steps", "start_first")),
+                jax.jit(fns.pbt, static_argnames=("use_greedy",)),
+                jax.jit(fns.update_bests),
+            )
+        return self._pop_fns
+
     def _note(self, ops: GraphOperands) -> None:
         self.shape_keys_seen.add(ops.shape_key())
 
@@ -495,6 +764,52 @@ class DynamicRolloutEngine:
             return aot(ops, params, keys)
         self._note(ops)
         return self._built[2](ops, params, keys)
+
+    # ------------------------------------------------------- population API
+    # Separate jitted functions, separate methods: the base path above
+    # never sees a population operand, so population=None callers exercise
+    # byte-identical traces to the population-free build.
+    @property
+    def population(self):
+        return self._population
+
+    def init_population(self, key, *, num_graphs: int, num_chains: int,
+                        num_nodes: int, temperatures=None):
+        from ..train import population as popmod
+        return popmod.init_chain_state(
+            self._population, key, num_graphs=num_graphs,
+            num_chains=num_chains, num_nodes=num_nodes,
+            temperatures=temperatures)
+
+    def rollout_window_pop(self, ops: GraphOperands, params, z, rngs, pop, *,
+                           num_steps: int, start_first: bool):
+        """Population rollout: ``pop.temperature`` scales every sample; →
+        ``(z, rngs, pop, keys, fine, ngroups, rewards, latencies)`` with the
+        chain bests already folded when rewards are fused."""
+        self._note(ops)
+        return self._pop_built[0](ops, params, z, rngs, pop,
+                                  num_steps=num_steps,
+                                  start_first=start_first)
+
+    def window_grads_pop(self, ops: GraphOperands, params, z0, keys, weights,
+                         temps, *, num_steps: int, start_first: bool):
+        """Eq.-14 replay gradient at the sampling pass's temperatures."""
+        self._note(ops)
+        return self._pop_built[1](ops, params, z0, keys, weights, temps,
+                                  num_steps=num_steps,
+                                  start_first=start_first)
+
+    def pbt_step(self, ops: GraphOperands, params, pop, z, *,
+                 use_greedy: bool = False):
+        """One in-jit PBT transition (cull + exchange [+ greedy restart])."""
+        self._note(ops)
+        return self._pop_built[2](ops, params, pop, z, use_greedy=use_greedy)
+
+    def update_population(self, pop, fines, latencies):
+        """Fold a window's (T, G, B, V) fines / (T, G, B) latencies into the
+        chain-best records — the host-scored mirror of the fused in-jit
+        update."""
+        return self._pop_built[3](pop, fines, latencies)
 
     # ------------------------------------------------------------ AOT export
     def export_greedy(self, ops: GraphOperands, params, keys) -> bytes:

@@ -79,7 +79,7 @@ class ShardedRolloutEngine:
     def __init__(self, step_fn, cfg, *, backend=None,
                  mesh: Optional[Mesh] = None,
                  mesh_shape: Optional[Tuple[int, int]] = None,
-                 rules: Optional[AxisRules] = None):
+                 rules: Optional[AxisRules] = None, population=None):
         if mesh is None:
             gs, bs = mesh_shape if mesh_shape is not None else (1, 1)
             mesh = make_rollout_mesh(gs, bs)
@@ -97,6 +97,8 @@ class ShardedRolloutEngine:
         self._backend = backend
         self._fused = backend is not None and backend.jit_fused
         self._fns = None
+        self._population = population
+        self._pop_fns = None
         self.shape_keys_seen = set()
 
     # -------------------------------------------------------------- specs
@@ -223,11 +225,146 @@ class ShardedRolloutEngine:
                         static_argnames=("gamma", "reward_to_go",
                                          "normalize", "reward_norm")))
 
+    def _build_pop(self):
+        """Shard_map the population window bodies over the mesh.
+
+        Chain-local pieces (tempered rollout, replay gradient, chain-best
+        folding) shard exactly like the base path.  The PBT transition is
+        the one genuinely collective step: each shard ``all_gather``s the
+        complete (row-wise) best-latency/temperature rows over "chains",
+        computes the *identical* cull/exchange decisions everywhere (the
+        per-row randomness is keyed on global row ids, so every shard
+        derives the same keys), slices its local columns back out, and
+        reassembles the elite broadcast from one-hot masked partial sums
+        ``psum``-ed over "chains" — the same sums the full-view body
+        computes, so mesh=1×1 is bitwise the dynamic engine's pbt_step.
+        """
+        from ..train import population as popmod
+        fns = build_window_fns(self._step, self._cfg, fused=self._fused,
+                               backend=self._backend,
+                               population=self._population)
+        mesh = self.mesh
+        popcfg = self._population
+        gb = lambda r: self._spec("graphs", "chains", rank=r)
+        tgb = lambda r: self._spec(None, "graphs", "chains", rank=r)
+        pop_spec = popmod.ChainState(
+            temperature=gb(2), best_latency=gb(2), best_fine=gb(3),
+            rng=self._spec(rank=1))
+
+        def _rollout(ops, params, z, rngs, pop, num_steps: int,
+                     start_first: bool):
+            f = shard_map(
+                lambda o, p, z_, r_, pp: fns.rollout(o, p, z_, r_, pp,
+                                                     num_steps,
+                                                     start_first),
+                mesh=mesh,
+                in_specs=(self._tree_spec(ops, "graphs"),
+                          self._tree_spec(params), gb(4), gb(3), pop_spec),
+                out_specs=(gb(4), gb(3), pop_spec, tgb(4), tgb(4), tgb(3),
+                           tgb(3), tgb(3)),
+                check_vma=False)
+            return f(ops, params, z, rngs, pop)
+
+        def _grads(ops, params, z0, keys, weights, temps, num_steps: int,
+                   start_first: bool):
+            denom = z0.shape[0] * z0.shape[1]
+
+            def local(o, p, z_, k_, w_, t_):
+                g = jax.grad(lambda pp: fns.loss(
+                    o, pp, z_, k_, w_, t_, num_steps, start_first,
+                    denom))(p)
+                return jax.lax.psum(g, _AXES)
+
+            f = shard_map(
+                local, mesh=mesh,
+                in_specs=(self._tree_spec(ops, "graphs"),
+                          self._tree_spec(params), gb(4), tgb(4), tgb(3),
+                          gb(2)),
+                out_specs=self._tree_spec(params),
+                check_vma=False)
+            return f(ops, params, z0, keys, weights, temps)
+
+        def _pbt(ops, params, pop, z, use_greedy: bool):
+            def local(o, p, pp, z_):
+                Gl, Bl = pp.temperature.shape
+                gidx = jax.lax.axis_index("graphs")
+                bidx = jax.lax.axis_index("chains")
+                row_ids = gidx * Gl + jnp.arange(Gl)
+                cols = bidx * Bl + jnp.arange(Bl)
+                lat_rows = jax.lax.all_gather(pp.best_latency, "chains",
+                                              axis=1, tiled=True)
+                temp_rows = jax.lax.all_gather(pp.temperature, "chains",
+                                               axis=1, tiled=True)
+                k_use, k_greedy, k_next = jax.random.split(pp.rng, 3)
+                culled_g, inherit_g, new_temp_g, jstar = popmod.pbt_rows(
+                    popcfg, k_use, lat_rows, temp_rows, row_ids)
+                sl = lambda a: jax.lax.dynamic_slice_in_dim(
+                    a, bidx * Bl, Bl, axis=1)
+                culled, inherit = sl(culled_g), sl(inherit_g)
+                new_temp = sl(new_temp_g)
+                onehot = cols[None, :] == jstar[:, None]       # (Gl, Bl)
+                lat_star = jax.lax.psum(
+                    jnp.sum(jnp.where(onehot, pp.best_latency, 0.0),
+                            axis=1), "chains")
+                fine_star = jax.lax.psum(
+                    jnp.sum(pp.best_fine * onehot[:, :, None], axis=1),
+                    "chains")
+                z_star = jax.lax.psum(
+                    jnp.sum(z_ * onehot[:, :, None, None].astype(z_.dtype),
+                            axis=1), "chains")
+                if use_greedy:
+                    gkeys = jax.vmap(jax.random.fold_in,
+                                     in_axes=(None, 0))(k_greedy, row_ids)
+                    z_src = fns.greedy_state(o, p, gkeys)
+                else:
+                    z_src = z_star
+                new_z = jnp.where(culled[:, :, None, None], z_src[:, None],
+                                  z_)
+                new_pop = pp._replace(
+                    temperature=new_temp,
+                    best_latency=jnp.where(inherit, lat_star[:, None],
+                                           pp.best_latency),
+                    best_fine=jnp.where(inherit[:, :, None],
+                                        fine_star[:, None], pp.best_fine),
+                    rng=k_next)
+                return new_pop, new_z
+
+            f = shard_map(local, mesh=mesh,
+                          in_specs=(self._tree_spec(ops, "graphs"),
+                                    self._tree_spec(params), pop_spec,
+                                    gb(4)),
+                          out_specs=(pop_spec, gb(4)),
+                          check_vma=False)
+            return f(ops, params, pop, z)
+
+        def _update(pop, fines, latencies):
+            f = shard_map(fns.update_bests, mesh=mesh,
+                          in_specs=(pop_spec, tgb(4), tgb(3)),
+                          out_specs=pop_spec, check_vma=False)
+            return f(pop, fines, latencies)
+
+        return (jax.jit(_rollout,
+                        static_argnames=("num_steps", "start_first")),
+                jax.jit(_grads,
+                        static_argnames=("num_steps", "start_first")),
+                jax.jit(_pbt, static_argnames=("use_greedy",)),
+                jax.jit(_update))
+
     @property
     def _built(self):
         if self._fns is None:
             self._fns = self._build()
         return self._fns
+
+    @property
+    def _pop_built(self):
+        if self._pop_fns is None:
+            if self._population is None:
+                raise ValueError(
+                    "population path requested but the engine was built "
+                    "without population= (pass a PopulationConfig)")
+            self._pop_fns = self._build_pop()
+        return self._pop_fns
 
     def _note(self, ops: GraphOperands) -> None:
         self.shape_keys_seen.add(ops.shape_key())
@@ -251,6 +388,46 @@ class ShardedRolloutEngine:
         self._check_tiling(keys.shape[0])
         self._note(ops)
         return self._built[2](ops, params, keys)
+
+    # ------------------------------------------------------- population API
+    @property
+    def population(self):
+        return self._population
+
+    def init_population(self, key, *, num_graphs: int, num_chains: int,
+                        num_nodes: int, temperatures=None):
+        from ..train import population as popmod
+        self._check_tiling(num_graphs, num_chains)
+        return popmod.init_chain_state(
+            self._population, key, num_graphs=num_graphs,
+            num_chains=num_chains, num_nodes=num_nodes,
+            temperatures=temperatures)
+
+    def rollout_window_pop(self, ops: GraphOperands, params, z, rngs, pop, *,
+                           num_steps: int, start_first: bool):
+        self._check_tiling(z.shape[0], z.shape[1])
+        self._note(ops)
+        return self._pop_built[0](ops, params, z, rngs, pop,
+                                  num_steps=num_steps,
+                                  start_first=start_first)
+
+    def window_grads_pop(self, ops: GraphOperands, params, z0, keys, weights,
+                         temps, *, num_steps: int, start_first: bool):
+        self._check_tiling(z0.shape[0], z0.shape[1])
+        self._note(ops)
+        return self._pop_built[1](ops, params, z0, keys, weights, temps,
+                                  num_steps=num_steps,
+                                  start_first=start_first)
+
+    def pbt_step(self, ops: GraphOperands, params, pop, z, *,
+                 use_greedy: bool = False):
+        self._check_tiling(z.shape[0], z.shape[1])
+        self._note(ops)
+        return self._pop_built[2](ops, params, pop, z,
+                                  use_greedy=use_greedy)
+
+    def update_population(self, pop, fines, latencies):
+        return self._pop_built[3](pop, fines, latencies)
 
     def window_weights(self, rewards, *, gamma: float, reward_to_go: bool,
                        normalize: bool, reward_norm: str):

@@ -15,12 +15,18 @@ now, as reusable parts:
 * :mod:`.curriculum` — :class:`CurriculumTrainer`: one policy over a
   workload corpus larger than device memory, size-bucketed so jit
   recompiles stay O(#buckets), warm-startable from a saved policy.
+* :mod:`.population` — :class:`PopulationConfig` / :class:`ChainState` /
+  :class:`PopulationController`: PBT-style chain-population search (culling,
+  elite exchange, greedy restarts) layered over the (G, B) engines.
 """
-from .loop import BestTracker, EpisodeRunner, WindowStream, make_chain_rngs
+from .loop import (BestTracker, EpisodePrefetcher, EpisodeRunner,
+                   WindowStream, make_chain_rngs)
+from .population import ChainState, PopulationConfig, PopulationController
 from .sampler import CurriculumSampler
 
 __all__ = ["EpisodeRunner", "WindowStream", "BestTracker",
-           "make_chain_rngs", "CurriculumSampler",
+           "EpisodePrefetcher", "make_chain_rngs", "CurriculumSampler",
+           "ChainState", "PopulationConfig", "PopulationController",
            "CurriculumTrainer", "CorpusTrainResult"]
 
 

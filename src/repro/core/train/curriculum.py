@@ -57,7 +57,8 @@ from ..hsdag import _LOOP_ENGINES, HSDAGConfig, MultiGraphTrainer
 from ..sim import (DynamicRolloutEngine, GraphOperands, RewardPipeline,
                    ShardedRolloutEngine, get_backend)
 from ..reinforce import RunningBaseline
-from .loop import BestTracker, EpisodeRunner, WindowStream
+from .loop import (BestTracker, EpisodePrefetcher, EpisodeRunner,
+                   WindowStream)
 from .sampler import CurriculumSampler
 
 __all__ = ["CurriculumTrainer", "CorpusTrainResult"]
@@ -118,7 +119,8 @@ class CurriculumTrainer(MultiGraphTrainer):
                  sampler_strategy: str = "stratified",
                  plateau_patience: int = 5,
                  mesh_shape: Optional[Tuple[int, int]] = None,
-                 update: str = "auto", stream_cache: int = 64):
+                 update: str = "auto", stream_cache: int = 64,
+                 population=None, prefetch: str = "auto"):
         super().__init__(cfg, reward_norm=reward_norm)
         if cfg.engine == "scalar":
             raise ValueError(
@@ -129,6 +131,9 @@ class CurriculumTrainer(MultiGraphTrainer):
         if update not in ("auto", "host", "fused"):
             raise ValueError(f"unknown update mode {update!r}; expected "
                              f"'auto', 'host' or 'fused'")
+        if prefetch not in ("auto", "on", "off"):
+            raise ValueError(f"unknown prefetch mode {prefetch!r}; expected "
+                             f"'auto', 'on' or 'off'")
         if mesh_shape is not None:
             mesh_shape = (int(mesh_shape[0]), int(mesh_shape[1]))
             if min(mesh_shape) < 1:
@@ -136,6 +141,14 @@ class CurriculumTrainer(MultiGraphTrainer):
                                  f"{mesh_shape}")
         if int(stream_cache) < 1:
             raise ValueError("stream_cache must be >= 1")
+        if population is not None:
+            from .population import PopulationConfig
+            if isinstance(population, dict):
+                population = PopulationConfig.from_json(population)
+            elif not isinstance(population, PopulationConfig):
+                raise TypeError(
+                    f"population= expects a PopulationConfig or its dict "
+                    f"form, got {type(population).__name__}")
         self.max_buckets = int(max_buckets)
         self.graphs_per_episode = int(graphs_per_episode)
         self.sampler_strategy = sampler_strategy
@@ -143,6 +156,8 @@ class CurriculumTrainer(MultiGraphTrainer):
         self.mesh_shape = mesh_shape
         self.update = update
         self.stream_cache = int(stream_cache)
+        self.population = population
+        self.prefetch = prefetch
         self._warm_start: Optional[Tuple[str, Optional[int]]] = None
 
     # ------------------------------------------------------------ warm start
@@ -284,10 +299,23 @@ class CurriculumTrainer(MultiGraphTrainer):
                     f"batch_chains={nchains} does not tile the mesh "
                     f"'chains' axis ({bm}) — pick a multiple")
             engine = ShardedRolloutEngine(self._step, cfg, backend=backend,
-                                          mesh_shape=self.mesh_shape)
+                                          mesh_shape=self.mesh_shape,
+                                          population=self.population)
         else:
-            engine = DynamicRolloutEngine(self._step, cfg, backend=backend)
+            engine = DynamicRolloutEngine(self._step, cfg, backend=backend,
+                                          population=self.population)
         self.engine = engine
+        # Episodic population mode: each episode is a fresh one-window
+        # stream over a resampled subset, so chain identity lives in the
+        # controller's persistent per-chain temperature vector (culled
+        # host-side from accumulated scores); best records reset per
+        # episode — the cross-episode frontier is the BestTracker's.
+        controller = pop_key = None
+        if self.population is not None:
+            from .population import PopulationController
+            controller = PopulationController(
+                self.population, num_chains=nchains, in_jit_pbt=False)
+            pop_key = jax.random.fold_in(rng, 0x706f70)
         tracker = BestTracker([m.num_nodes for m in meta], nchains)
         baseline = (RunningBaseline()
                     if cfg.use_baseline and self.reward_norm != "pergraph"
@@ -312,7 +340,8 @@ class CurriculumTrainer(MultiGraphTrainer):
                     f"{getattr(backend, 'name', '?')!r} is host-side")
         runner = EpisodeRunner(self, engine, pipeline=None, tracker=tracker,
                                reward_norm=self.reward_norm,
-                               baseline=baseline, weights=weights_mode)
+                               baseline=baseline, weights=weights_mode,
+                               controller=controller)
 
         # ---- resume from an interrupted run ----
         mgr = (CheckpointManager(checkpoint_dir, keep=3)
@@ -349,6 +378,14 @@ class CurriculumTrainer(MultiGraphTrainer):
                 sampler.load_state_dict(man["sampler"])
                 tracker.load_state_arrays(
                     {k: np.asarray(v) for k, v in man["tracker"].items()})
+                saved_pop = man.get("population")
+                if (saved_pop is None) != (controller is None):
+                    raise ValueError(
+                        "checkpoint population state does not match this "
+                        "trainer's population= setting — a resumed run "
+                        "would not replay the same temperature stream")
+                if controller is not None:
+                    controller.load_state_dict(saved_pop)
                 if baseline is not None:
                     # the EMA feeds step_weights — without it a resumed run
                     # would diverge from the uninterrupted one
@@ -362,34 +399,73 @@ class CurriculumTrainer(MultiGraphTrainer):
                     baseline.beta = saved["beta"]
                 start_ep = int(man["episode"]) + 1
 
+        # ---- async host/device overlap: build episode t+1's batch on a
+        # worker thread while episode t's rollouts run on device.  Batch
+        # assembly is deterministic in (bucket, ids), so the prefetched
+        # payload is bitwise the synchronously-built one; "auto" enables it
+        # whenever the run has enough episodes for an overlap to exist.
+        prefetcher = None
+        if self.prefetch == "on" or (self.prefetch == "auto"
+                                     and max_eps - start_ep > 1):
+            prefetcher = EpisodePrefetcher(
+                lambda bi, ids: self._episode_batch(
+                    graphs, get_arrays, list(ids), shapes[bi], platform,
+                    backend))
+
         history: List[dict] = []
-        for episode in range(start_ep, max_eps):
-            bi, ids = sampler.sample()
-            ops, pipeline = self._episode_batch(
-                graphs, get_arrays, ids, shapes[bi], platform, backend)
-            stream = WindowStream.fresh(
-                jax.random.fold_in(rng, episode), ops.x0, nchains,
-                graph_ids=ids, operands=ops)
-            stats = runner.run_episode(stream, pipeline=pipeline)
-            sampler.observe(ids, tracker.best_latencies)
-            history.append({"episode": episode, "bucket": bi,
-                            "graphs": [meta[i].name for i in ids],
-                            **stats})
-            if verbose:
-                h = history[-1]
-                sampled = "/".join(f"{tracker.best_latencies[i]*1e3:.2f}"
-                                   for i in ids)
-                print(f"ep {episode:3d} bucket {bi} reward "
-                      f"{h['mean_reward']:.4g} sampled-best[ms] {sampled} "
-                      f"groups {h['mean_groups']:.1f}")
-            if mgr is not None and checkpoint_every \
-                    and (episode + 1) % checkpoint_every == 0:
-                self._save_state(mgr, episode, tracker, sampler, fingerprint,
-                                 baseline, streaming)
+        try:
+            for episode in range(start_ep, max_eps):
+                bi, ids = sampler.sample()
+                if prefetcher is not None:
+                    (ops, pipeline), wait_s = prefetcher.get(
+                        (bi, tuple(ids)))
+                else:
+                    t0 = time.perf_counter()
+                    ops, pipeline = self._episode_batch(
+                        graphs, get_arrays, ids, shapes[bi], platform,
+                        backend)
+                    wait_s = time.perf_counter() - t0
+                if prefetcher is not None and episode + 1 < max_eps:
+                    nbi, nids = sampler.peek()
+                    prefetcher.schedule((nbi, tuple(nids)))
+                pop = None
+                if controller is not None:
+                    from .population import init_chain_state
+                    pop = init_chain_state(
+                        self.population, jax.random.fold_in(pop_key,
+                                                            episode),
+                        num_graphs=len(ids), num_chains=nchains,
+                        num_nodes=shapes[bi].v_max,
+                        temperatures=controller.temps)
+                stream = WindowStream.fresh(
+                    jax.random.fold_in(rng, episode), ops.x0, nchains,
+                    graph_ids=ids, operands=ops, pop=pop)
+                stats = runner.run_episode(stream, pipeline=pipeline)
+                stats["batch_wait_s"] = wait_s
+                sampler.observe(ids, tracker.best_latencies)
+                history.append({"episode": episode, "bucket": bi,
+                                "graphs": [meta[i].name for i in ids],
+                                **stats})
+                if verbose:
+                    h = history[-1]
+                    sampled = "/".join(f"{tracker.best_latencies[i]*1e3:.2f}"
+                                       for i in ids)
+                    print(f"ep {episode:3d} bucket {bi} reward "
+                          f"{h['mean_reward']:.4g} sampled-best[ms] "
+                          f"{sampled} groups {h['mean_groups']:.1f}")
+                if mgr is not None and checkpoint_every \
+                        and (episode + 1) % checkpoint_every == 0:
+                    self._save_state(mgr, episode, tracker, sampler,
+                                     fingerprint, baseline, streaming,
+                                     controller)
+        finally:
+            if prefetcher is not None:
+                prefetcher.close()
         if mgr is not None:
             if max_eps > start_ep:
                 self._save_state(mgr, max_eps - 1, tracker, sampler,
-                                 fingerprint, baseline, streaming)
+                                 fingerprint, baseline, streaming,
+                                 controller)
             mgr.close()
 
         greedy_placements, greedy_latencies = self._greedy_corpus(
@@ -462,7 +538,8 @@ class CurriculumTrainer(MultiGraphTrainer):
 
     def _save_state(self, mgr, episode: int, tracker: BestTracker,
                     sampler: CurriculumSampler, fingerprint: str,
-                    baseline=None, streaming: bool = False) -> None:
+                    baseline=None, streaming: bool = False,
+                    controller=None) -> None:
         from ...checkpoint.manager import _feature_config_to_meta
         t = tracker.state_arrays()
         meta = {
@@ -481,6 +558,8 @@ class CurriculumTrainer(MultiGraphTrainer):
         if baseline is not None:
             meta["baseline"] = {"value": baseline.value,
                                 "beta": baseline.beta}
+        if controller is not None:
+            meta["population"] = controller.state_dict()
         mgr.save(episode, {"params": self.params, "opt": self._opt_state},
                  meta)
         mgr.wait()

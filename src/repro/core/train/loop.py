@@ -12,6 +12,8 @@ batches through the dynamic engine.
 from __future__ import annotations
 
 import dataclasses
+import queue
+import threading
 import time
 from typing import Dict, List, Optional, Sequence
 
@@ -22,7 +24,7 @@ import numpy as np
 from ..reinforce import step_weights
 
 __all__ = ["make_chain_rngs", "WindowStream", "BestTracker",
-           "EpisodeRunner"]
+           "EpisodeRunner", "EpisodePrefetcher"]
 
 
 def make_chain_rngs(rng, num_graphs: int, num_chains: int) -> jnp.ndarray:
@@ -49,7 +51,10 @@ class WindowStream:
     ``operands`` is ``None`` for the static engine (graph batch baked into
     the jit) and a ``GraphOperands`` for the dynamic engine (per-episode
     corpus subsets).  ``graph_ids`` maps batch slots to corpus indices for
-    the tracker — ``range(G)`` when the batch IS the corpus.
+    the tracker — ``range(G)`` when the batch IS the corpus.  ``pop`` (a
+    :class:`~repro.core.train.population.ChainState`, or ``None`` =
+    population search off) rides the stream so per-chain temperatures and
+    best records persist across windows.
     """
 
     z: jnp.ndarray               # (G, B, V, d) — window-start state
@@ -57,11 +62,12 @@ class WindowStream:
     first: bool                  # next window starts with the transform step
     graph_ids: Sequence[int]
     operands: object = None      # Optional[GraphOperands]
+    pop: object = None           # Optional[ChainState]
 
     @classmethod
     def fresh(cls, rng, x0, num_chains: int,
               graph_ids: Optional[Sequence[int]] = None,
-              operands=None) -> "WindowStream":
+              operands=None, pop=None) -> "WindowStream":
         x0 = jnp.asarray(x0)                                   # (G, V, d)
         G = x0.shape[0]
         z = jnp.broadcast_to(x0[:, None], (G, num_chains) + x0.shape[1:])
@@ -69,7 +75,7 @@ class WindowStream:
                    first=True,
                    graph_ids=list(graph_ids) if graph_ids is not None
                    else list(range(G)),
-                   operands=operands)
+                   operands=operands, pop=pop)
 
 
 class BestTracker:
@@ -148,7 +154,7 @@ class EpisodeRunner:
 
     def __init__(self, agent, engine, *, pipeline, tracker: BestTracker,
                  reward_norm: str = "none", baseline=None,
-                 weights: str = "host"):
+                 weights: str = "host", controller=None):
         if weights not in ("host", "fused"):
             raise ValueError(f"unknown weights mode {weights!r}; expected "
                              f"'host' or 'fused'")
@@ -159,6 +165,7 @@ class EpisodeRunner:
         self.reward_norm = reward_norm
         self.baseline = baseline
         self.weights_mode = weights
+        self.controller = controller
 
     def run_episode(self, stream: WindowStream, *, pipeline=None) -> Dict:
         agent = self.agent
@@ -169,10 +176,18 @@ class EpisodeRunner:
 
         dynamic = stream.operands is not None
         ops = (stream.operands,) if dynamic else ()
-        (z, chain_rngs, keys, fines, ngroups, rewards,
-         latencies) = self.engine.rollout_window(
-            *ops, agent.params, stream.z, stream.chain_rngs,
-            num_steps=tsteps, start_first=stream.first)
+        pop = stream.pop
+        if pop is not None:
+            (z, chain_rngs, pop_next, keys, fines, ngroups, rewards,
+             latencies) = self.engine.rollout_window_pop(
+                *ops, agent.params, stream.z, stream.chain_rngs, pop,
+                num_steps=tsteps, start_first=stream.first)
+        else:
+            pop_next = None
+            (z, chain_rngs, keys, fines, ngroups, rewards,
+             latencies) = self.engine.rollout_window(
+                *ops, agent.params, stream.z, stream.chain_rngs,
+                num_steps=tsteps, start_first=stream.first)
         fines_np = np.asarray(fines)                         # (T, G, B, V)
         rewards_dev = rewards if pipeline.fused else None
         if pipeline.fused:
@@ -180,6 +195,12 @@ class EpisodeRunner:
             latencies = np.asarray(latencies, dtype=np.float64)
         else:
             rewards, latencies = pipeline.score_window(fines_np)
+            if pop_next is not None:
+                # host-scored rewards: fold the chain bests here (the fused
+                # path already did it in-jit)
+                pop_next = self.engine.update_population(
+                    pop_next, fines,
+                    jnp.asarray(latencies, jnp.float32))
 
         self.tracker.update(fines_np, rewards, latencies, stream.graph_ids,
                             self.baseline)
@@ -208,15 +229,42 @@ class EpisodeRunner:
                 normalize=cfg.normalize_weights)
             weights_tgb = jnp.asarray(np.transpose(weights_gbt, (2, 0, 1)))
         for _ in range(max(1, cfg.k_epochs)):
-            grads = self.engine.window_grads(
-                *ops, agent.params, stream.z, keys, weights_tgb,
-                num_steps=tsteps, start_first=stream.first)
+            if pop is not None:
+                grads = self.engine.window_grads_pop(
+                    *ops, agent.params, stream.z, keys, weights_tgb,
+                    pop.temperature, num_steps=tsteps,
+                    start_first=stream.first)
+            else:
+                grads = self.engine.window_grads(
+                    *ops, agent.params, stream.z, keys, weights_tgb,
+                    num_steps=tsteps, start_first=stream.first)
             agent.apply_grads(grads)
 
         # next window resumes from the post-rollout state
         stream.z = z
         stream.chain_rngs = chain_rngs
         stream.first = False
+
+        # ---- population bookkeeping (after the update: the replay above
+        # must see the temperatures the window actually sampled at) ----
+        pop_stats: Dict = {}
+        if pop_next is not None:
+            ctl = self.controller
+            if ctl is not None and ctl.in_jit_pbt:
+                due, use_greedy = ctl.note_window()
+                if due:
+                    pop_next, new_z = self.engine.pbt_step(
+                        *ops, agent.params, pop_next, stream.z,
+                        use_greedy=use_greedy)
+                    stream.z = new_z
+                    pop_stats["culled"] = True
+            elif ctl is not None:
+                pop_stats["culled"] = bool(ctl.observe_episode(latencies))
+            pop_stats["pop_best_latency"] = float(
+                np.min(np.asarray(pop_next.best_latency)))
+            pop_stats["temp_mean"] = float(
+                np.mean(np.asarray(pop_next.temperature)))
+            stream.pop = pop_next
 
         per_graph_best = [float(l) for l in self.tracker.best_latencies]
         return {
@@ -225,4 +273,89 @@ class EpisodeRunner:
             "per_graph_best": per_graph_best,
             "mean_groups": float(np.mean(np.asarray(ngroups))),
             "wall_s": time.perf_counter() - t_ep,
+            **pop_stats,
         }
+
+
+class EpisodePrefetcher:
+    """Overlap host batch assembly of episode t+1 with device work of t.
+
+    One background worker, one-slot request/response queues: the trainer
+    predicts the next episode's (bucket, graph ids) key, :meth:`schedule`\\ s
+    it, runs the current episode on device, then :meth:`get`\\ s the built
+    payload — the featurization happened while the device was busy.  Batch
+    construction is deterministic in the key, so a prefetched payload is
+    bitwise the synchronously-built one; a mispredicted key (the plateau
+    sampler may re-weight between peek and draw) just falls back to a
+    synchronous build.  Correct either way, never speculative about state:
+    the worker touches the array cache only while the main thread is NOT
+    building (``get`` always drains the in-flight build before building
+    synchronously), so the LRU needs no lock.
+
+    :meth:`get` returns ``(payload, wait_s)`` — ``wait_s`` is the main
+    thread's stall (queue wait + any fallback build), the metric
+    ``table12_population.py`` reports the ≥25% overlap reduction on.
+
+    :meth:`close` is idempotent and joins the worker — no thread outlives
+    the trainer (CI asserts this under ``pytest -n auto``).
+    """
+
+    def __init__(self, build, *, name: str = "episode-prefetch"):
+        self._build = build
+        self._req: "queue.Queue" = queue.Queue(maxsize=1)
+        self._res: "queue.Queue" = queue.Queue(maxsize=1)
+        self._pending = None
+        self.hits = 0
+        self.misses = 0
+        self._thread = threading.Thread(target=self._run, daemon=True,
+                                        name=name)
+        self._thread.start()
+
+    def _run(self):
+        while True:
+            key = self._req.get()
+            if key is None:
+                return
+            try:
+                self._res.put((key, self._build(*key), None))
+            except BaseException as exc:  # surfaced on the main thread
+                self._res.put((key, None, exc))
+
+    def schedule(self, key) -> None:
+        """Ask the worker to build ``key``; no-op if one is in flight."""
+        if self._thread is None or self._pending is not None:
+            return
+        self._pending = key
+        self._req.put(key)
+
+    def get(self, key):
+        """→ ``(payload, wait_s)`` for ``key`` (prefetched or fallback)."""
+        t0 = time.perf_counter()
+        payload = None
+        if self._pending is not None:
+            built_key, built, err = self._res.get()
+            self._pending = None
+            if err is not None:
+                raise err
+            if built_key == key:
+                self.hits += 1
+                payload = built
+            else:
+                self.misses += 1
+        if payload is None:
+            payload = self._build(*key)
+        return payload, time.perf_counter() - t0
+
+    @property
+    def alive(self) -> bool:
+        return self._thread is not None and self._thread.is_alive()
+
+    def close(self) -> None:
+        if self._thread is None:
+            return
+        if self._pending is not None:
+            self._res.get()          # unblock a worker mid-put
+            self._pending = None
+        self._req.put(None)
+        self._thread.join()
+        self._thread = None

@@ -1,0 +1,368 @@
+"""Population search over the (G, B) chain grid — PBT culling, elite
+exchange, greedy restarts.
+
+The batched rollout engines make per-chain cost sub-linear, so the cheapest
+way to better placements per wall-clock second is to spend chains on
+*search*: run B in the hundreds and make the population adaptive instead of
+B identical-schedule explorers.  Three mechanisms, all standard
+population-based-training moves specialized to placement search:
+
+* **Culling** — every ``cull_every`` windows, rank chains per graph row by
+  their best-found makespan; the bottom ``cull_fraction`` resample their
+  sampling temperature from a random elite's (top ``elite_fraction``) with
+  a log-uniform perturbation, inherit the global-best record, and restart
+  their rollout state from the global-best chain's.
+* **Elite exchange** — an additional ``exchange_fraction`` of random
+  non-elite chains inherit the global-best record (latency + placement)
+  without being reset, so explorers keep their state but measure against
+  the frontier (and survive the next ranking).
+* **Greedy restarts** — every ``greedy_restart_every``-th cull round,
+  culled chains re-seed from the current *greedy decode's* state instead
+  of the best chain's, pulling the population back toward the policy mode.
+
+The per-chain knob is the categorical sampling **temperature** (logits/T
+before ``jax.random.categorical``): T > 1 explores, T < 1 exploits, and the
+replayed Eq.-14 gradient stays exact because the replay re-runs the same
+tempered distribution.  ``temperature=None`` (population off) skips the
+division at trace time, so every engine's jaxpr — and therefore its output,
+bit for bit — is unchanged from the population-free build.
+
+All decision math is written *full-row*: :func:`pbt_rows` consumes complete
+(B_total,) latency/temperature rows plus global row/chain indices, with all
+randomness derived via ``fold_in`` from those indices.  The dynamic engine
+calls it on its full view; the sharded engine ``all_gather``s the (small)
+rows, computes the identical decisions on every shard, and slices its local
+columns — which is what makes the mesh=1×1 population path bit-for-bit the
+dynamic one.
+
+The :class:`PopulationController` is the host-side cadence keeper: it
+counts windows, decides when a cull round is due (and whether it is a
+greedy-restart round), and — for the corpus trainer, where every episode is
+a fresh one-window stream over a different graph subset — maintains the
+persistent per-chain temperature vector and culls it host-side from
+accumulated per-chain scores.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["PopulationConfig", "ChainState", "PopulationController",
+           "chain_counts", "init_chain_state", "init_temperatures",
+           "update_chain_bests", "pbt_rows"]
+
+
+@dataclasses.dataclass(frozen=True)
+class PopulationConfig:
+    """Knobs of the population search layer (see module docstring).
+
+    Serialized inside :class:`repro.api.PlacementSpec` documents (and
+    therefore covered by the spec hash), so the JSON form is canonical and
+    unknown fields are rejected by name.
+    """
+
+    #: windows between cull rounds (one training episode = one window).
+    cull_every: int = 4
+    #: fraction of chains (per graph row) culled each round.
+    cull_fraction: float = 0.25
+    #: fraction of chains that count as elites (donors / never culled).
+    elite_fraction: float = 0.25
+    #: fraction of random non-elite survivors that inherit the global-best
+    #: record each round (exchange without reset).
+    exchange_fraction: float = 0.25
+    #: log-uniform temperature perturbation range [1/perturb, perturb].
+    perturb: float = 1.25
+    #: initial per-chain temperatures are log-uniform in [init_lo, init_hi].
+    init_lo: float = 0.7
+    init_hi: float = 1.5
+    #: hard clip range temperatures may never leave.
+    temp_min: float = 0.2
+    temp_max: float = 3.0
+    #: every k-th cull round restarts culled chains from the greedy decode
+    #: instead of the best chain's state (0 = off).
+    greedy_restart_every: int = 0
+    #: seed for the episodic (host-side) controller's RNG.
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.cull_every < 1:
+            raise ValueError("cull_every must be >= 1")
+        if not 0.0 < self.cull_fraction < 1.0:
+            raise ValueError("cull_fraction must be in (0, 1)")
+        if not 0.0 < self.elite_fraction < 1.0:
+            raise ValueError("elite_fraction must be in (0, 1)")
+        if not 0.0 <= self.exchange_fraction <= 1.0:
+            raise ValueError("exchange_fraction must be in [0, 1]")
+        if self.perturb < 1.0:
+            raise ValueError("perturb must be >= 1.0 (it is a ratio)")
+        if not (0.0 < self.temp_min <= self.init_lo <= self.init_hi
+                <= self.temp_max):
+            raise ValueError(
+                "need 0 < temp_min <= init_lo <= init_hi <= temp_max, got "
+                f"temp_min={self.temp_min}, init_lo={self.init_lo}, "
+                f"init_hi={self.init_hi}, temp_max={self.temp_max}")
+        if self.greedy_restart_every < 0:
+            raise ValueError("greedy_restart_every must be >= 0")
+
+    # ---------------------------------------------------------- (de)serialize
+    def to_json(self) -> str:
+        """Canonical JSON form (sorted keys) — ``from_json`` round-trips."""
+        return json.dumps(dataclasses.asdict(self), sort_keys=True)
+
+    @classmethod
+    def from_json(cls, doc: Union[str, Dict]) -> "PopulationConfig":
+        """Inverse of :meth:`to_json`; unknown fields rejected by name."""
+        data = json.loads(doc) if isinstance(doc, str) else dict(doc)
+        if not isinstance(data, dict):
+            raise ValueError(f"PopulationConfig JSON must be an object, "
+                             f"got {type(data).__name__}")
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(data) - known)
+        if unknown:
+            raise ValueError(
+                f"unknown PopulationConfig fields {unknown}; known fields: "
+                f"{sorted(known)}")
+        return cls(**data)
+
+
+def chain_counts(cfg: PopulationConfig, num_chains: int) -> Tuple[int, int]:
+    """→ (n_elite, n_cull) for a B-chain row; both at least 1.
+
+    Static Python ints (derived from shapes and the config alone), so the
+    elite/cull split is fixed at trace time — and validated here: elites
+    and culled chains must be disjoint, otherwise the global-best chain
+    could be culled and the monotone best-makespan invariant would break.
+    """
+    B = int(num_chains)
+    n_elite = max(1, int(B * cfg.elite_fraction))
+    n_cull = max(1, int(B * cfg.cull_fraction))
+    if n_elite + n_cull > B:
+        raise ValueError(
+            f"batch_chains={B} is too small for elite_fraction="
+            f"{cfg.elite_fraction} + cull_fraction={cfg.cull_fraction} "
+            f"(n_elite={n_elite} + n_cull={n_cull} > {B}) — grow the chain "
+            f"batch or shrink the fractions")
+    return n_elite, n_cull
+
+
+class ChainState(NamedTuple):
+    """Per-chain population state, a pytree threaded through the engines.
+
+    Shapes follow the engines' (G, B) grid; ``rng`` is replicated (the PBT
+    decision stream is global, derived per row via ``fold_in``).
+    """
+
+    temperature: jnp.ndarray    # (G, B) f32 — categorical sampling temp
+    best_latency: jnp.ndarray   # (G, B) f32 — best makespan each chain found
+    best_fine: jnp.ndarray      # (G, B, V) i32 — the placement that did it
+    rng: jnp.ndarray            # (2,) u32 — PBT decision key
+
+
+def init_temperatures(cfg: PopulationConfig, key, shape) -> jnp.ndarray:
+    """Log-uniform initial temperatures in [init_lo, init_hi]."""
+    lo, hi = np.log(cfg.init_lo), np.log(cfg.init_hi)
+    u = jax.random.uniform(key, shape, dtype=jnp.float32)
+    return jnp.exp(lo + u * (hi - lo)).astype(jnp.float32)
+
+
+def init_chain_state(cfg: PopulationConfig, key, num_graphs: int,
+                     num_chains: int, num_nodes: int,
+                     temperatures=None) -> ChainState:
+    """Fresh population state for a (G, B) grid over V-node (padded) graphs.
+
+    ``temperatures`` (a (B,) or (G, B) array) overrides the log-uniform
+    draw — the corpus trainer passes its persistent per-chain vector so
+    chain identity survives across per-episode state resets.
+    """
+    chain_counts(cfg, num_chains)           # validate B up front
+    k_temp, k_pbt = jax.random.split(jnp.asarray(key))
+    G, B = int(num_graphs), int(num_chains)
+    if temperatures is None:
+        temp = init_temperatures(cfg, k_temp, (G, B))
+    else:
+        temp = jnp.broadcast_to(
+            jnp.asarray(temperatures, jnp.float32), (G, B))
+    return ChainState(
+        temperature=temp,
+        best_latency=jnp.full((G, B), jnp.inf, jnp.float32),
+        best_fine=jnp.zeros((G, B, int(num_nodes)), jnp.int32),
+        rng=k_pbt)
+
+
+def update_chain_bests(state: ChainState, fines, latencies) -> ChainState:
+    """Fold one window's (T, G, B) outcomes into the per-chain records.
+
+    Pure jnp (runs in-jit inside the fused rollout; jitted separately for
+    host-scored paths).  Strict-< so earlier bests win ties, matching the
+    tracker's tie-break.
+    """
+    fines = jnp.asarray(fines)                       # (T, G, B, V) i32
+    lat = jnp.asarray(latencies, jnp.float32)        # (T, G, B)
+    t_star = jnp.argmin(lat, axis=0)                 # (G, B)
+    cand_lat = jnp.min(lat, axis=0)                  # (G, B)
+    idx = jnp.broadcast_to(t_star[None, :, :, None], (1,) + fines.shape[1:])
+    cand_fine = jnp.take_along_axis(fines, idx, axis=0)[0]     # (G, B, V)
+    better = cand_lat < state.best_latency
+    return state._replace(
+        best_latency=jnp.where(better, cand_lat, state.best_latency),
+        best_fine=jnp.where(better[..., None], cand_fine, state.best_fine))
+
+
+def pbt_rows(cfg: PopulationConfig, key, lat_rows, temp_rows, row_ids):
+    """Full-row PBT decisions for a batch of graph rows.
+
+    ``lat_rows``/``temp_rows`` are **complete** (R, B_total) chain rows and
+    ``row_ids`` the (R,) *global* row indices; every random draw derives
+    from ``fold_in(key, row_id)`` + the global chain index, so any shard
+    holding the gathered rows computes identical decisions.
+
+    → ``(culled, inherit, new_temp, jstar)`` with (R, B_total) masks/temps
+    and ``jstar`` the (R,) global-best chain index per row.  Rank 0 (the
+    best chain) is an elite and never culled (``chain_counts`` guarantees
+    elites ∩ culled = ∅) — the monotone best-makespan invariant.
+    """
+    B = lat_rows.shape[-1]
+    n_elite, n_cull = chain_counts(cfg, B)
+    log_p = float(np.log(cfg.perturb))
+
+    def one_row(key_r, lat, temp):
+        order = jnp.argsort(lat)                     # best first (stable)
+        rank = jnp.argsort(order)                    # rank[b] of chain b
+        jstar = order[0]
+        culled = rank >= B - n_cull
+        k_donor, k_pert, k_exch = jax.random.split(key_r, 3)
+        donor = order[jax.random.randint(k_donor, (B,), 0, n_elite)]
+        factor = jnp.exp(jax.random.uniform(
+            k_pert, (B,), minval=-log_p, maxval=log_p))
+        resampled = jnp.clip(temp[donor] * factor,
+                             cfg.temp_min, cfg.temp_max)
+        new_temp = jnp.where(culled, resampled, temp)
+        exch = (jax.random.uniform(k_exch, (B,)) < cfg.exchange_fraction) \
+            & (rank >= n_elite) & ~culled
+        return culled, culled | exch, new_temp, jstar
+
+    keys = jax.vmap(jax.random.fold_in, in_axes=(None, 0))(
+        jnp.asarray(key), jnp.asarray(row_ids))
+    return jax.vmap(one_row)(keys, jnp.asarray(lat_rows),
+                             jnp.asarray(temp_rows))
+
+
+class PopulationController:
+    """Host-side cadence keeper (and episodic-mode temperature owner).
+
+    Two modes:
+
+    * ``in_jit_pbt=True`` (persistent streams: ``search``/``train_multi``):
+      the controller only counts windows — :meth:`note_window` says when a
+      cull round is due and whether it is a greedy-restart round; all state
+      mutation happens in-jit through the engine's ``pbt_step``.
+    * ``in_jit_pbt=False`` (the corpus trainer, where every episode is a
+      fresh one-window stream over a resampled graph subset): chain
+      identity lives only in the persistent (B,) ``temps`` vector; the
+      controller accumulates per-chain scores from each episode's
+      latencies (per-graph standardized, so graphs of different latency
+      scales vote comparably) and culls the vector host-side every
+      ``cull_every`` episodes with the same donor/perturb scheme.
+    """
+
+    def __init__(self, cfg: PopulationConfig, *, num_chains: int,
+                 in_jit_pbt: bool = True):
+        self.cfg = cfg
+        self.num_chains = int(num_chains)
+        chain_counts(cfg, self.num_chains)  # fail fast on tiny B
+        self.in_jit_pbt = bool(in_jit_pbt)
+        self.windows_seen = 0
+        self.rounds = 0
+        self.culled_total = 0
+        self._rng = np.random.default_rng(cfg.seed)
+        self.temps: Optional[np.ndarray] = None
+        if not self.in_jit_pbt:
+            lo, hi = np.log(cfg.init_lo), np.log(cfg.init_hi)
+            self.temps = np.exp(self._rng.uniform(
+                lo, hi, size=self.num_chains)).astype(np.float32)
+        self._score = np.zeros(self.num_chains)
+        self._score_n = 0
+
+    # ------------------------------------------------- in-jit (stream) mode
+    def note_window(self) -> Tuple[bool, bool]:
+        """Count one window → (cull round due?, greedy-restart round?)."""
+        self.windows_seen += 1
+        due = self.windows_seen % self.cfg.cull_every == 0
+        use_greedy = False
+        if due:
+            self.rounds += 1
+            _, n_cull = chain_counts(self.cfg, self.num_chains)
+            self.culled_total += n_cull
+            use_greedy = (self.cfg.greedy_restart_every > 0
+                          and self.rounds % self.cfg.greedy_restart_every
+                          == 0)
+        return due, use_greedy
+
+    # ----------------------------------------------- episodic (corpus) mode
+    def observe_episode(self, latencies) -> bool:
+        """Fold one episode's (T, G, B) latencies into the chain scores;
+        culls ``temps`` when a round comes due.  → True iff it culled."""
+        if self.in_jit_pbt:
+            raise RuntimeError("observe_episode is the episodic-mode hook; "
+                               "stream-mode populations cull in-jit")
+        lat_min = np.asarray(latencies, np.float64).min(axis=0)   # (G, B)
+        mean = lat_min.mean(axis=1, keepdims=True)
+        std = lat_min.std(axis=1, keepdims=True) + 1e-12
+        self._score += (-(lat_min - mean) / std).mean(axis=0)     # (B,)
+        self._score_n += 1
+        self.windows_seen += 1
+        if self.windows_seen % self.cfg.cull_every:
+            return False
+        self._cull_temps()
+        return True
+
+    def _cull_temps(self) -> None:
+        cfg = self.cfg
+        B = self.num_chains
+        n_elite, n_cull = chain_counts(cfg, B)
+        score = self._score / max(1, self._score_n)
+        order = np.argsort(-score, kind="stable")    # best first
+        elites, culled = order[:n_elite], order[B - n_cull:]
+        log_p = np.log(cfg.perturb)
+        for b in culled:
+            donor = elites[self._rng.integers(n_elite)]
+            factor = np.exp(self._rng.uniform(-log_p, log_p))
+            self.temps[b] = np.clip(self.temps[donor] * factor,
+                                    cfg.temp_min, cfg.temp_max)
+        self._score[:] = 0.0
+        self._score_n = 0
+        self.rounds += 1
+        self.culled_total += n_cull
+
+    # ------------------------------------------------------------ transport
+    def state_dict(self) -> Dict:
+        """JSON-serializable state (checkpoint manifests, corpus resume)."""
+        return {
+            "windows_seen": self.windows_seen,
+            "rounds": self.rounds,
+            "culled_total": self.culled_total,
+            "rng": self._rng.bit_generator.state,
+            "temps": (None if self.temps is None
+                      else [float(t) for t in self.temps]),
+            "score": [float(s) for s in self._score],
+            "score_n": self._score_n,
+        }
+
+    def load_state_dict(self, state: Dict) -> None:
+        self.windows_seen = int(state["windows_seen"])
+        self.rounds = int(state["rounds"])
+        self.culled_total = int(state["culled_total"])
+        self._rng.bit_generator.state = state["rng"]
+        if state.get("temps") is not None:
+            self.temps = np.asarray(state["temps"], np.float32)
+        self._score = np.asarray(state["score"], np.float64)
+        self._score_n = int(state["score_n"])
+
+    def summary(self) -> Dict:
+        return {"windows": self.windows_seen, "cull_rounds": self.rounds,
+                "chains_culled": self.culled_total}

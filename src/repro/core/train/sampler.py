@@ -90,6 +90,24 @@ class CurriculumSampler:
         self._episode += 1
         return bi, [int(i) for i in ids]
 
+    def peek(self) -> Tuple[int, List[int]]:
+        """Predict the next :meth:`sample` without consuming it.
+
+        Runs the real draw, then restores the generator bit state and the
+        episode counter — so for ``uniform``/``stratified`` (whose draws
+        depend on RNG state alone; :meth:`observe` consumes no randomness)
+        the prediction is *exact*.  Under ``plateau`` an ``observe`` between
+        peek and draw may re-weight graphs and mispredict — the episode
+        prefetcher treats that as a cache miss and rebuilds synchronously.
+        """
+        state = self._rng.bit_generator.state
+        episode = self._episode
+        try:
+            return self.sample()
+        finally:
+            self._rng.bit_generator.state = state
+            self._episode = episode
+
     def _weight(self, gid: int) -> float:
         return (self.plateau_boost
                 if self._stale[gid] >= self.plateau_patience else 1.0)

@@ -1,0 +1,454 @@
+"""Population search (PBT culling / elite exchange / greedy restarts) and
+the async episode prefetcher.
+
+Invariant under test throughout: **culling and exchange never lose the
+global best** — per graph row, ``min(best_latency)`` after any sequence of
+window updates and PBT transitions equals the running minimum of every
+latency ever fed in (the best chain is an elite, elites are never culled,
+and culled/exchanged chains inherit the best record).  Plus the no-op pin:
+``population=None`` leaves every engine bit-for-bit the population-free
+build.
+"""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (HSDAG, HSDAGConfig, extract_features, paper_platform)
+from repro.core.features import batch_graph_arrays, shared_feature_config
+from repro.core.costmodel import sim_arrays_batch
+from repro.core.sim import (DynamicRolloutEngine, ShardedRolloutEngine,
+                            get_backend)
+from repro.core.train import population as popmod
+from repro.core.train.loop import EpisodePrefetcher, make_chain_rngs
+from repro.core.train.population import (ChainState, PopulationConfig,
+                                         PopulationController, chain_counts,
+                                         init_chain_state, pbt_rows,
+                                         update_chain_bests)
+from repro.core.train.sampler import CurriculumSampler
+from repro.graphs import build_corpus
+
+from conftest import given, settings, st
+
+PLAT = paper_platform()
+POP = PopulationConfig(cull_every=2, greedy_restart_every=2)
+
+
+def _cfg(**kw):
+    base = dict(num_devices=2, hidden_channel=16, max_episodes=4,
+                update_timestep=2, batch_chains=8)
+    base.update(kw)
+    return HSDAGConfig(**base)
+
+
+def _graphs(count=3, size=12, seed=0):
+    return list(build_corpus(
+        f"synthetic:family=mixed:count={count}:size={size}:seed={seed}"))
+
+
+# ------------------------------------------------------------------- config
+def test_population_config_roundtrip_and_validation():
+    pc = PopulationConfig(cull_every=3, exchange_fraction=0.5)
+    assert PopulationConfig.from_json(pc.to_json()) == pc
+    with pytest.raises(ValueError, match="unknown PopulationConfig fields"):
+        PopulationConfig.from_json('{"cull_evry": 3}')
+    with pytest.raises(ValueError, match="cull_every"):
+        PopulationConfig(cull_every=0)
+    with pytest.raises(ValueError, match="cull_fraction"):
+        PopulationConfig(cull_fraction=1.0)
+    with pytest.raises(ValueError, match="temp_min"):
+        PopulationConfig(temp_min=0.9, init_lo=0.7)
+
+
+def test_chain_counts_disjointness_guard():
+    assert chain_counts(PopulationConfig(), 8) == (2, 2)
+    assert chain_counts(PopulationConfig(), 4) == (1, 1)
+    with pytest.raises(ValueError, match="too small"):
+        chain_counts(PopulationConfig(elite_fraction=0.5,
+                                      cull_fraction=0.75), 4)
+
+
+# ---------------------------------------------------------------- pbt math
+def test_pbt_rows_decisions():
+    cfg = PopulationConfig()
+    G, B = 3, 16
+    rng = np.random.default_rng(0)
+    lat = jnp.asarray(rng.uniform(1.0, 2.0, (G, B)), jnp.float32)
+    temp = jnp.ones((G, B), jnp.float32)
+    culled, inherit, new_temp, jstar = pbt_rows(
+        cfg, jax.random.PRNGKey(3), lat, temp, jnp.arange(G))
+    culled, inherit = np.asarray(culled), np.asarray(inherit)
+    n_elite, n_cull = chain_counts(cfg, B)
+    lat_np = np.asarray(lat)
+    for g in range(G):
+        assert culled[g].sum() == n_cull
+        # the culled chains are exactly the worst n_cull by best latency
+        worst = set(np.argsort(lat_np[g])[-n_cull:])
+        assert set(np.flatnonzero(culled[g])) == worst
+        # elites (incl. the best chain) are never culled nor exchanged
+        elites = np.argsort(lat_np[g])[:n_elite]
+        assert not culled[g][elites].any()
+        assert not inherit[g][elites].any()
+        assert int(jstar[g]) == int(np.argmin(lat_np[g]))
+        # every culled chain also inherits the best record
+        assert inherit[g][culled[g]].all()
+    assert (np.asarray(new_temp) >= cfg.temp_min).all()
+    assert (np.asarray(new_temp) <= cfg.temp_max).all()
+    # survivors keep their temperature
+    assert np.array_equal(np.asarray(new_temp)[~culled],
+                          np.asarray(temp)[~culled])
+
+
+def _apply_pbt_records(cfg, pop, G, B):
+    """The engines' record-rewrite step (temperature + best inheritance)."""
+    k_use, _, k_next = jax.random.split(pop.rng, 3)
+    culled, inherit, new_temp, jstar = pbt_rows(
+        cfg, k_use, pop.best_latency, pop.temperature, jnp.arange(G))
+    onehot = jnp.arange(B)[None, :] == jstar[:, None]
+    lat_star = jnp.sum(jnp.where(onehot, pop.best_latency, 0.0), axis=1)
+    fine_star = jnp.sum(pop.best_fine * onehot[:, :, None], axis=1)
+    return pop._replace(
+        temperature=new_temp,
+        best_latency=jnp.where(inherit, lat_star[:, None],
+                               pop.best_latency),
+        best_fine=jnp.where(inherit[:, :, None], fine_star[:, None],
+                            pop.best_fine),
+        rng=k_next)
+
+
+def _check_monotone_schedule(seed: int, G: int, B: int, windows: int,
+                             cull_after) -> None:
+    """Feed random latencies, interleave PBT per ``cull_after`` — the
+    per-row best must always equal the running min of everything fed."""
+    cfg = PopulationConfig()
+    rng = np.random.default_rng(seed)
+    pop = init_chain_state(cfg, jax.random.PRNGKey(seed), num_graphs=G,
+                           num_chains=B, num_nodes=4)
+    running = np.full(G, np.inf)
+    for w in range(windows):
+        lat = rng.uniform(0.5, 2.0, (2, G, B))
+        fines = rng.integers(0, 2, (2, G, B, 4))
+        pop = update_chain_bests(pop, jnp.asarray(fines),
+                                 jnp.asarray(lat, jnp.float32))
+        running = np.minimum(running, lat.min(axis=(0, 2)).astype(np.float32))
+        if cull_after(w):
+            pop = _apply_pbt_records(cfg, pop, G, B)
+        np.testing.assert_allclose(
+            np.asarray(pop.best_latency).min(axis=1), running, rtol=1e-6)
+
+
+def test_best_never_lost_under_cull_schedules():
+    _check_monotone_schedule(0, 2, 8, 6, lambda w: w % 2 == 1)
+    _check_monotone_schedule(1, 3, 12, 5, lambda w: True)   # cull every window
+    _check_monotone_schedule(2, 1, 4, 8, lambda w: w in (0, 3, 4))
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 1000), st.integers(1, 3), st.integers(4, 16),
+       st.lists(st.booleans(), min_size=1, max_size=8))
+def test_best_never_lost_property(seed, G, B, schedule):
+    """Hypothesis: arbitrary cull schedules never lose the global best."""
+    _check_monotone_schedule(seed, G, B, len(schedule),
+                             lambda w: schedule[w])
+
+
+# ------------------------------------------------------------ engine paths
+@pytest.fixture(scope="module")
+def pop_fixture():
+    from repro.core.train.curriculum import _operands
+    graphs = _graphs(count=3, size=12)
+    cfg = _cfg()
+    agent = HSDAG(cfg)
+    fc = shared_feature_config(graphs)
+    arrays = [extract_features(g, fc) for g in graphs]
+    agent.init(jax.random.PRNGKey(0), arrays[0])
+    v_max = max(g.num_nodes for g in graphs)
+    e_max = max(1, max(a.edges.shape[0] for a in arrays))
+    ga = batch_graph_arrays(arrays, v_max=v_max, e_max=e_max)
+    sb = sim_arrays_batch(graphs, PLAT, v_max=v_max)
+    ops = _operands(ga, jax.tree.map(jnp.asarray, sb.arrays))
+    return agent, cfg, ops, v_max
+
+
+def test_population_none_is_structural_noop(pop_fixture):
+    """An engine built WITH population= runs its base path bit-for-bit
+    like an engine built without (the pop path is strictly additive)."""
+    agent, cfg, ops, v_max = pop_fixture
+    backend = get_backend("scan")
+    base = DynamicRolloutEngine(agent._step, cfg, backend=backend)
+    pop_eng = DynamicRolloutEngine(agent._step, cfg, backend=backend,
+                                   population=POP)
+    G, B = 3, cfg.batch_chains
+    z = jnp.broadcast_to(ops.x0[:, None], (G, B) + ops.x0.shape[1:])
+    rngs = make_chain_rngs(jax.random.PRNGKey(1), G, B)
+    o1 = base.rollout_window(ops, agent.params, z, rngs, num_steps=2,
+                             start_first=True)
+    o2 = pop_eng.rollout_window(ops, agent.params, z, rngs, num_steps=2,
+                                start_first=True)
+    for a, b in zip(jax.tree.leaves(o1), jax.tree.leaves(o2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # and an engine without population= refuses the pop API loudly
+    with pytest.raises(ValueError, match="population"):
+        base.rollout_window_pop(ops, agent.params, z, rngs, None,
+                                num_steps=2, start_first=True)
+
+
+def test_temperature_one_matches_base_bitwise(pop_fixture):
+    """T=1 tempering is the identity: the pop rollout at all-ones
+    temperature reproduces the base rollout bit for bit."""
+    agent, cfg, ops, v_max = pop_fixture
+    eng = DynamicRolloutEngine(agent._step, cfg, backend=get_backend("scan"),
+                               population=POP)
+    G, B = 3, cfg.batch_chains
+    pop = eng.init_population(jax.random.PRNGKey(7), num_graphs=G,
+                              num_chains=B, num_nodes=v_max,
+                              temperatures=jnp.ones((G, B), jnp.float32))
+    z = jnp.broadcast_to(ops.x0[:, None], (G, B) + ops.x0.shape[1:])
+    rngs = make_chain_rngs(jax.random.PRNGKey(1), G, B)
+    out_pop = eng.rollout_window_pop(ops, agent.params, z, rngs, pop,
+                                     num_steps=2, start_first=True)
+    out_base = eng.rollout_window(ops, agent.params, z, rngs, num_steps=2,
+                                  start_first=True)
+    np.testing.assert_array_equal(np.asarray(out_pop[4]),      # fines
+                                  np.asarray(out_base[3]))
+    np.testing.assert_array_equal(np.asarray(out_pop[7]),      # latencies
+                                  np.asarray(out_base[6]))
+
+
+def test_engine_pbt_monotone_and_greedy_restart(pop_fixture):
+    """In-jit pbt_step over live rollouts keeps the best-record monotone,
+    in both restart-from-best and restart-from-greedy modes."""
+    agent, cfg, ops, v_max = pop_fixture
+    eng = DynamicRolloutEngine(agent._step, cfg, backend=get_backend("scan"),
+                               population=POP)
+    G, B = 3, cfg.batch_chains
+    pop = eng.init_population(jax.random.PRNGKey(7), num_graphs=G,
+                              num_chains=B, num_nodes=v_max)
+    z = jnp.broadcast_to(ops.x0[:, None], (G, B) + ops.x0.shape[1:])
+    rngs = make_chain_rngs(jax.random.PRNGKey(1), G, B)
+    best_seen = np.full(G, np.inf)
+    for w in range(4):
+        z, rngs, pop, _, _, _, _, lat = eng.rollout_window_pop(
+            ops, agent.params, z, rngs, pop, num_steps=2,
+            start_first=(w == 0))
+        best_seen = np.minimum(best_seen, np.asarray(lat).min(axis=(0, 2)))
+        pop, z = eng.pbt_step(ops, agent.params, pop, z,
+                              use_greedy=(w % 2 == 1))
+        np.testing.assert_allclose(np.asarray(pop.best_latency).min(axis=1),
+                                   best_seen, rtol=1e-6)
+
+
+def test_sharded_pop_matches_dynamic_at_1x1(pop_fixture):
+    """mesh=(1,1) population path is bitwise the dynamic engine's."""
+    agent, cfg, ops, v_max = pop_fixture
+    backend = get_backend("scan")
+    dyn = DynamicRolloutEngine(agent._step, cfg, backend=backend,
+                               population=POP)
+    shd = ShardedRolloutEngine(agent._step, cfg, backend=backend,
+                               mesh_shape=(1, 1), population=POP)
+    G, B = 3, cfg.batch_chains
+    pop = dyn.init_population(jax.random.PRNGKey(7), num_graphs=G,
+                              num_chains=B, num_nodes=v_max)
+    z = jnp.broadcast_to(ops.x0[:, None], (G, B) + ops.x0.shape[1:])
+    rngs = make_chain_rngs(jax.random.PRNGKey(1), G, B)
+    o_d = dyn.rollout_window_pop(ops, agent.params, z, rngs, pop,
+                                 num_steps=2, start_first=True)
+    o_s = shd.rollout_window_pop(ops, agent.params, z, rngs, pop,
+                                 num_steps=2, start_first=True)
+    for a, b in zip(jax.tree.leaves(o_d), jax.tree.leaves(o_s)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    w = jnp.asarray(np.random.default_rng(0).standard_normal((2, G, B)),
+                    jnp.float32)
+    g_d = dyn.window_grads_pop(ops, agent.params, z, o_d[3], w,
+                               pop.temperature, num_steps=2,
+                               start_first=True)
+    g_s = shd.window_grads_pop(ops, agent.params, z, o_d[3], w,
+                               pop.temperature, num_steps=2,
+                               start_first=True)
+    for a, b in zip(jax.tree.leaves(g_d), jax.tree.leaves(g_s)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for ug in (False, True):
+        p_d, z_d = dyn.pbt_step(ops, agent.params, o_d[2], o_d[0],
+                                use_greedy=ug)
+        p_s, z_s = shd.pbt_step(ops, agent.params, o_d[2], o_d[0],
+                                use_greedy=ug)
+        for a, b in zip(jax.tree.leaves((p_d, z_d)),
+                        jax.tree.leaves((p_s, z_s))):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# -------------------------------------------------------- search/train_multi
+def test_search_population_culls_and_tracks_best():
+    graphs = _graphs(count=1)
+    agent = HSDAG(_cfg(max_episodes=5))
+    arrays = extract_features(graphs[0])
+    res = agent.search(graphs[0], arrays, platform=PLAT,
+                       rng=jax.random.PRNGKey(0), population=POP)
+    assert any(h["culled"] for h in res.history)
+    assert np.isfinite(res.best_latency)
+    bests = [h["best_latency"] for h in res.history]
+    assert bests == sorted(bests, reverse=True)      # monotone nonincreasing
+    pop_bests = [h["pop_best_latency"] for h in res.history]
+    assert pop_bests == sorted(pop_bests, reverse=True)
+    # the in-jit record and the host tracker agree on the global best
+    assert res.best_latency <= pop_bests[-1] + 1e-9
+
+
+def test_train_multi_population_tracker_survives_resets():
+    graphs = _graphs(count=3)
+    from repro.core import MultiGraphTrainer
+    tr = MultiGraphTrainer(_cfg(max_episodes=4))
+    res = tr.train(graphs, platform=PLAT, rng=jax.random.PRNGKey(0),
+                   population=POP)
+    assert any(h.get("culled") for h in res.history)
+    assert all(np.isfinite(l) for l in res.best_latencies)
+    for h0, h1 in zip(res.history, res.history[1:]):
+        assert all(b1 <= b0 + 1e-12 for b0, b1 in
+                   zip(h0["per_graph_best"], h1["per_graph_best"]))
+
+
+def test_scalar_engine_rejects_population():
+    graphs = _graphs(count=1)
+    agent = HSDAG(_cfg(batch_chains=1, engine="scalar"))
+    arrays = extract_features(graphs[0])
+    with pytest.raises(ValueError, match="population search needs"):
+        agent.search(graphs[0], arrays, platform=PLAT, population=POP)
+
+
+# -------------------------------------------------------------- controller
+def test_controller_state_roundtrip_continues_identically():
+    import json
+
+    def drive(ctl, episodes, rng):
+        out = []
+        for _ in range(episodes):
+            lat = rng.uniform(0.5, 2.0, (2, 3, 8))
+            out.append((ctl.observe_episode(lat), ctl.temps.copy()))
+        return out
+
+    a = PopulationController(PopulationConfig(cull_every=2), num_chains=8,
+                             in_jit_pbt=False)
+    drive(a, 3, np.random.default_rng(0))
+    state = json.loads(json.dumps(a.state_dict()))
+    b = PopulationController(PopulationConfig(cull_every=2), num_chains=8,
+                             in_jit_pbt=False)
+    b.load_state_dict(state)
+    r1, r2 = np.random.default_rng(1), np.random.default_rng(1)
+    for (c1, t1), (c2, t2) in zip(drive(a, 4, r1), drive(b, 4, r2)):
+        assert c1 == c2
+        np.testing.assert_array_equal(t1, t2)
+
+
+# ----------------------------------------------------------- prefetcher
+def test_prefetcher_hit_miss_and_identity():
+    calls = []
+
+    def build(a, b):
+        calls.append((a, b))
+        return {"key": (a, b), "payload": a * 10 + b}
+
+    pf = EpisodePrefetcher(build)
+    try:
+        pf.schedule((1, 2))
+        payload, wait = pf.get((1, 2))
+        assert payload == build(1, 2) and pf.hits == 1 and wait >= 0.0
+        # mispredicted key → miss, synchronous fallback, still correct
+        pf.schedule((3, 4))
+        payload, _ = pf.get((9, 9))
+        assert payload["key"] == (9, 9) and pf.misses == 1
+    finally:
+        pf.close()
+
+
+def test_prefetcher_propagates_worker_errors():
+    def boom(_):
+        raise RuntimeError("featurization failed")
+
+    pf = EpisodePrefetcher(boom)
+    try:
+        pf.schedule((0,))
+        with pytest.raises(RuntimeError, match="featurization failed"):
+            pf.get((0,))
+    finally:
+        pf.close()
+
+
+def test_prefetcher_close_is_idempotent_and_leak_free():
+    before = {t.name for t in threading.enumerate()}
+    pf = EpisodePrefetcher(lambda x: x, name="leak-probe")
+    assert pf.alive
+    pf.schedule((1,))
+    pf.close()
+    pf.close()                                   # idempotent
+    assert not pf.alive
+    after = {t.name for t in threading.enumerate()}
+    assert "leak-probe" not in after
+    assert after <= before
+
+
+def test_sampler_peek_is_exact_for_rng_only_strategies():
+    for strategy in ("uniform", "stratified"):
+        s = CurriculumSampler([[0, 1, 2], [3, 4]], graphs_per_episode=2,
+                              strategy=strategy, seed=3)
+        for _ in range(6):
+            predicted = s.peek()
+            assert predicted == s.sample()
+
+
+# ------------------------------------------------------------ corpus trainer
+def test_corpus_prefetch_is_bitwise_neutral():
+    from repro.core.train import CurriculumTrainer
+    graphs = _graphs(count=6)
+    results = {}
+    for prefetch in ("off", "on"):
+        tr = CurriculumTrainer(_cfg(), max_buckets=2, graphs_per_episode=2,
+                               prefetch=prefetch)
+        res = tr.train_corpus(graphs, platform=PLAT,
+                              rng=jax.random.PRNGKey(0))
+        results[prefetch] = (res, tr.params)
+        assert all("batch_wait_s" in h for h in res.history)
+    r_off, p_off = results["off"]
+    r_on, p_on = results["on"]
+    np.testing.assert_array_equal(r_off.best_latencies, r_on.best_latencies)
+    assert [h["mean_reward"] for h in r_off.history] == \
+        [h["mean_reward"] for h in r_on.history]
+    for a, b in zip(jax.tree.leaves(p_off), jax.tree.leaves(p_on)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the worker is gone once training returns
+    assert not any(t.name == "episode-prefetch"
+                   for t in threading.enumerate())
+
+
+def test_corpus_population_culls_episodically():
+    from repro.core.train import CurriculumTrainer
+    graphs = _graphs(count=6)
+    tr = CurriculumTrainer(_cfg(), max_buckets=2, graphs_per_episode=2,
+                           population=PopulationConfig(cull_every=2))
+    res = tr.train_corpus(graphs, platform=PLAT, rng=jax.random.PRNGKey(0))
+    assert any(h.get("culled") for h in res.history)
+    assert all("pop_best_latency" in h for h in res.history)
+
+
+def test_corpus_population_resume_guard(tmp_path):
+    from repro.core.train import CurriculumTrainer
+    graphs = _graphs(count=4)
+    ck = str(tmp_path / "run")
+    tr = CurriculumTrainer(_cfg(max_episodes=2), max_buckets=2,
+                           graphs_per_episode=2,
+                           population=PopulationConfig(cull_every=2))
+    tr.train_corpus(graphs, platform=PLAT, rng=jax.random.PRNGKey(0),
+                    checkpoint_dir=ck, checkpoint_every=1)
+    bare = CurriculumTrainer(_cfg(max_episodes=3), max_buckets=2,
+                             graphs_per_episode=2)
+    with pytest.raises(ValueError, match="population"):
+        bare.train_corpus(graphs, platform=PLAT, rng=jax.random.PRNGKey(0),
+                          checkpoint_dir=ck, resume=True)
+    again = CurriculumTrainer(_cfg(max_episodes=3), max_buckets=2,
+                              graphs_per_episode=2,
+                              population=PopulationConfig(cull_every=2))
+    res = again.train_corpus(graphs, platform=PLAT,
+                             rng=jax.random.PRNGKey(0),
+                             checkpoint_dir=ck, resume=True)
+    assert len(res.history) >= 1                 # continued past episode 2
