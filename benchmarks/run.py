@@ -31,6 +31,7 @@ import table9_serving
 import table10_sharded
 import table11_server
 import table12_population
+import table13_topology
 
 #: execution order; the name doubles as the --tables selector and the
 #: BENCH_<name>.json stem.
@@ -47,6 +48,7 @@ TABLES = [
     ("table10_sharded", table10_sharded),
     ("table11_server", table11_server),
     ("table12_population", table12_population),
+    ("table13_topology", table13_topology),
 ]
 
 

@@ -1,0 +1,113 @@
+"""Table 13 (repo-local): topology-aware placement vs the SP DP bound.
+
+For each registered topology the same series-parallel workload is placed
+several ways on the builders' *default single-queue devices* — the
+queue-limited regime where placement actually matters (with ample queues
+and a homogeneous fleet, one device runs every branch concurrently and
+pays zero transfer, so co-location is trivially optimal and every method
+ties).  Every row reports its gap to the Tarnawski-style DP objective of
+``repro.platforms.exact`` — the **contention-free longest path**, a lower
+bound here and the provably-exact optimum whenever ``parallel_queues``
+covers the DAG width (that regime is what ``tests/test_platforms.py``
+brute-force-asserts):
+
+* ``dp_bound``       — the DP relaxation itself (gap 0 by construction).
+* ``single_device``  — best single device takes the whole graph, fully
+                       serialized (the device-only yardstick RL must beat).
+* ``rl_dense``       — HSDAG with the paper's fixed ``Dense(D)`` head.
+* ``rl_device``      — HSDAG with the platform-conditioned compatibility
+                       head (+ capacity-aware action masking).
+* ``hybrid``         — the ``rl_device`` placement with its linear
+                       segments DP-refined (never worse than the input:
+                       refinements are kept only when the full
+                       list-schedule simulation improves).
+
+Rows: ``table13/<topology>/<method>``, metric = makespan in µs, derived =
+``gap_to_bound`` (percent above the DP relaxation) and the fleet size.
+Env knobs: ``REPRO_BENCH_TOPOLOGIES`` (comma-separated subset — CI smokes
+2 of them), ``REPRO_BENCH_TOPO_NODES`` (workload size, default 20) and
+the shared ``REPRO_BENCH_EPISODES``.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core import HSDAG, HSDAGConfig, FeatureConfig, extract_features, \
+    simulate
+from repro.core.baselines import hybrid_placement
+from repro.graphs.synthetic import series_parallel_dag
+from repro.platforms import dp_optimal, multi_host, nvlink_island, ring, torus
+
+from common import EPISODES, UPDATE_TIMESTEP, emit
+
+TOPOLOGIES = {
+    "nvlink_island": lambda: nvlink_island(islands=2, gpus_per_island=2),
+    "multi_host": lambda: multi_host(hosts=2, gpus_per_host=2),
+    "torus": lambda: torus(rows=2, cols=2),
+    "ring": lambda: ring(devices=4),
+}
+
+NODES = int(os.environ.get("REPRO_BENCH_TOPO_NODES", "20"))
+
+
+def _selected():
+    raw = os.environ.get("REPRO_BENCH_TOPOLOGIES", "")
+    if not raw:
+        return list(TOPOLOGIES)
+    names = [n.strip() for n in raw.split(",") if n.strip()]
+    unknown = sorted(set(names) - set(TOPOLOGIES))
+    if unknown:
+        raise SystemExit(f"REPRO_BENCH_TOPOLOGIES names unknown topologies "
+                         f"{unknown}; known: {sorted(TOPOLOGIES)}")
+    return names
+
+
+def _search(graph, arrays, platform, head: str, seed: int = 0):
+    cfg = HSDAGConfig(num_devices=platform.num_devices, head=head,
+                      max_episodes=EPISODES, update_timestep=UPDATE_TIMESTEP,
+                      batch_chains=8, seed=seed)
+    res = HSDAG(cfg).search(graph, arrays, platform=platform,
+                            rng=jax.random.PRNGKey(seed))
+    return np.asarray(res.best_placement), float(res.best_latency)
+
+
+def main() -> None:
+    graph = series_parallel_dag(target_nodes=NODES, seed=0)
+    arrays = extract_features(graph, FeatureConfig(d_pos=16))
+    for name in _selected():
+        platform = TOPOLOGIES[name]()
+        config = {"topology": name, "num_devices": platform.num_devices,
+                  "nodes": graph.num_nodes, "episodes": EPISODES}
+        t0 = time.perf_counter()
+        dp = dp_optimal(graph, platform)
+        dp_wall = time.perf_counter() - t0
+        bound = dp.bound
+
+        def row(method: str, lat: float, extra: str = "") -> None:
+            gap = 100.0 * (lat / bound - 1.0)
+            emit(f"table13/{name}/{method}", lat * 1e6,
+                 f"gap_to_bound={gap:.2f}% D={platform.num_devices}{extra}",
+                 config=config)
+
+        row("dp_bound", bound, extra=f" wall={dp_wall:.3f}s")
+        # Device-only baseline: the best single device takes the whole graph
+        # (no transfers, no parallelism) — what RL must beat to matter.
+        single = min(
+            simulate(graph, np.full(graph.num_nodes, d, dtype=np.int64),
+                     platform).latency
+            for d in range(platform.num_devices))
+        row("single_device", single)
+        _, dense_lat = _search(graph, arrays, platform, "dense")
+        row("rl_dense", dense_lat)
+        dev_p, dev_lat = _search(graph, arrays, platform, "device")
+        row("rl_device", dev_lat)
+        _, hyb_lat = hybrid_placement(graph, dev_p, platform)
+        row("hybrid", hyb_lat)
+
+
+if __name__ == "__main__":
+    main()

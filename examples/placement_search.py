@@ -39,7 +39,8 @@ import warnings
 
 import numpy as np
 
-from repro.api import PlacementSession, PlacementSpec
+from repro.api import (PlacementSession, PlacementSpec, build_platform,
+                       parse_platform_spec)
 from repro.core import HSDAGConfig, PopulationConfig, simulate
 from repro.core.baselines import cpu_only, gpu_only
 from repro.core.planner import plan_stages
@@ -63,9 +64,21 @@ def build_spec(args) -> PlacementSpec:
     # corpus trainer's per-graph standardization subsumes them.
     extras = ({} if args.mode == "corpus"
               else dict(use_baseline=True, normalize_weights=True))
+    # --platform takes the same colon-separated spec form as --workload
+    # (parse errors name the offending segment); the policy's action space
+    # follows the platform's device count.
+    pname, pargs = parse_platform_spec(args.platform)
+    num_devices = 2
+    if pname != "paper":
+        num_devices = build_platform(
+            PlacementSpec(workload="", platform=pname,
+                          platform_args=pargs)).num_devices
     return PlacementSpec(
         workload=workload, mode=args.mode,
-        config=HSDAGConfig(num_devices=2, max_episodes=args.episodes,
+        platform=pname, platform_args=pargs,
+        head=(args.head or None),
+        config=HSDAGConfig(num_devices=num_devices,
+                           max_episodes=args.episodes,
                            update_timestep=10, batch_chains=args.chains,
                            engine=args.engine, **extras),
         max_buckets=args.max_buckets,
@@ -183,7 +196,8 @@ def _fill_defaults(args) -> None:
                  ("graphs_per_episode", 4), ("sampler", "stratified"),
                  ("checkpoint", ""), ("mode", "search"),
                  ("population", False), ("cull_every", 4),
-                 ("greedy_restart_every", 0), ("prefetch", "auto")):
+                 ("greedy_restart_every", 0), ("prefetch", "auto"),
+                 ("platform", "paper"), ("head", "")):
         if not hasattr(args, k):
             setattr(args, k, v)
 
@@ -270,6 +284,18 @@ def main():
                     help="with --population: every Nth PBT transition "
                          "re-seeds culled chains from a greedy decode "
                          "instead of the per-graph best chain (0 = never)")
+    ap.add_argument("--platform", default="paper",
+                    help="platform spec 'name[:key=value:...]', e.g. "
+                         "'nvlink_island:islands=2:gpus_per_island=4' — "
+                         "registered names: paper, tpu_stage, "
+                         "nvlink_island, multi_host, torus, ring; parse "
+                         "errors name the offending segment")
+    ap.add_argument("--head", default="", choices=("", "dense", "device"),
+                    help="policy output head: dense = the paper's fixed "
+                         "Dense(num_devices) layer; device = platform-"
+                         "conditioned node x device compatibility scores "
+                         "with capacity-aware action masking (pairs with "
+                         "multi-device --platform topologies)")
     ap.add_argument("--prefetch", default="auto",
                     choices=("auto", "on", "off"),
                     help="with --mode corpus: overlap host featurization of "
@@ -295,6 +321,10 @@ def main():
         ap.error("--mesh/--stream require --mode corpus")
     if args.mesh and not all(p.isdigit() for p in args.mesh.split("x")):
         ap.error(f"--mesh wants GxB (e.g. 2x4), got {args.mesh!r}")
+    try:
+        parse_platform_spec(args.platform)
+    except ValueError as e:
+        ap.error(str(e))
     run_spec(args)
 
 

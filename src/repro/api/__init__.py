@@ -27,11 +27,12 @@ from .server import AsyncPlacementServer
 from .service import PlacementRequestError, PlacementService
 from .session import PlacementSession
 from .spec import (MODES, SPEC_VERSION, PlacementSpec, build_platform,
-                   platform_names, register_platform)
+                   parse_platform_spec, platform_names, register_platform)
 
 __all__ = [
     "PlacementSpec", "PlacementSession", "PlacementService",
     "AsyncPlacementServer", "AotExecutableCache", "PlacementRequestError",
     "SPEC_VERSION", "MODES",
     "register_platform", "platform_names", "build_platform",
+    "parse_platform_spec",
 ]

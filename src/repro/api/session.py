@@ -292,5 +292,9 @@ class PlacementSession:
         trainer._opt_state = trainer._opt.init(params)
         session.trainer = trainer
         session.platform = build_platform(spec)
+        # head="device" policies decode against the platform's feature
+        # table; rebind it so place()/evaluate() work straight after load
+        # (a no-op for the dense head).
+        trainer.bind_platform(session.platform)
         session.graphs = graphs
         return session

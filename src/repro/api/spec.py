@@ -17,10 +17,19 @@ corpus fingerprint, so a restored policy knows exactly which run produced
 it.
 
 Platforms are named through a small registry (mirroring the simulator
-backend and workload registries)::
+backend and workload registries).  Besides the paper's 2-device
+``"paper"`` fleet and the ``"tpu_stage"`` pipeline stage, the registry
+ships the topology-aware builders from :mod:`repro.platforms` —
+``"nvlink_island"``, ``"multi_host"``, ``"torus"`` and ``"ring"`` — whose
+non-uniform link matrices and device coordinates drive the
+``head="device"`` policy (see docs/API.md § "Platforms & topologies").
+Builder keyword arguments ride in ``platform_args`` (or a colon-separated
+``parse_platform_spec`` string, the CLI form)::
 
     register_platform("my_cluster", build_my_cluster)
     PlacementSpec(workload="benchmark", platform="my_cluster")
+    PlacementSpec(workload="benchmark", platform="nvlink_island",
+                  platform_args={"islands": 2, "gpus_per_island": 4})
 """
 from __future__ import annotations
 
@@ -36,7 +45,8 @@ from ..core.train.population import PopulationConfig
 from ..graphs.workloads import parse_corpus_spec
 
 __all__ = ["PlacementSpec", "SPEC_VERSION", "MODES",
-           "register_platform", "platform_names", "build_platform"]
+           "register_platform", "platform_names", "build_platform",
+           "parse_platform_spec"]
 
 SPEC_VERSION = 1
 
@@ -62,8 +72,17 @@ def platform_names() -> List[str]:
     return sorted(_PLATFORMS)
 
 
+def _register_topologies() -> None:
+    from ..platforms import multi_host, nvlink_island, ring, torus
+    register_platform("nvlink_island", nvlink_island)
+    register_platform("multi_host", multi_host)
+    register_platform("torus", torus)
+    register_platform("ring", ring)
+
+
 register_platform("paper", paper_platform)
 register_platform("tpu_stage", tpu_stage_platform)
+_register_topologies()
 
 
 def build_platform(spec: "PlacementSpec") -> Platform:
@@ -75,6 +94,58 @@ def build_platform(spec: "PlacementSpec") -> Platform:
         raise ValueError(
             f"platform {spec.platform!r} rejected platform_args "
             f"{dict(spec.platform_args)}: {e}") from None
+
+
+def parse_platform_spec(spec: str):
+    """``"name:key=value:..."`` → ``(name, args)`` — the CLI platform form.
+
+    Mirrors :func:`~repro.graphs.workloads.parse_corpus_spec`'s error
+    contract: every rejection is a ``ValueError`` naming the offending
+    colon-separated segment by position and text.  Values parse as int,
+    then float, else stay strings (builders validate semantics).
+
+        >>> parse_platform_spec("nvlink_island:islands=2:gpus_per_island=4")
+        ('nvlink_island', {'islands': 2, 'gpus_per_island': 4})
+    """
+    parts = [p.strip() for p in str(spec).split(":")]
+    name = parts[0]
+    if not name:
+        raise ValueError(
+            f"platform spec segment 0 ({parts[0]!r}): empty platform name; "
+            f"registered platforms: {platform_names()}")
+    if name not in _PLATFORMS:
+        raise ValueError(
+            f"platform spec segment 0 ({name!r}): unknown platform; "
+            f"registered platforms: {platform_names()}")
+    args: Dict[str, object] = {}
+    for pos, part in enumerate(parts[1:], start=1):
+        if not part:
+            raise ValueError(
+                f"platform spec segment {pos} ({part!r}): empty segment — "
+                f"expected key=value")
+        if "=" not in part:
+            raise ValueError(
+                f"platform spec segment {pos} ({part!r}): expected "
+                f"key=value")
+        key, _, raw = part.partition("=")
+        key, raw = key.strip(), raw.strip()
+        if not key or not raw:
+            raise ValueError(
+                f"platform spec segment {pos} ({part!r}): empty "
+                f"{'key' if not key else 'value'} in key=value")
+        if key in args:
+            raise ValueError(
+                f"platform spec segment {pos} ({part!r}): duplicate key "
+                f"{key!r}")
+        try:
+            val: object = int(raw)
+        except ValueError:
+            try:
+                val = float(raw)
+            except ValueError:
+                val = raw
+        args[key] = val
+    return name, args
 
 
 # ----------------------------------------------------------------- the spec
@@ -112,6 +183,10 @@ class PlacementSpec:
     #: overrides ``config.max_episodes`` when set (the episode budget knob
     #: CLIs expose without re-serializing the whole config).
     episodes: Optional[int] = None
+    #: overrides ``config.head`` when set — ``"dense"`` (the paper's fixed
+    #: output layer) or ``"device"`` (platform-conditioned compatibility
+    #: head); the CLI knob that pairs with ``--platform``.
+    head: Optional[str] = None
     # --- multi/corpus knobs ---
     reward_norm: str = "pergraph"
     # --- corpus knobs (CurriculumTrainer) ---
@@ -189,6 +264,9 @@ class PlacementSpec:
                              f"one of {_SAMPLERS}")
         if self.episodes is not None and self.episodes < 1:
             raise ValueError("episodes must be >= 1 when set")
+        if self.head is not None and self.head not in ("dense", "device"):
+            raise ValueError(f"unknown head {self.head!r}; expected "
+                             f"'dense' or 'device'")
         if self.mesh is not None:
             m = list(self.mesh)
             if len(m) != 2 or not all(
@@ -254,10 +332,15 @@ class PlacementSpec:
 
     # -------------------------------------------------------------- derived
     def resolved_config(self) -> HSDAGConfig:
-        """``config`` with the ``episodes`` override applied."""
-        if self.episodes is None:
+        """``config`` with the ``episodes`` / ``head`` overrides applied."""
+        overrides = {}
+        if self.episodes is not None:
+            overrides["max_episodes"] = self.episodes
+        if self.head is not None:
+            overrides["head"] = self.head
+        if not overrides:
             return self.config
-        return dataclasses.replace(self.config, max_episodes=self.episodes)
+        return dataclasses.replace(self.config, **overrides)
 
     def feature_base(self) -> FeatureConfig:
         """The FeatureConfig base the shared vocabularies are grafted on."""

@@ -14,6 +14,12 @@
 
 All learned baselines share HSDAG's reward backends so Table 2/5 comparisons
 are apples-to-apples.
+
+5.  ``dp_placement`` / ``hybrid_placement`` — the exact series-parallel DP
+    of ``repro.platforms.exact`` (provably optimal on contention-free SP
+    graphs) and its hybrid mode (DP-refined linear segments around an RL
+    core placement), re-exported here so benchmark tables can treat every
+    non-HSDAG method as a ``core.baselines`` call.
 """
 from __future__ import annotations
 
@@ -34,7 +40,8 @@ from .hsdag import SearchResult
 from .reinforce import RunningBaseline
 
 __all__ = ["cpu_only", "gpu_only", "openvino_auto",
-           "PlacetoBaseline", "RNNBaseline"]
+           "PlacetoBaseline", "RNNBaseline",
+           "dp_placement", "hybrid_placement"]
 
 
 # --------------------------------------------------------------- heuristics
@@ -44,6 +51,33 @@ def cpu_only(graph: CompGraph) -> np.ndarray:
 
 def gpu_only(graph: CompGraph) -> np.ndarray:
     return np.ones(graph.num_nodes, dtype=np.int64)
+
+
+def dp_placement(graph: CompGraph, platform) -> Tuple[np.ndarray, float]:
+    """Exact series-parallel DP placement → (placement, latency).
+
+    Raises ``ValueError`` for graphs outside the two-terminal SP class —
+    use :func:`hybrid_placement` there.  Optimal when no device's queue
+    limit binds (see ``repro.platforms.exact``).
+    """
+    from ..platforms import dp_optimal
+    res = dp_optimal(graph, platform)
+    if res is None:
+        raise ValueError(
+            f"graph {graph.name!r} is not two-terminal series-parallel — "
+            f"the exact DP does not apply (hybrid_placement refines any "
+            f"placement's linear segments instead)")
+    return res.placement, res.latency
+
+
+def hybrid_placement(graph: CompGraph, placement: np.ndarray,
+                     platform) -> Tuple[np.ndarray, float]:
+    """DP-refine the linear segments of an (RL-produced) placement.
+
+    Never worse than the input placement; → (placement, latency)."""
+    from ..platforms import hybrid_refine
+    res = hybrid_refine(graph, np.asarray(placement), platform)
+    return res.placement, res.latency
 
 
 def openvino_auto(graph: CompGraph, preference: int,

@@ -99,6 +99,52 @@ class Platform:
     devices: Tuple[DeviceSpec, ...]
     link_bw: np.ndarray          # (D, D) bytes/s, inf on diagonal
     link_latency: np.ndarray     # (D, D) s, 0 on diagonal
+    # Optional device coordinates (D, C) — topology builders set them (island
+    # index, torus row/col, ...); consumed by the device feature table that
+    # conditions the ``head="device"`` policy.  Purely descriptive: the cost
+    # model reads only the link matrices.
+    coords: Optional[np.ndarray] = None
+
+    def __post_init__(self):
+        d = len(self.devices)
+        for attr, mat in (("link_bw", self.link_bw),
+                          ("link_latency", self.link_latency)):
+            mat = np.asarray(mat)
+            if mat.shape != (d, d):
+                raise ValueError(
+                    f"Platform.{attr} must be ({d}, {d}) for {d} devices; "
+                    f"got shape {mat.shape}")
+            diag = np.diagonal(mat)
+            if attr == "link_bw":
+                bad = np.flatnonzero(~np.isinf(diag))
+                if bad.size:
+                    i = int(bad[0])
+                    raise ValueError(
+                        f"Platform.link_bw diagonal must be inf (a device "
+                        f"never pays transfer to itself); link_bw[{i}, {i}] "
+                        f"= {diag[i]!r}")
+            else:
+                bad = np.flatnonzero(diag != 0.0)
+                if bad.size:
+                    i = int(bad[0])
+                    raise ValueError(
+                        f"Platform.link_latency diagonal must be 0; "
+                        f"link_latency[{i}, {i}] = {diag[i]!r}")
+            off = ~np.eye(d, dtype=bool)
+            invalid = off & (~np.isfinite(mat) | (mat < 0)
+                             | ((mat == 0) if attr == "link_bw" else False))
+            bad_ij = np.argwhere(invalid)
+            if bad_ij.size:
+                i, j = (int(x) for x in bad_ij[0])
+                raise ValueError(
+                    f"Platform.{attr}[{i}, {j}] = {mat[i, j]!r} — "
+                    f"off-diagonal entries must be finite, "
+                    f"{'positive' if attr == 'link_bw' else 'non-negative'}")
+        if self.coords is not None:
+            c = np.asarray(self.coords)
+            if c.ndim != 2 or c.shape[0] != d:
+                raise ValueError(
+                    f"Platform.coords must be ({d}, C); got shape {c.shape}")
 
     @property
     def num_devices(self) -> int:
@@ -295,6 +341,13 @@ class SimArrays(NamedTuple):
     lat: np.ndarray          # (D, D) f32 — link latency, 0 on the diagonal
     mem_capacity: np.ndarray  # (D,) f32
     queue_init: np.ndarray   # (D, Q) f32 — 0 for real queues, +inf for masked
+    # (V, D) bool — node v's resident bytes alone fit device d's capacity.
+    # The per-node slice of the ``dev_bytes > mem_capacity`` OOM check: a
+    # False entry means device d can *never* hold node v regardless of the
+    # rest of the placement.  The ``head="device"`` policy masks such actions
+    # at sample time; pad slots (zero bytes) are True everywhere, so padded
+    # batches never constrain real clusters.  Unused by ``simulate_jax``.
+    fit_ok: np.ndarray
 
     @property
     def num_nodes(self) -> int:
@@ -354,6 +407,10 @@ def _build_sim_arrays(g: CompGraph, platform: Platform,
                       1.0 / platform.link_bw, 0.0)
     np.fill_diagonal(inv_bw, 0.0)
 
+    capacity = np.asarray([dev.mem_capacity for dev in platform.devices],
+                          np.float32)
+    fit_ok = byts.astype(np.float32)[:, None] <= capacity[None, :]
+
     return SimArrays(
         order=order,
         preds=pred_tab,
@@ -363,9 +420,9 @@ def _build_sim_arrays(g: CompGraph, platform: Platform,
         is_data=np.asarray([c == "data" for c in classes] + [True]),
         inv_bw=inv_bw.astype(np.float32),
         lat=platform.link_latency.astype(np.float32),
-        mem_capacity=np.asarray(
-            [dev.mem_capacity for dev in platform.devices], np.float32),
+        mem_capacity=capacity,
         queue_init=queue_init,
+        fit_ok=fit_ok,
     )
 
 
@@ -632,10 +689,13 @@ def pad_sim_arrays(sa: SimArrays, v_max: int,
     bytes_out[:n] = sa.bytes_out[:n]
     is_data = np.ones(v_max + 1, bool)
     is_data[:n] = sa.is_data[:n]
+    fit_ok = np.ones((v_max, sa.fit_ok.shape[1]), bool)  # pads fit anywhere
+    fit_ok[:n] = sa.fit_ok
     return SimArrays(order=order, preds=preds, levels=levels,
                      op_time=op_time, bytes_out=bytes_out, is_data=is_data,
                      inv_bw=sa.inv_bw, lat=sa.lat,
-                     mem_capacity=sa.mem_capacity, queue_init=sa.queue_init)
+                     mem_capacity=sa.mem_capacity, queue_init=sa.queue_init,
+                     fit_ok=fit_ok)
 
 
 def sim_arrays_batch(graphs: Sequence[CompGraph], platform: Platform, *,

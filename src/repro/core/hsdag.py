@@ -122,9 +122,18 @@ class HSDAGConfig:
     # loop with that reward backend.  Validated against the registry at
     # construction; recorded in policy checkpoints.
     engine: str = "auto"
+    # Policy head: "dense" (the paper's fixed Dense(num_devices) layer,
+    # bit-for-bit pinned) or "device" (node × device-embedding compatibility
+    # scores conditioned on the platform's feature table — one policy for
+    # any fleet size, with per-device capacity masking at sample time).
+    # "device" requires a platform= reward source; see repro.platforms.
+    head: str = "dense"
 
     def __post_init__(self):
         _validate_engine(self.engine)
+        if self.head not in ("dense", "device"):
+            raise ValueError(f"unknown head {self.head!r}; "
+                             f"expected 'dense' or 'device'")
 
     # ----------------------------------------------------------- (de)serialize
     def to_json(self) -> str:
@@ -191,6 +200,13 @@ class MultiSearchResult(NamedTuple):
     chain_best: Optional[np.ndarray] = None   # (G, B) per-chain best latency
 
 
+def _dev_feature_dim() -> int:
+    # Local import: core must stay importable without the platforms package
+    # loaded (platforms itself imports core.costmodel).
+    from ..platforms.topology import DEV_FEATURE_DIM
+    return DEV_FEATURE_DIM
+
+
 def _rms_normalize(z: jnp.ndarray, node_mask=None) -> jnp.ndarray:
     if node_mask is None:
         rms = jnp.sqrt(jnp.mean(jnp.square(z)) + 1e-6)
@@ -213,6 +229,23 @@ class HSDAG:
         # Set by train_multi(); the config held-out graphs must be featurized
         # with so the shared policy sees a consistent feature layout.
         self.feature_config: Optional[FeatureConfig] = None
+        # head="device": the (D, F_dev) fleet feature table the policy is
+        # conditioned on.  Set by bind_platform() (search/train call it from
+        # their platform argument); place() decodes with the bound fleet.
+        self._dev_feats: Optional[np.ndarray] = None
+
+    def bind_platform(self, platform: Platform) -> None:
+        """Condition the ``head="device"`` policy on ``platform``'s fleet.
+
+        Computes and stores the device feature table the compatibility head
+        scores against.  A no-op for ``head="dense"``.  ``search`` /
+        ``train_multi`` / ``train_corpus`` call this from their
+        ``platform=``; restored sessions must call it before ``place``.
+        """
+        if self.cfg.head != "device":
+            return
+        from ..platforms.topology import device_feature_table
+        self._dev_feats = device_feature_table(platform)
 
     # ------------------------------------------------------------------ init
     def init(self, rng, arrays: GraphArrays) -> Dict:
@@ -226,7 +259,11 @@ class HSDAG:
                                 gnn_model=cfg.gnn_model),
             "gpn": gpn_init(k_gpn, cfg.hidden_channel,
                             layer_parsingnet=cfg.layer_parsingnet),
-            "pol": policy_init(k_pol, cfg.hidden_channel, cfg.num_devices),
+            "pol": (policy_init(k_pol, cfg.hidden_channel, cfg.num_devices)
+                    if cfg.head == "dense" else
+                    policy_init(k_pol, cfg.hidden_channel, cfg.num_devices,
+                                head="device",
+                                dev_feat_dim=_dev_feature_dim())),
         }
         self.params = params
         self._opt_state = self._opt.init(params)
@@ -243,7 +280,8 @@ class HSDAG:
               adj: jnp.ndarray, edges: jnp.ndarray, rng, *,
               first: bool, train: bool, greedy: bool = False,
               node_mask=None, edge_mask=None,
-              temperature=None) -> StepOutput:
+              temperature=None, dev_feats=None,
+              action_mask=None) -> StepOutput:
         """One Alg.-1 iteration: encode → parse → place → state update.
 
         ``node_mask``/``edge_mask`` (``None`` for single-graph use) thread the
@@ -251,7 +289,11 @@ class HSDAG:
         state update; the masked computation on an unpadded graph is the
         unmasked one.  ``temperature`` (``None`` = off, a trace-time branch)
         is the per-chain sampling temperature population search threads into
-        the policy head.
+        the policy head.  ``dev_feats`` (the (D, F_dev) fleet table) selects
+        the device-compatibility head; ``action_mask`` ((V, D) capacity
+        feasibility, ``SimArrays.fit_ok``) masks impossible devices.  All
+        ``None`` defaults are trace-time branches — the dense jaxpr is
+        unchanged.
         """
         cfg = self.cfg
         k_net, k_parse, k_pol = jax.random.split(rng, 3)
@@ -268,7 +310,8 @@ class HSDAG:
             node_mask=node_mask, edge_mask=edge_mask)
         pol = policy_apply(params["pol"], parse.pooled_z, parse.active,
                            parse.labels, k_pol, greedy=greedy,
-                           temperature=temperature)
+                           temperature=temperature, dev_feats=dev_feats,
+                           action_mask=action_mask)
         # Alg. 1 line 10: Z_v ← Z_v + Z_{v'}.
         z_next = z_enc + parse.pooled_z[parse.labels]
         if cfg.state_norm:
@@ -295,11 +338,20 @@ class HSDAG:
                       population=None) -> RolloutEngine:
         """The same engine over a padded multi-graph batch."""
         use_masks = gb.padded
+        dev_feats = None
+        if self.cfg.head == "device":
+            if self._dev_feats is None:
+                raise ValueError(
+                    "head='device' needs a bound platform (its device "
+                    "feature table conditions the policy); call "
+                    "bind_platform(platform) or pass platform= to "
+                    "search/train")
+            dev_feats = jnp.asarray(self._dev_feats)
         return RolloutEngine(
             self._step, self.cfg, x0=gb.x, adj=gb.adj, edges=gb.edges,
             node_mask=gb.node_mask if use_masks else None,
             edge_mask=gb.edge_mask if use_masks else None,
-            pipeline=pipeline, population=population)
+            pipeline=pipeline, population=population, dev_feats=dev_feats)
 
     # ---------------------------------------------------------------- search
     def search(self, graph: CompGraph, arrays: GraphArrays,
@@ -345,6 +397,17 @@ class HSDAG:
             raise ValueError(
                 f"cfg.num_devices={cfg.num_devices} exceeds the platform's "
                 f"{platform.num_devices} devices")
+        if cfg.head == "device":
+            if platform is None:
+                raise ValueError(
+                    "head='device' conditions the policy on a platform's "
+                    "device feature table; a bare reward_fn carries no "
+                    "fleet description — pass platform=")
+            if engine == "scalar":
+                raise ValueError(
+                    "head='device' needs the batched engine (the scalar "
+                    "reference loop predates device conditioning)")
+            self.bind_platform(platform)
         if engine not in _LOOP_ENGINES and reward_fn is not None:
             raise ValueError(
                 f"engine={engine!r} names a simulator backend but a host "
@@ -640,6 +703,7 @@ class HSDAG:
             raise ValueError(
                 f"cfg.num_devices={cfg.num_devices} exceeds the platform's "
                 f"{platform.num_devices} devices")
+        self.bind_platform(platform)
         G = len(graphs)
         nchains = max(1, cfg.batch_chains)
         t_start = time.perf_counter()

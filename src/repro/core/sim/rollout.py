@@ -53,7 +53,7 @@ class RolloutEngine:
     def __init__(self, step_fn, cfg, *, x0, adj, edges,
                  node_mask=None, edge_mask=None,
                  pipeline: Optional[RewardPipeline] = None,
-                 population=None):
+                 population=None, dev_feats=None):
         self._step = step_fn
         self._cfg = cfg
         self._x0 = jnp.asarray(x0)                   # (G, V, d)
@@ -66,6 +66,12 @@ class RolloutEngine:
         self._fused = pipeline is not None and pipeline.fused
         self._sim = (jax.tree.map(jnp.asarray, pipeline.sim_tree)
                      if self._fused else None)
+        # head="device": the (D, F_dev) fleet feature table, a closure
+        # constant shared by every graph/chain; None keeps the dense head's
+        # traces untouched.  Capacity masking (SimArrays.fit_ok) applies
+        # whenever dev_feats and a fused sim tree are both present.
+        self._dev_feats = (jnp.asarray(dev_feats)
+                           if dev_feats is not None else None)
         self._window_fns = None
         self._scalar_fns = None
         self._population = population
@@ -78,11 +84,19 @@ class RolloutEngine:
         x0, adj, edges = self._x0, self._adj, self._edges
         use_masks, nmask, emask = self._use_masks, self._nmask, self._emask
         fused, sim, pipeline = self._fused, self._sim, self._pipeline
+        dvf = self._dev_feats
+        # Capacity masking needs the per-graph fit_ok rows, which only the
+        # fused sim tree carries; the replay below threads sim through the
+        # loss under the same condition so the sampled and replayed
+        # distributions coincide (the Eq.-14 exactness requirement).
+        mask_sim = dvf is not None and sim is not None
 
         def _chain_sample(params, xg, ag, eg, nmg, emg, simg, z, key,
                           first: bool):
+            amask = simg.fit_ok if (mask_sim and simg is not None) else None
             out = step(params, z, xg, ag, eg, key, first=first, train=True,
-                       node_mask=nmg, edge_mask=emg)
+                       node_mask=nmg, edge_mask=emg, dev_feats=dvf,
+                       action_mask=amask)
             fine = out.policy.fine_placement
             if simg is not None:
                 reward, latency = pipeline.step_score(simg, fine)
@@ -149,27 +163,41 @@ class RolloutEngine:
             """Differentiable lax.scan replay (Eq. 14) averaged over every
             (g, b) chain.  keys (T,G,B,2), weights (T,G,B)."""
 
-            def _chain_loss(params_, xg, ag, eg, nmg, emg, z1, k1, w1,
+            def _chain_loss(params_, xg, ag, eg, nmg, emg, simg, z1, k1, w1,
                             first: bool):
+                amask = simg.fit_ok if (mask_sim and simg is not None) \
+                    else None
                 out = step(params_, z1, xg, ag, eg, k1, first=first,
-                           train=True, node_mask=nmg, edge_mask=emg)
+                           train=True, node_mask=nmg, edge_mask=emg,
+                           dev_feats=dvf, action_mask=amask)
                 loss = -out.policy.logp * w1
                 loss = loss - cfg.entropy_coef * out.policy.entropy
                 return out.z_next, loss
 
             def _vloss(z_c, k_t, w_t, first: bool):
-                def per_graph(xg, ag, eg, nmg, emg, z_b, k_b, w_b):
+                def per_graph(xg, ag, eg, nmg, emg, simg, z_b, k_b, w_b):
                     return jax.vmap(
                         lambda z1, k1, w1: _chain_loss(
-                            params, xg, ag, eg, nmg, emg, z1, k1, w1, first)
+                            params, xg, ag, eg, nmg, emg, simg, z1, k1, w1,
+                            first)
                     )(z_b, k_b, w_b)
 
-                if use_masks:
+                if use_masks and mask_sim:
                     return jax.vmap(per_graph)(x0, adj, edges, nmask, emask,
-                                               z_c, k_t, w_t)
+                                               sim, z_c, k_t, w_t)
+                if use_masks:
+                    return jax.vmap(
+                        lambda xg, ag, eg, nmg, emg, z_b, k_b, w_b: per_graph(
+                            xg, ag, eg, nmg, emg, None, z_b, k_b, w_b)
+                    )(x0, adj, edges, nmask, emask, z_c, k_t, w_t)
+                if mask_sim:
+                    return jax.vmap(
+                        lambda xg, ag, eg, simg, z_b, k_b, w_b: per_graph(
+                            xg, ag, eg, None, None, simg, z_b, k_b, w_b)
+                    )(x0, adj, edges, sim, z_c, k_t, w_t)
                 return jax.vmap(
                     lambda xg, ag, eg, z_b, k_b, w_b: per_graph(
-                        xg, ag, eg, None, None, z_b, k_b, w_b)
+                        xg, ag, eg, None, None, None, z_b, k_b, w_b)
                 )(x0, adj, edges, z_c, k_t, w_t)
 
             total = jnp.float32(0.0)
@@ -233,8 +261,15 @@ class RolloutEngine:
                      jnp.ones(self._x0.shape[:2], dtype=bool))
             emask = (self._emask if self._use_masks else
                      jnp.ones(self._edges.shape[:2], dtype=bool))
+            dvf = self._dev_feats
+            if dvf is not None:
+                # Operand trees carry a leading (G,) axis on every leaf
+                # (the sharded mirror shards that axis over its "graphs"
+                # mesh dim), so the shared fleet table is broadcast per
+                # graph rather than passed rank-2.
+                dvf = jnp.broadcast_to(dvf, (self._x0.shape[0],) + dvf.shape)
             ops = GraphOperands(self._x0, self._adj, self._edges,
-                                nmask, emask, sim=self._sim)
+                                nmask, emask, sim=self._sim, dev_feats=dvf)
             self._pop_state = (eng, ops)
         return self._pop_state
 
@@ -287,9 +322,17 @@ class RolloutEngine:
             adj = jnp.asarray(np.asarray(adj)[np.ix_(nm, nm)])
             edges = jnp.asarray(np.asarray(edges)[em])
 
+        # head="device" threads the fleet table here too so place() can
+        # greedy-decode through the scalar path; capacity masks don't —
+        # the scalar loop predates SimArrays and stays the unmasked
+        # reference (hsdag forbids engine="scalar" *training* for the
+        # device head).
+        dvf = self._dev_feats
+
         def _rollout_step(params, z, rng, first: bool, greedy: bool = False):
             out = step(params, z, x0, adj, edges, rng,
-                       first=first, train=not greedy, greedy=greedy)
+                       first=first, train=not greedy, greedy=greedy,
+                       dev_feats=dvf)
             return (out.policy.fine_placement, out.policy.coarse_placement,
                     out.parse.num_groups, out.z_next)
 
@@ -302,7 +345,7 @@ class RolloutEngine:
             for i in range(num_steps):
                 first = start_first and i == 0
                 out = step(params, z, x0, adj, edges, rngs[i],
-                           first=first, train=True)
+                           first=first, train=True, dev_feats=dvf)
                 loss = loss - out.policy.logp * weights[i]
                 loss = loss - cfg.entropy_coef * out.policy.entropy
                 z = out.z_next
@@ -347,6 +390,9 @@ class GraphOperands(NamedTuple):
     node_mask: jnp.ndarray   # (G, V) bool
     edge_mask: jnp.ndarray   # (G, E) bool
     sim: object = None       # SimArrays pytree with (G, ...) axes, or None
+    dev_feats: object = None  # (G, D, F_dev) fleet table (head="device"),
+    #                           broadcast per graph so the leading axis
+    #                           matches the sharded "graphs" contract
 
     def shape_key(self) -> Tuple:
         """Shape/dtype signature — what the jit cache keys on."""
@@ -408,10 +454,39 @@ def build_window_fns(step, cfg, *, fused: bool, backend, population=None):
     exactly the PR-7 build.
     """
 
-    def _chain_sample(params, xg, ag, eg, nmg, emg, simg, z, key,
+    def _graph_vmap(per_graph, ops, rest, *, with_sim, with_dev):
+        """vmap ``per_graph(xg, ag, eg, nmg, emg, simg, dvg, *rest)`` over
+        the graph axis, injecting ``None`` for the sim tree / fleet table
+        when the operands don't carry them — absent ones never enter the
+        trace, so dense/deferred builds keep their historical jaxprs."""
+        base = (ops.x0, ops.adj, ops.edges, ops.node_mask, ops.edge_mask)
+        if with_sim and with_dev:
+            return jax.vmap(per_graph)(*base, ops.sim, ops.dev_feats, *rest)
+        if with_sim:
+            return jax.vmap(
+                lambda xg, ag, eg, nmg, emg, simg, *r: per_graph(
+                    xg, ag, eg, nmg, emg, simg, None, *r)
+            )(*base, ops.sim, *rest)
+        if with_dev:
+            return jax.vmap(
+                lambda xg, ag, eg, nmg, emg, dvg, *r: per_graph(
+                    xg, ag, eg, nmg, emg, None, dvg, *r)
+            )(*base, ops.dev_feats, *rest)
+        return jax.vmap(
+            lambda xg, ag, eg, nmg, emg, *r: per_graph(
+                xg, ag, eg, nmg, emg, None, None, *r)
+        )(*base, *rest)
+
+    def _chain_sample(params, xg, ag, eg, nmg, emg, simg, dvg, z, key,
                       first: bool):
+        # Capacity masking (fit_ok) rides only with the device head AND a
+        # sim operand: dense fused runs must not see a mask (the pin), and
+        # without sim there is nothing to mask against.
+        amask = simg.fit_ok if (dvg is not None and simg is not None) \
+            else None
         out = step(params, z, xg, ag, eg, key, first=first, train=True,
-                   node_mask=nmg, edge_mask=emg)
+                   node_mask=nmg, edge_mask=emg, dev_feats=dvg,
+                   action_mask=amask)
         fine = out.policy.fine_placement
         if simg is not None:
             reward, latency = backend.score(simg, fine)
@@ -420,20 +495,13 @@ def build_window_fns(step, cfg, *, fused: bool, backend, population=None):
         return (fine, out.parse.num_groups, out.z_next, reward, latency)
 
     def _vsample(ops, params, z, keys, first: bool):
-        def per_graph(xg, ag, eg, nmg, emg, simg, z_b, k_b):
+        def per_graph(xg, ag, eg, nmg, emg, simg, dvg, z_b, k_b):
             return jax.vmap(lambda z1, k1: _chain_sample(
-                params, xg, ag, eg, nmg, emg, simg, z1, k1, first)
+                params, xg, ag, eg, nmg, emg, simg, dvg, z1, k1, first)
             )(z_b, k_b)
 
-        if fused:
-            return jax.vmap(per_graph)(ops.x0, ops.adj, ops.edges,
-                                       ops.node_mask, ops.edge_mask,
-                                       ops.sim, z, keys)
-        return jax.vmap(
-            lambda xg, ag, eg, nmg, emg, z_b, k_b: per_graph(
-                xg, ag, eg, nmg, emg, None, z_b, k_b)
-        )(ops.x0, ops.adj, ops.edges, ops.node_mask, ops.edge_mask,
-          z, keys)
+        return _graph_vmap(per_graph, ops, (z, keys), with_sim=fused,
+                           with_dev=ops.dev_feats is not None)
 
     def _rollout_window(ops, params, z, rngs, num_steps: int,
                         start_first: bool):
@@ -460,24 +528,32 @@ def build_window_fns(step, cfg, *, fused: bool, backend, population=None):
 
     def _window_loss(ops, params, z0, keys, weights, num_steps: int,
                      start_first: bool, denom=None):
-        def _chain_loss(params_, xg, ag, eg, nmg, emg, z1, k1, w1,
+        def _chain_loss(params_, xg, ag, eg, nmg, emg, simg, dvg, z1, k1, w1,
                         first: bool):
+            # The replay must mask exactly as sampling did (Eq.-14
+            # exactness), so the sim tree threads in under the same
+            # device-head condition.
+            amask = simg.fit_ok if (dvg is not None and simg is not None) \
+                else None
             out = step(params_, z1, xg, ag, eg, k1, first=first,
-                       train=True, node_mask=nmg, edge_mask=emg)
+                       train=True, node_mask=nmg, edge_mask=emg,
+                       dev_feats=dvg, action_mask=amask)
             loss = -out.policy.logp * w1
             loss = loss - cfg.entropy_coef * out.policy.entropy
             return out.z_next, loss
 
         def _vloss(z_c, k_t, w_t, first: bool):
-            def per_graph(xg, ag, eg, nmg, emg, z_b, k_b, w_b):
+            def per_graph(xg, ag, eg, nmg, emg, simg, dvg, z_b, k_b, w_b):
                 return jax.vmap(
                     lambda z1, k1, w1: _chain_loss(
-                        params, xg, ag, eg, nmg, emg, z1, k1, w1, first)
+                        params, xg, ag, eg, nmg, emg, simg, dvg, z1, k1,
+                        w1, first)
                 )(z_b, k_b, w_b)
 
-            return jax.vmap(per_graph)(ops.x0, ops.adj, ops.edges,
-                                       ops.node_mask, ops.edge_mask,
-                                       z_c, k_t, w_t)
+            return _graph_vmap(
+                per_graph, ops, (z_c, k_t, w_t),
+                with_sim=fused and ops.dev_feats is not None,
+                with_dev=ops.dev_feats is not None)
 
         total = jnp.float32(0.0)
         z = z0
@@ -498,14 +574,19 @@ def build_window_fns(step, cfg, *, fused: bool, backend, population=None):
 
     def _greedy(ops, params, keys):
         """One greedy decode per graph slot → (G, V) placements."""
-        def per_graph(xg, ag, eg, nmg, emg, k):
+        def per_graph(xg, ag, eg, nmg, emg, simg, dvg, k):
+            amask = simg.fit_ok if (dvg is not None and simg is not None) \
+                else None
             out = step(params, xg, xg, ag, eg, k,
                        first=True, train=False, greedy=True,
-                       node_mask=nmg, edge_mask=emg)
+                       node_mask=nmg, edge_mask=emg, dev_feats=dvg,
+                       action_mask=amask)
             return out.policy.fine_placement, out.parse.num_groups
 
-        return jax.vmap(per_graph)(ops.x0, ops.adj, ops.edges,
-                                   ops.node_mask, ops.edge_mask, keys)
+        return _graph_vmap(
+            per_graph, ops, (keys,),
+            with_sim=ops.dev_feats is not None and ops.sim is not None,
+            with_dev=ops.dev_feats is not None)
 
     if population is None:
         return _rollout_window, _window_loss, _greedy
@@ -517,10 +598,13 @@ def build_window_fns(step, cfg, *, fused: bool, backend, population=None):
     # path never touches core/train at all.
     from ..train import population as popmod
 
-    def _chain_sample_pop(params, xg, ag, eg, nmg, emg, simg, z, key, temp,
-                          first: bool):
+    def _chain_sample_pop(params, xg, ag, eg, nmg, emg, simg, dvg, z, key,
+                          temp, first: bool):
+        amask = simg.fit_ok if (dvg is not None and simg is not None) \
+            else None
         out = step(params, z, xg, ag, eg, key, first=first, train=True,
-                   node_mask=nmg, edge_mask=emg, temperature=temp)
+                   node_mask=nmg, edge_mask=emg, temperature=temp,
+                   dev_feats=dvg, action_mask=amask)
         fine = out.policy.fine_placement
         if simg is not None:
             reward, latency = backend.score(simg, fine)
@@ -529,20 +613,13 @@ def build_window_fns(step, cfg, *, fused: bool, backend, population=None):
         return (fine, out.parse.num_groups, out.z_next, reward, latency)
 
     def _vsample_pop(ops, params, z, keys, temps, first: bool):
-        def per_graph(xg, ag, eg, nmg, emg, simg, z_b, k_b, t_b):
+        def per_graph(xg, ag, eg, nmg, emg, simg, dvg, z_b, k_b, t_b):
             return jax.vmap(lambda z1, k1, t1: _chain_sample_pop(
-                params, xg, ag, eg, nmg, emg, simg, z1, k1, t1, first)
+                params, xg, ag, eg, nmg, emg, simg, dvg, z1, k1, t1, first)
             )(z_b, k_b, t_b)
 
-        if fused:
-            return jax.vmap(per_graph)(ops.x0, ops.adj, ops.edges,
-                                       ops.node_mask, ops.edge_mask,
-                                       ops.sim, z, keys, temps)
-        return jax.vmap(
-            lambda xg, ag, eg, nmg, emg, z_b, k_b, t_b: per_graph(
-                xg, ag, eg, nmg, emg, None, z_b, k_b, t_b)
-        )(ops.x0, ops.adj, ops.edges, ops.node_mask, ops.edge_mask,
-          z, keys, temps)
+        return _graph_vmap(per_graph, ops, (z, keys, temps), with_sim=fused,
+                           with_dev=ops.dev_feats is not None)
 
     def _rollout_window_pop(ops, params, z, rngs, pop, num_steps: int,
                             start_first: bool):
@@ -580,26 +657,30 @@ def build_window_fns(step, cfg, *, fused: bool, backend, population=None):
         sampling pass used — the tempered logp is the exact log-density of
         what was sampled, so the gradient stays unbiased."""
 
-        def _chain_loss(params_, xg, ag, eg, nmg, emg, z1, k1, w1, t1,
-                        first: bool):
+        def _chain_loss(params_, xg, ag, eg, nmg, emg, simg, dvg, z1, k1,
+                        w1, t1, first: bool):
+            amask = simg.fit_ok if (dvg is not None and simg is not None) \
+                else None
             out = step(params_, z1, xg, ag, eg, k1, first=first,
                        train=True, node_mask=nmg, edge_mask=emg,
-                       temperature=t1)
+                       temperature=t1, dev_feats=dvg, action_mask=amask)
             loss = -out.policy.logp * w1
             loss = loss - cfg.entropy_coef * out.policy.entropy
             return out.z_next, loss
 
         def _vloss(z_c, k_t, w_t, first: bool):
-            def per_graph(xg, ag, eg, nmg, emg, z_b, k_b, w_b, t_b):
+            def per_graph(xg, ag, eg, nmg, emg, simg, dvg, z_b, k_b, w_b,
+                          t_b):
                 return jax.vmap(
                     lambda z1, k1, w1, t1: _chain_loss(
-                        params, xg, ag, eg, nmg, emg, z1, k1, w1, t1,
-                        first)
+                        params, xg, ag, eg, nmg, emg, simg, dvg, z1, k1,
+                        w1, t1, first)
                 )(z_b, k_b, w_b, t_b)
 
-            return jax.vmap(per_graph)(ops.x0, ops.adj, ops.edges,
-                                       ops.node_mask, ops.edge_mask,
-                                       z_c, k_t, w_t, temps)
+            return _graph_vmap(
+                per_graph, ops, (z_c, k_t, w_t, temps),
+                with_sim=fused and ops.dev_feats is not None,
+                with_dev=ops.dev_feats is not None)
 
         total = jnp.float32(0.0)
         z = z0
@@ -622,14 +703,19 @@ def build_window_fns(step, cfg, *, fused: bool, backend, population=None):
         """One greedy decode per graph slot → the post-decode recurrent
         state (G, V, d) — what a greedy restart re-seeds culled chains
         from."""
-        def per_graph(xg, ag, eg, nmg, emg, k):
+        def per_graph(xg, ag, eg, nmg, emg, simg, dvg, k):
+            amask = simg.fit_ok if (dvg is not None and simg is not None) \
+                else None
             out = step(params, xg, xg, ag, eg, k,
                        first=True, train=False, greedy=True,
-                       node_mask=nmg, edge_mask=emg)
+                       node_mask=nmg, edge_mask=emg, dev_feats=dvg,
+                       action_mask=amask)
             return out.z_next
 
-        return jax.vmap(per_graph)(ops.x0, ops.adj, ops.edges,
-                                   ops.node_mask, ops.edge_mask, keys)
+        return _graph_vmap(
+            per_graph, ops, (keys,),
+            with_sim=ops.dev_feats is not None and ops.sim is not None,
+            with_dev=ops.dev_feats is not None)
 
     def _pbt(ops, params, pop, z, use_greedy: bool):
         """One full-view PBT transition (culling + exchange + restarts).

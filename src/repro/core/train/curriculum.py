@@ -72,13 +72,25 @@ class BucketShape(NamedTuple):
     e_max: int       # edge slots (encoder side)
 
 
-def _operands(ga, sim_tree) -> GraphOperands:
-    """One padded GraphArraysBatch (+ optional sim pytree) → jit operands."""
+def _operands(ga, sim_tree, dev_feats=None) -> GraphOperands:
+    """One padded GraphArraysBatch (+ optional sim pytree) → jit operands.
+
+    ``dev_feats`` is the platform's (D, F_dev) fleet table (head="device"
+    runs); it is broadcast to a leading graph axis here because every
+    operand leaf carries one (the sharded engine tiles that axis over its
+    "graphs" mesh dim).
+    """
+    dvf = None
+    if dev_feats is not None:
+        dev_feats = jnp.asarray(dev_feats)
+        dvf = jnp.broadcast_to(dev_feats,
+                               (ga.x.shape[0],) + dev_feats.shape)
     return GraphOperands(
         x0=jnp.asarray(ga.x), adj=jnp.asarray(ga.adj),
         edges=jnp.asarray(ga.edges),
         node_mask=jnp.asarray(ga.node_mask),
-        edge_mask=jnp.asarray(ga.edge_mask), sim=sim_tree)
+        edge_mask=jnp.asarray(ga.edge_mask), sim=sim_tree,
+        dev_feats=dvf)
 
 
 class CorpusTrainResult(NamedTuple):
@@ -214,6 +226,9 @@ class CurriculumTrainer(MultiGraphTrainer):
             raise ValueError(
                 f"cfg.num_devices={cfg.num_devices} exceeds the platform's "
                 f"{platform.num_devices} devices")
+        # head="device": derive the fleet feature table once; episode
+        # batches and the final greedy decode thread it as an operand.
+        self.bind_platform(platform)
         backend = get_backend(cfg.engine if cfg.engine not in _LOOP_ENGINES
                               else "scan")
         N = len(meta)
@@ -503,7 +518,7 @@ class CurriculumTrainer(MultiGraphTrainer):
                                          p_max=shape.p_max)
         pipeline = RewardPipeline(backend=backend, multi_prep=prep,
                                   num_nodes=[g.num_nodes for g in sub])
-        return _operands(ga, sim_tree), pipeline
+        return _operands(ga, sim_tree, dev_feats=self._dev_feats), pipeline
 
     def _greedy_corpus(self, graphs, get_arrays, buckets, shapes, engine,
                        platform, g_sub: int):
@@ -526,8 +541,9 @@ class CurriculumTrainer(MultiGraphTrainer):
                 ga = batch_graph_arrays([get_arrays(i) for i in padded],
                                         v_max=shape.v_max,
                                         e_max=shape.e_max)
-                fines, _ = engine.greedy_decode(_operands(ga, None),
-                                                self.params, keys)
+                fines, _ = engine.greedy_decode(
+                    _operands(ga, None, dev_feats=self._dev_feats),
+                    self.params, keys)
                 fines = np.asarray(fines)
                 for k, gid in enumerate(chunk):
                     g = graphs[gid]

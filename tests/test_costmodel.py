@@ -115,3 +115,51 @@ def test_makespan_at_least_critical_path_random(n, seed):
     placement = rng.integers(0, 2, n)
     assert simulate(g, placement, plat).latency >= \
         critical_path(g, plat) - 1e-12
+
+
+# ------------------------------------------- Platform construction validation
+
+def _two_devs():
+    dev = DeviceSpec("d", "gpu", 1e12, 1e11, 1e-6)
+    return (dev, dev)
+
+
+def test_platform_rejects_wrong_link_shape():
+    bw, lat = _uniform_links(3, 1e9, 1e-6)
+    with pytest.raises(ValueError, match=r"link_bw must be \(2, 2\)"):
+        Platform(_two_devs(), bw, lat)
+
+
+def test_platform_rejects_finite_bw_diagonal():
+    bw, lat = _uniform_links(2, 1e9, 1e-6)
+    bw[1, 1] = 5e9
+    with pytest.raises(ValueError, match=r"link_bw\[1, 1\]"):
+        Platform(_two_devs(), bw, lat)
+
+
+def test_platform_rejects_nonzero_latency_diagonal():
+    bw, lat = _uniform_links(2, 1e9, 1e-6)
+    lat[0, 0] = 1e-9
+    with pytest.raises(ValueError, match=r"link_latency\[0, 0\]"):
+        Platform(_two_devs(), bw, lat)
+
+
+def test_platform_names_offending_offdiagonal_entry():
+    bw, lat = _uniform_links(2, 1e9, 1e-6)
+    bw[0, 1] = 0.0                      # zero bandwidth: divide-by-zero trap
+    with pytest.raises(ValueError, match=r"link_bw\[0, 1\].*positive"):
+        Platform(_two_devs(), bw, lat)
+    bw, lat = _uniform_links(2, 1e9, 1e-6)
+    lat[1, 0] = -2e-6
+    with pytest.raises(ValueError, match=r"link_latency\[1, 0\]"):
+        Platform(_two_devs(), bw, lat)
+    bw, lat = _uniform_links(2, 1e9, 1e-6)
+    bw[1, 0] = np.inf
+    with pytest.raises(ValueError, match=r"link_bw\[1, 0\].*finite"):
+        Platform(_two_devs(), bw, lat)
+
+
+def test_platform_rejects_bad_coords_shape():
+    bw, lat = _uniform_links(2, 1e9, 1e-6)
+    with pytest.raises(ValueError, match=r"coords must be \(2, C\)"):
+        Platform(_two_devs(), bw, lat, coords=np.zeros((3, 2)))

@@ -143,3 +143,88 @@ def test_colocated_placement_latency_close_to_expanded(n, seed):
     # same flops, same transfers across boundaries; fine pays more dispatch
     assert lat_fine >= lat_coarse * 0.5
     assert lat_fine <= lat_coarse * 3 + n * 40e-6
+
+
+# ------------------------------------------------- non-uniform link matrices
+
+def _random_nonuniform_platform(rng, d, *, queues=1):
+    """Random tiered-looking fleet: every ordered pair gets its own link."""
+    from repro.core.costmodel import DeviceSpec, Platform
+    bw = rng.uniform(5e8, 5e10, (d, d))
+    bw[np.eye(d, dtype=bool)] = np.inf
+    lat = rng.uniform(0.0, 2e-5, (d, d))
+    np.fill_diagonal(lat, 0.0)
+    dev = DeviceSpec("d", "gpu", 1e12, 1e11, 1e-6, parallel_queues=queues)
+    return Platform((dev,) * d, bw, lat)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(4, 20), st.integers(2, 4), st.integers(0, 500))
+def test_simulator_device_relabeling_equivariance_nonuniform(n, d, seed):
+    """Relabeling devices (permuting both link matrices and the placement)
+    never changes the makespan and permutes busy times — even when every
+    ordered pair has its own bandwidth/latency."""
+    from repro.core.costmodel import Platform
+    rng = np.random.default_rng(seed)
+    g = random_dag(rng, n)
+    plat = _random_nonuniform_platform(rng, d)
+    p = rng.integers(0, d, n)
+    perm = rng.permutation(d)            # new index -> old index
+    inv = np.empty(d, int)
+    inv[perm] = np.arange(d)
+    plat2 = Platform(tuple(plat.devices[k] for k in perm),
+                     plat.link_bw[np.ix_(perm, perm)],
+                     plat.link_latency[np.ix_(perm, perm)])
+    r1 = simulate(g, p, plat)
+    r2 = simulate(g, inv[p], plat2)
+    assert np.isclose(r1.latency, r2.latency)
+    np.testing.assert_allclose(r2.per_device_busy, r1.per_device_busy[perm])
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(4, 20), st.integers(2, 4), st.integers(0, 500))
+def test_simulate_jax_matches_reference_nonuniform_links(n, d, seed):
+    """The fused JAX simulator agrees with the Python reference on random
+    non-uniform link matrices (the topology-builder regime)."""
+    rng = np.random.default_rng(seed)
+    g = random_dag(rng, n)
+    plat = _random_nonuniform_platform(rng, d, queues=2)
+    p = rng.integers(0, d, n)
+    ref = simulate(g, p, plat)
+    jx = simulate_jax(sim_arrays(g, plat), p.astype(np.int32))
+    np.testing.assert_allclose(float(jx.latency), ref.latency, rtol=1e-5)
+    np.testing.assert_allclose(float(jx.reward), ref.reward, rtol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(4, 18), st.integers(2, 4), st.integers(0, 500))
+def test_makespan_monotone_in_links_contention_free(n, d, seed):
+    """Uniformly better links (elementwise bw up, latency down) never hurt
+    the makespan when ample queues keep the schedule contention-free.  (The
+    greedy list scheduler is NOT monotone under queue contention — Graham's
+    anomalies — so ample queues are part of the property.)"""
+    from repro.core.costmodel import Platform
+    rng = np.random.default_rng(seed)
+    g = random_dag(rng, n)
+    plat = _random_nonuniform_platform(rng, d, queues=32)
+    bw2 = plat.link_bw * rng.uniform(1.0, 4.0, (d, d))
+    bw2[np.eye(d, dtype=bool)] = np.inf
+    lat2 = plat.link_latency * rng.uniform(0.0, 1.0, (d, d))
+    np.fill_diagonal(lat2, 0.0)
+    plat2 = Platform(plat.devices, bw2, lat2)
+    p = rng.integers(0, d, n)
+    assert simulate(g, p, plat2).latency <= \
+        simulate(g, p, plat).latency + 1e-12
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(4, 20), st.integers(2, 4), st.integers(0, 500))
+def test_makespan_at_least_critical_path_nonuniform(n, d, seed):
+    """The free-transfer best-device critical path stays a lower bound on
+    the makespan for arbitrary non-uniform link matrices."""
+    from repro.core import critical_path
+    rng = np.random.default_rng(seed)
+    g = random_dag(rng, n)
+    plat = _random_nonuniform_platform(rng, d, queues=2)
+    p = rng.integers(0, d, n)
+    assert simulate(g, p, plat).latency >= critical_path(g, plat) - 1e-12
